@@ -1,0 +1,47 @@
+//! Quickstart: approximate an expensive similarity matrix with O(n·s)
+//! similarity evaluations and serve entries from the factored form.
+//!
+//! Run: cargo run --release --example quickstart
+
+use simmat::approx::{rel_fro_error, sms_nystrom, SmsConfig};
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{CountingOracle, SimOracle};
+use simmat::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    // 1. A similarity oracle: any type implementing `SimOracle`. Here a
+    //    synthetic near-PSD text-similarity stand-in with n = 400 points;
+    //    in production this is a PJRT-backed WMD / cross-encoder oracle.
+    let n = 400;
+    let oracle = NearPsdOracle::new(n, 30, 0.25, &mut rng);
+
+    // 2. Wrap it in a counter so we can prove sublinearity.
+    let counted = CountingOracle::new(&oracle);
+
+    // 3. SMS-Nyström with s1 = 60 landmarks (Algorithm 1 of the paper).
+    let result = sms_nystrom(&counted, 60, SmsConfig::default(), &mut rng).unwrap();
+    let f = result.factored;
+
+    println!("n = {n}, rank = {}", f.rank());
+    println!(
+        "similarity evaluations: {} (exact matrix would need {})",
+        counted.calls(),
+        n * n
+    );
+    println!(
+        "applied eigenvalue shift e = {:.4} (lambda_min estimate {:.4})",
+        result.shift, result.lambda_min_s2
+    );
+
+    // 4. Serve approximate similarities — no oracle calls from here on.
+    println!("K~(3, 7)   = {:+.4}  (exact {:+.4})", f.entry(3, 7), oracle.eval(3, 7));
+    println!("K~(3, 300) = {:+.4}  (exact {:+.4})", f.entry(3, 300), oracle.eval(3, 300));
+    let top = f.top_k(3, 5);
+    println!("top-5 neighbours of 3: {top:?}");
+
+    // 5. Quality: relative Frobenius error against the exact matrix.
+    let k = oracle.materialize(); // evaluation only — Ω(n²)
+    println!("rel Frobenius error = {:.4}", rel_fro_error(&k, &f));
+}

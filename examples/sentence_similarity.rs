@@ -1,0 +1,60 @@
+//! Sentence-similarity (STS-B analogue): approximate a cross-encoder
+//! similarity matrix and compare downstream Pearson/Spearman correlation
+//! of approximate vs exact scores against gold labels — the Table 2 flow.
+//!
+//! Run: cargo run --release --example sentence_similarity [-- --scale 0.4]
+
+use simmat::approx::{self, SmsConfig};
+use simmat::data::GluePreset;
+use simmat::runtime::shared_runtime_subset;
+use simmat::sim::DenseOracle;
+use simmat::tasks;
+use simmat::util::cli::Args;
+use simmat::util::rng::Rng;
+use simmat::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let scale = args.get_f64("scale", 0.4);
+    let mut rng = Rng::new(2);
+
+    let rt = shared_runtime_subset(&["cross_encoder"])?;
+    println!("building STS-B analogue (scale {scale}) — cross-encoder matrix via PJRT...");
+    let w = workloads::glue_workload(rt, GluePreset::StsB, scale, 12)?;
+    let n = w.k_sym.rows;
+    println!(
+        "{n} sentences, {} labeled pairs; matrix symmetrized (Sec. 4.2)",
+        w.task.pairs.len()
+    );
+
+    // Exact scores (the SYM-BERT reference row).
+    let exact: Vec<f64> = w.task.pairs.iter().map(|&(i, j)| w.k_sym.get(i, j)).collect();
+    println!(
+        "exact SYM scores:   Pearson {:.2}  Spearman {:.2}",
+        100.0 * tasks::pearson(&exact, &w.task.gold),
+        100.0 * tasks::spearman(&exact, &w.task.gold)
+    );
+
+    // Approximations at increasing rank.
+    let oracle = DenseOracle::new(w.k_sym.clone());
+    for s in [n / 12, n / 8, n / 4] {
+        let r = approx::sms_nystrom(&oracle, s.max(4), SmsConfig::default(), &mut rng)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let pred: Vec<f64> = w.task.pairs.iter().map(|&(i, j)| r.factored.entry(i, j)).collect();
+        println!(
+            "SMS-Nyström @{s:>4}: Pearson {:.2}  Spearman {:.2}  (n·s/n² = {:.1}% of exact work)",
+            100.0 * tasks::pearson(&pred, &w.task.gold),
+            100.0 * tasks::spearman(&pred, &w.task.gold),
+            100.0 * s as f64 / n as f64,
+        );
+        let f = approx::sicur(&oracle, (s / 2).max(2), 2.0, &mut rng)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let pred: Vec<f64> = w.task.pairs.iter().map(|&(i, j)| f.entry(i, j)).collect();
+        println!(
+            "SiCUR       @{s:>4}: Pearson {:.2}  Spearman {:.2}",
+            100.0 * tasks::pearson(&pred, &w.task.gold),
+            100.0 * tasks::spearman(&pred, &w.task.gold),
+        );
+    }
+    Ok(())
+}

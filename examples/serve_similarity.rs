@@ -1,0 +1,81 @@
+//! Similarity serving demo: the coordinator as a service. Builds a
+//! sublinear approximation over the PJRT coref oracle, then serves
+//! Entry/Row/TopK/Embed queries from the factored store while a threaded
+//! dynamic batcher handles residual exact-similarity traffic.
+//!
+//! Run: cargo run --release --example serve_similarity
+
+use std::time::{Duration, Instant};
+
+use simmat::coordinator::{BatchService, Method, Query, Response, SimilarityService};
+use simmat::data::CorefSpec;
+use simmat::runtime::{shared_runtime_subset, CorefPjrtOracle};
+use simmat::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(3);
+    let rt = shared_runtime_subset(&["coref_mlp"])?;
+    let corpus = simmat::data::coref::generate(CorefSpec::default(), &mut rng);
+    let n = corpus.mentions.len();
+    println!("corpus: {n} mentions, {} entities", corpus.entities);
+
+    // --- build phase: sublinear, through the batching pipeline ---
+    let oracle = CorefPjrtOracle::new(rt.clone(), corpus.mentions.clone())?;
+    let svc = SimilarityService::build(&oracle, Method::SiCur, n / 6, 64, &mut rng)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "built {} approximation: {} oracle calls ({:.1}% saved vs exact), {:.2}s",
+        svc.stats.method.name(),
+        svc.stats.oracle_calls,
+        100.0 * svc.stats.savings(),
+        svc.stats.build_seconds
+    );
+    println!("build batcher: {}", svc.metrics.summary());
+
+    // --- serve phase: zero oracle traffic ---
+    let t0 = Instant::now();
+    let mut served = 0u64;
+    for i in (0..n).step_by(7) {
+        match svc.query(&Query::TopK(i, 5))? {
+            Response::Ranked(top) => {
+                served += 1;
+                if i == 0 {
+                    println!("top-5 of mention 0: {top:?}");
+                }
+            }
+            _ => unreachable!(),
+        }
+        let _ = svc.query(&Query::Entry(i, (i * 3) % n))?;
+        served += 1;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {served} queries in {:.1}ms ({:.0} queries/s) with zero similarity evaluations",
+        dt.as_secs_f64() * 1e3,
+        served as f64 / dt.as_secs_f64()
+    );
+
+    // --- residual exact traffic through the threaded dynamic batcher ---
+    let service = BatchService::spawn(
+        CorefPjrtOracle::new(rt, corpus.mentions.clone())?,
+        64,
+        Duration::from_millis(2),
+    );
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let client = service.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(50 + t);
+            for _ in 0..64 {
+                let (i, j) = (rng.below(100), rng.below(100));
+                let v = client.eval(i, j);
+                assert!(v.is_finite());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    println!("exact-path batcher: {}", service.metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+HLO text (not ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 (the version behind the published ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Also emits:
+  * ``manifest.json`` — shapes/dtypes per artifact (the Rust runtime's
+    source of truth for padding and batching);
+  * ``goldens.npz``-style ``goldens.json`` — deterministic input/output
+    vectors per artifact so ``rust/tests/runtime_goldens.rs`` can verify
+    PJRT numerics end-to-end without Python at test time.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import zlib
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import SHAPES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: baked model weights must survive the text
+    # round-trip (the default elides them as `constant({...})`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _golden_inputs(args, seed):
+    """Deterministic, well-conditioned inputs for golden-output export."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for a in args:
+        arr = rng.standard_normal(a.shape).astype(np.float32)
+        if len(a.shape) == 2 and a.shape[-1] in (SHAPES.wmd.max_len,):
+            # Marginal-like inputs (wx/wy): simplex weights.
+            arr = np.abs(arr) + 0.1
+            arr = arr / arr.sum(-1, keepdims=True)
+        if a.shape == ():
+            arr = np.float32(0.75)  # gamma
+        out.append(arr)
+    return out
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="single artifact name")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"shapes": dataclasses.asdict(SHAPES), "artifacts": {}}
+    goldens = {}
+    for name, builder in model.ARTIFACTS.items():
+        if args.only and name != args.only:
+            continue
+        fn, example_args = builder()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+
+        ins = _golden_inputs(example_args, seed=zlib.crc32(name.encode()))
+        (outs,) = jax.jit(fn)(*ins)
+        outs = np.asarray(outs)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": "f32"} for a in example_args
+            ],
+            "output": {"shape": list(outs.shape), "dtype": "f32"},
+        }
+        # Goldens: flattened, truncated to keep the file small but decisive.
+        goldens[name] = {
+            "inputs": [a.ravel()[:4096].tolist() for a in ins],
+            "output": outs.ravel()[:4096].tolist(),
+            "output_len": int(outs.size),
+        }
+        print(f"wrote {path} ({len(text)} chars), output shape {outs.shape}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f)
+    print(f"manifest + goldens -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: batched entropic optimal transport (Sinkhorn).
+
+This is the compute hot-spot of the WMD similarity oracle (Kusner et al.
+2015 via Cuturi 2013): for a batch of document pairs we solve B independent
+L x L entropic OT problems and return the transport cost per pair.
+
+TPU mapping (see DESIGN.md Hardware-Adaptation):
+  * the grid runs over the batch dimension; each program instance keeps a
+    (B_blk, L, L) Gibbs kernel tile resident in VMEM for the whole scaling
+    loop instead of re-streaming it from HBM every iteration (the published
+    C-Mex EMD solver re-walks memory per call);
+  * the inner updates are batched matvecs (MXU work at L padded to 8/128
+    multiples) plus elementwise VPU ops;
+  * interpret=True everywhere — real-TPU lowering emits a Mosaic
+    custom-call the CPU PJRT plugin cannot execute.
+
+Padding convention: documents shorter than L carry zero weight in a/b.
+Zero-weight rows/columns receive zero scaling (u_i = a_i / (Kv)_i = 0) and
+thus contribute no mass and no cost — no masking tensors needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sinkhorn_body(iters: int, eps: float, cost_ref, a_ref, b_ref, out_ref):
+    """One grid step: solve a (B_blk, L, L) block of OT problems."""
+    cost = cost_ref[...]  # (Bb, L, L) f32
+    a = a_ref[...]  # (Bb, L)
+    b = b_ref[...]  # (Bb, L)
+
+    # Gibbs kernel stays in VMEM across all iterations.
+    gibbs = jnp.exp(-cost / eps)  # (Bb, L, L)
+
+    def step(_, uv):
+        u, v = uv
+        # Batched matvecs: MXU-friendly (L x L) @ (L,) per pair.
+        kv = jnp.einsum("bij,bj->bi", gibbs, v)
+        u = a / jnp.maximum(kv, 1e-30)
+        ktu = jnp.einsum("bij,bi->bj", gibbs, u)
+        v = b / jnp.maximum(ktu, 1e-30)
+        return (u, v)
+
+    u0 = jnp.zeros_like(a)
+    v0 = jnp.ones_like(b)
+    u, v = jax.lax.fori_loop(0, iters, step, (u0 + a, v0))
+
+    # Transport cost <P, C> with P = diag(u) K diag(v).
+    out_ref[...] = jnp.einsum("bi,bij,bij,bj->b", u, gibbs, cost, v)
+
+
+def sinkhorn_cost(cost, a, b, *, iters: int, eps: float, block_batch: int):
+    """Batched Sinkhorn OT cost via a Pallas kernel.
+
+    Args:
+      cost: (B, L, L) f32 pairwise ground costs.
+      a:    (B, L) f32 source marginals (rows sum to 1; zero = padding).
+      b:    (B, L) f32 target marginals.
+      iters: scaling iterations.
+      eps:  entropic regularizer.
+      block_batch: pairs per Pallas program instance (VMEM tile).
+
+    Returns:
+      (B,) f32 transport costs.
+    """
+    bsz, length, _ = cost.shape
+    assert bsz % block_batch == 0, (bsz, block_batch)
+    grid = (bsz // block_batch,)
+    kernel = functools.partial(_sinkhorn_body, iters, eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_batch, length, length), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_batch, length), lambda i: (i, 0)),
+            pl.BlockSpec((block_batch, length), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_batch,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        interpret=True,
+    )(cost, a, b)

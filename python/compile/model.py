@@ -1,0 +1,132 @@
+"""L2: JAX computation graphs for every similarity oracle and serving op.
+
+Each public ``build_*`` function returns ``(fn, example_args)`` ready for
+``jax.jit(fn).lower(*example_args)`` in aot.py. The WMD oracle calls the
+L1 Pallas Sinkhorn kernel so both layers lower into one HLO module.
+
+Python here is build-time only: the Rust coordinator executes the lowered
+artifacts through PJRT and never imports this package at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.sinkhorn import sinkhorn_cost
+from .shapes import SHAPES
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# WMD similarity oracle (L1 Pallas kernel inside)
+# ---------------------------------------------------------------------------
+
+
+def build_wmd_sim():
+    """exp(-gamma * Sinkhorn-WMD) for a padded batch of document pairs.
+
+    Inputs:  x (B,L,d), wx (B,L), y (B,L,d), wy (B,L), gamma ().
+    Output:  sim (B,).
+    Zero-weight rows are padding; their mass is zero so they contribute
+    nothing (see kernels/sinkhorn.py).
+    """
+    s = SHAPES.wmd
+
+    def fn(x, wx, y, wy, gamma):
+        cost = ref.pairwise_cost_ref(x, y, wx, wy)
+        d = sinkhorn_cost(
+            cost,
+            wx,
+            wy,
+            iters=s.sinkhorn_iters,
+            eps=s.eps,
+            block_batch=s.block_batch,
+        )
+        return (jnp.exp(-gamma * d),)
+
+    args = (
+        _f32(s.batch, s.max_len, s.dim),
+        _f32(s.batch, s.max_len),
+        _f32(s.batch, s.max_len, s.dim),
+        _f32(s.batch, s.max_len),
+        _f32(),
+    )
+    return fn, args
+
+
+# ---------------------------------------------------------------------------
+# Cross-encoder oracle (weights baked as constants)
+# ---------------------------------------------------------------------------
+
+
+def build_cross_encoder():
+    """BERT-stand-in pair scorer. Inputs x1, x2: (B, T, d); output (B,)."""
+    s = SHAPES.cross_encoder
+    params = ref.init_cross_encoder_params(
+        s.seed, s.seq, s.dim, s.heads, s.layers, s.mlp_mult
+    )
+
+    def fn(x1, x2):
+        return (
+            ref.cross_encoder_ref(params, x1, x2, heads=s.heads, layers=s.layers),
+        )
+
+    args = (_f32(s.batch, s.seq, s.dim), _f32(s.batch, s.seq, s.dim))
+    return fn, args
+
+
+# ---------------------------------------------------------------------------
+# Coref MLP oracle (weights baked as constants)
+# ---------------------------------------------------------------------------
+
+
+def build_coref_mlp():
+    """Mention-pair scorer. Inputs m1, m2: (B, d); output (B,)."""
+    s = SHAPES.coref
+    params = ref.init_coref_params(s.seed, s.dim, s.hidden)
+
+    def fn(m1, m2):
+        return (ref.coref_mlp_ref(params, m1, m2),)
+
+    args = (_f32(s.batch, s.dim), _f32(s.batch, s.dim))
+    return fn, args
+
+
+# ---------------------------------------------------------------------------
+# Serving-path matmuls
+# ---------------------------------------------------------------------------
+
+
+def build_reconstruct_tile():
+    """K-tile = Z_rows @ Z_cols^T at the padded serving shape."""
+    s = SHAPES.reconstruct
+
+    def fn(z_rows, z_cols):
+        return (ref.reconstruct_tile_ref(z_rows, z_cols),)
+
+    args = (_f32(s.rows, s.rank), _f32(s.cols, s.rank))
+    return fn, args
+
+
+def build_embed_transform():
+    """Embedding block C @ W for CUR factor construction."""
+    s = SHAPES.embed_transform
+
+    def fn(c, w):
+        return (ref.embed_transform_ref(c, w),)
+
+    args = (_f32(s.rows, s.rank), _f32(s.rank, s.rank))
+    return fn, args
+
+
+#: name -> builder; aot.py iterates this to emit every artifact.
+ARTIFACTS = {
+    "wmd_sim": build_wmd_sim,
+    "cross_encoder": build_cross_encoder,
+    "coref_mlp": build_coref_mlp,
+    "reconstruct_tile": build_reconstruct_tile,
+    "embed_transform": build_embed_transform,
+}

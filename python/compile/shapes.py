@@ -1,0 +1,73 @@
+"""Central shape/config registry for the AOT artifacts.
+
+Every artifact is lowered at exactly one fixed shape (PJRT executables are
+shape-specialized); the Rust coordinator pads/batches to these shapes. The
+manifest written by aot.py mirrors this file so the Rust side never has to
+guess.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class WmdShapes:
+    """Batched exp(-gamma * WMD) similarity oracle."""
+
+    batch: int = 64  # pairs per PJRT execution (dynamic batcher pads to this)
+    max_len: int = 32  # padded document length L
+    dim: int = 64  # word-embedding dimension d
+    sinkhorn_iters: int = 30  # fixed-point iterations (matches ref oracle)
+    eps: float = 0.05  # entropic regularizer (cost is mean-normalized)
+    block_batch: int = 8  # Pallas block size over the batch dimension
+
+
+@dataclass(frozen=True)
+class CrossEncoderShapes:
+    """Batched cross-encoder sentence-pair scorer (BERT stand-in)."""
+
+    batch: int = 64
+    seq: int = 16  # tokens per sentence (pair is concatenated -> 2*seq)
+    dim: int = 64  # d_model
+    heads: int = 4
+    layers: int = 2
+    mlp_mult: int = 4
+    seed: int = 7  # weight init seed (baked into the artifact as constants)
+
+
+@dataclass(frozen=True)
+class CorefMlpShapes:
+    """Batched coreference mention-pair scorer (RoBERTa+MLP stand-in)."""
+
+    batch: int = 64
+    dim: int = 64  # mention embedding dim
+    hidden: tuple = (128, 64)
+    seed: int = 11
+
+
+@dataclass(frozen=True)
+class ReconstructShapes:
+    """Z_rows @ Z_cols^T tile reconstruction for the serving path."""
+
+    rows: int = 128
+    cols: int = 128
+    rank: int = 512  # padded factor rank (Rust zero-pads s <= rank)
+
+
+@dataclass(frozen=True)
+class EmbedTransformShapes:
+    """C @ W for CUR embedding construction (blocked over rows)."""
+
+    rows: int = 128
+    rank: int = 512
+
+
+@dataclass(frozen=True)
+class AllShapes:
+    wmd: WmdShapes = field(default_factory=WmdShapes)
+    cross_encoder: CrossEncoderShapes = field(default_factory=CrossEncoderShapes)
+    coref: CorefMlpShapes = field(default_factory=CorefMlpShapes)
+    reconstruct: ReconstructShapes = field(default_factory=ReconstructShapes)
+    embed_transform: EmbedTransformShapes = field(default_factory=EmbedTransformShapes)
+
+
+SHAPES = AllShapes()

@@ -1,0 +1,110 @@
+"""Structural properties of the L1 Pallas kernel: grid/block invariance,
+padding invariance at the full-model level, and iteration monotonicity.
+These pin down exactly the properties the Rust runtime relies on when it
+pads variable-length documents into the fixed artifact shape.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.sinkhorn import sinkhorn_cost
+from compile.shapes import SHAPES
+
+
+def _problem(rng, bsz, length):
+    cost = np.abs(rng.standard_normal((bsz, length, length))).astype(np.float32)
+    cost /= cost.mean((1, 2), keepdims=True)
+    w = np.abs(rng.standard_normal((bsz, length))).astype(np.float32) + 0.1
+    w /= w.sum(-1, keepdims=True)
+    return cost, w
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block=st.sampled_from([1, 2, 4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_block_size_invariance(block, seed):
+    """The grid decomposition must not change the numerics."""
+    rng = np.random.default_rng(seed)
+    cost, w = _problem(rng, 16, 8)
+    base = sinkhorn_cost(cost, w, w, iters=20, eps=0.1, block_batch=16)
+    got = sinkhorn_cost(cost, w, w, iters=20, eps=0.1, block_batch=block)
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-7)
+
+
+def test_model_padding_invariance():
+    """Padding docs with zero-weight rows must not change wmd_sim output.
+
+    This is the property the Rust WmdPjrtOracle depends on: it pads
+    variable-length documents to max_len with zero weights.
+    """
+    s = SHAPES.wmd
+    fn, _ = model.build_wmd_sim()
+    rng = np.random.default_rng(7)
+    bsz, l, d = s.batch, s.max_len, s.dim
+
+    # Unpadded: full-length docs.
+    x = rng.standard_normal((bsz, l, d)).astype(np.float32)
+    y = rng.standard_normal((bsz, l, d)).astype(np.float32)
+    w = np.abs(rng.standard_normal((bsz, l))).astype(np.float32) + 0.1
+    w /= w.sum(-1, keepdims=True)
+
+    # Padded variant: zero out the tail 10 rows (weights AND embeddings),
+    # renormalize the head.
+    keep = l - 10
+    wp = w.copy()
+    wp[:, keep:] = 0.0
+    wp /= wp.sum(-1, keepdims=True)
+    xp = x.copy()
+    xp[:, keep:, :] = 0.0
+
+    # Reference short problem (length=keep) vs padded long problem.
+    (sim_pad,) = jax.jit(fn)(xp, wp, y, w, np.float32(0.75))
+    short = ref.wmd_sim_ref(
+        xp[:, :keep, :],
+        wp[:, :keep],
+        y,
+        w,
+        0.75,
+        iters=s.sinkhorn_iters,
+        eps=s.eps,
+    )
+    np.testing.assert_allclose(np.asarray(sim_pad), np.asarray(short), rtol=2e-4, atol=1e-5)
+
+
+def test_duplicate_slot_padding_harmless():
+    """Repeating a pair in trailing batch slots (the Rust batcher's padding
+    strategy) reproduces the same leading outputs."""
+    s = SHAPES.wmd
+    fn, _ = model.build_wmd_sim()
+    rng = np.random.default_rng(8)
+    bsz, l, d = s.batch, s.max_len, s.dim
+    x = rng.standard_normal((bsz, l, d)).astype(np.float32)
+    y = rng.standard_normal((bsz, l, d)).astype(np.float32)
+    w = np.full((bsz, l), 1.0 / l, np.float32)
+    (base,) = jax.jit(fn)(x, w, y, w, np.float32(0.75))
+    # Overwrite the last 20 slots with copies of slot 0.
+    x2, y2 = x.copy(), y.copy()
+    x2[-20:] = x[0]
+    y2[-20:] = y[0]
+    (padded,) = jax.jit(fn)(x2, w, y2, w, np.float32(0.75))
+    np.testing.assert_allclose(
+        np.asarray(padded)[:-20], np.asarray(base)[:-20], rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_allclose(np.asarray(padded)[-20:], np.asarray(base)[0], rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("eps", [0.02, 0.05, 0.2])
+def test_entropic_bias_monotone_in_eps(eps):
+    """Larger eps -> more entropic smoothing -> cost drifts from eps->0 OT;
+    the kernel must remain finite and nonnegative across the eps range the
+    shapes registry allows."""
+    rng = np.random.default_rng(9)
+    cost, w = _problem(rng, 8, 16)
+    d = np.asarray(sinkhorn_cost(cost, w, w, iters=60, eps=eps, block_batch=4))
+    assert np.all(np.isfinite(d)) and np.all(d >= -1e-6)

@@ -1,0 +1,95 @@
+"""L2 model graphs: shape/dtype checks and oracle-structure properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.shapes import SHAPES
+
+
+@pytest.mark.parametrize("name", list(model.ARTIFACTS))
+def test_builder_shapes(name):
+    fn, args = model.ARTIFACTS[name]()
+    ins = [np.zeros(a.shape, np.float32) + 0.1 for a in args]
+    (out,) = jax.jit(fn)(*ins)
+    assert out.dtype == jnp.float32
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_wmd_sim_in_unit_interval():
+    s = SHAPES.wmd
+    fn, _ = model.build_wmd_sim()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((s.batch, s.max_len, s.dim)).astype(np.float32)
+    y = rng.standard_normal((s.batch, s.max_len, s.dim)).astype(np.float32)
+    w = np.full((s.batch, s.max_len), 1.0 / s.max_len, np.float32)
+    (sim,) = jax.jit(fn)(x, w, y, w, np.float32(0.75))
+    sim = np.asarray(sim)
+    assert np.all(sim > 0) and np.all(sim <= 1.0 + 1e-6)
+
+
+def test_wmd_sim_matches_pure_ref():
+    """The full L2 graph (with the L1 kernel inside) equals the jnp ref."""
+    s = SHAPES.wmd
+    fn, _ = model.build_wmd_sim()
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((s.batch, s.max_len, s.dim)).astype(np.float32)
+    y = rng.standard_normal((s.batch, s.max_len, s.dim)).astype(np.float32)
+    w = np.abs(rng.standard_normal((s.batch, s.max_len))).astype(np.float32) + 0.1
+    w = w / w.sum(-1, keepdims=True)
+    (got,) = jax.jit(fn)(x, w, y, w, np.float32(0.75))
+    want = ref.wmd_sim_ref(
+        x, w, y, w, 0.75, iters=s.sinkhorn_iters, eps=s.eps
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_wmd_self_similarity_highest():
+    """sim(x, x) should exceed sim(x, y) for random y (kernel sanity)."""
+    s = SHAPES.wmd
+    fn, _ = model.build_wmd_sim()
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((s.batch, s.max_len, s.dim)).astype(np.float32)
+    y = rng.standard_normal((s.batch, s.max_len, s.dim)).astype(np.float32)
+    w = np.full((s.batch, s.max_len), 1.0 / s.max_len, np.float32)
+    (self_sim,) = jax.jit(fn)(x, w, x, w, np.float32(0.75))
+    (cross_sim,) = jax.jit(fn)(x, w, y, w, np.float32(0.75))
+    assert np.mean(np.asarray(self_sim)) > np.mean(np.asarray(cross_sim))
+
+
+def test_cross_encoder_asymmetric_and_bounded():
+    s = SHAPES.cross_encoder
+    fn, _ = model.build_cross_encoder()
+    rng = np.random.default_rng(3)
+    x1 = rng.standard_normal((s.batch, s.seq, s.dim)).astype(np.float32)
+    x2 = rng.standard_normal((s.batch, s.seq, s.dim)).astype(np.float32)
+    (s12,) = jax.jit(fn)(x1, x2)
+    (s21,) = jax.jit(fn)(x2, x1)
+    s12, s21 = np.asarray(s12), np.asarray(s21)
+    assert np.all(np.abs(s12) <= 1.0)
+    # Cross-encoders are order-sensitive; the stand-in must be too.
+    assert np.abs(s12 - s21).max() > 1e-4
+
+
+def test_coref_mlp_deterministic_and_bounded():
+    s = SHAPES.coref
+    fn, _ = model.build_coref_mlp()
+    rng = np.random.default_rng(4)
+    m1 = rng.standard_normal((s.batch, s.dim)).astype(np.float32)
+    m2 = rng.standard_normal((s.batch, s.dim)).astype(np.float32)
+    (a,) = jax.jit(fn)(m1, m2)
+    (b,) = jax.jit(fn)(m1, m2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.all(np.abs(np.asarray(a)) <= 1.0)
+
+
+def test_reconstruct_tile_is_matmul():
+    fn, args = model.build_reconstruct_tile()
+    rng = np.random.default_rng(5)
+    zr = rng.standard_normal(args[0].shape).astype(np.float32)
+    zc = rng.standard_normal(args[1].shape).astype(np.float32)
+    (tile,) = jax.jit(fn)(zr, zc)
+    np.testing.assert_allclose(tile, zr @ zc.T, rtol=1e-4, atol=1e-4)

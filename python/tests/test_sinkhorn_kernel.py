@@ -1,0 +1,97 @@
+"""L1 correctness: Pallas Sinkhorn kernel vs the pure-jnp reference.
+
+This is the core correctness signal for the kernel layer: identical math,
+different execution path (pallas_call interpret vs straight jnp).
+Hypothesis sweeps shapes, regularizers and marginal patterns.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sinkhorn import sinkhorn_cost
+
+
+def _random_problem(rng, bsz, length, pad_frac=0.0):
+    cost = np.abs(rng.standard_normal((bsz, length, length))).astype(np.float32)
+    cost = cost / cost.mean((1, 2), keepdims=True)
+
+    def marginals():
+        w = np.abs(rng.standard_normal((bsz, length))).astype(np.float32) + 0.05
+        if pad_frac > 0:
+            npad = int(length * pad_frac)
+            if npad:
+                w[:, length - npad :] = 0.0
+        return w / w.sum(-1, keepdims=True)
+
+    return cost, marginals(), marginals()
+
+
+@pytest.mark.parametrize("bsz,length,block", [(8, 8, 4), (16, 32, 8), (8, 16, 8)])
+def test_kernel_matches_ref(bsz, length, block):
+    rng = np.random.default_rng(0)
+    cost, a, b = _random_problem(rng, bsz, length)
+    got = sinkhorn_cost(cost, a, b, iters=30, eps=0.05, block_batch=block)
+    want = ref.sinkhorn_cost_ref(cost, a, b, iters=30, eps=0.05)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_matches_ref_with_padding():
+    rng = np.random.default_rng(1)
+    cost, a, b = _random_problem(rng, 8, 32, pad_frac=0.4)
+    got = sinkhorn_cost(cost, a, b, iters=30, eps=0.05, block_batch=4)
+    want = ref.sinkhorn_cost_ref(cost, a, b, iters=30, eps=0.05)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert np.all(np.isfinite(got))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bsz=st.sampled_from([4, 8]),
+    length=st.sampled_from([4, 8, 16, 32]),
+    eps=st.sampled_from([0.02, 0.05, 0.1, 0.5]),
+    iters=st.integers(min_value=1, max_value=60),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_kernel_matches_ref_property(bsz, length, eps, iters, seed):
+    rng = np.random.default_rng(seed)
+    cost, a, b = _random_problem(rng, bsz, length)
+    got = sinkhorn_cost(cost, a, b, iters=iters, eps=eps, block_batch=bsz // 2)
+    want = ref.sinkhorn_cost_ref(cost, a, b, iters=iters, eps=eps)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_transport_plan_marginal_feasibility(seed):
+    """After convergence the plan's row marginals equal `a` (col ~ b)."""
+    rng = np.random.default_rng(seed)
+    cost, a, b = _random_problem(rng, 4, 16)
+    plan = ref.transport_plan_ref(cost, a, b, iters=200, eps=0.1)
+    np.testing.assert_allclose(plan.sum(2), a, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(plan.sum(1), b, rtol=1e-2, atol=1e-3)
+    assert np.all(np.asarray(plan) >= 0)
+
+
+def test_cost_is_nonnegative_and_selfsim_small():
+    """OT cost >= 0; identical point clouds give near-zero cost."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4, 8, 16)).astype(np.float32)
+    w = np.full((4, 8), 1.0 / 8, np.float32)
+    cost = np.asarray(ref.pairwise_cost_ref(x, x, w, w))
+    d = np.asarray(ref.sinkhorn_cost_ref(cost, w, w, iters=300, eps=0.02))
+    assert np.all(d >= -1e-6)
+    assert np.all(d < 0.25)  # entropic bias keeps it off exact zero
+
+
+def test_more_iters_changes_less():
+    """Fixed point: successive iteration counts converge."""
+    rng = np.random.default_rng(4)
+    cost, a, b = _random_problem(rng, 4, 16)
+    d1 = np.asarray(ref.sinkhorn_cost_ref(cost, a, b, iters=50, eps=0.1))
+    d2 = np.asarray(ref.sinkhorn_cost_ref(cost, a, b, iters=100, eps=0.1))
+    d3 = np.asarray(ref.sinkhorn_cost_ref(cost, a, b, iters=200, eps=0.1))
+    assert np.abs(d3 - d2).max() <= np.abs(d2 - d1).max() + 1e-7

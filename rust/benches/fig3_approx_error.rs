@@ -1,0 +1,125 @@
+//! Figure 3 (+ Fig 10 zoom / App E): relative Frobenius approximation
+//! error vs sample-size fraction s/n for every sublinear method on the
+//! PSD control matrix, the near-PSD Twitter WMD matrix, and the less-near-
+//! PSD STS-B / MRPC cross-encoder matrices.
+//!
+//! Expected shape (paper): Nyström + skeleton excellent on PSD/Twitter but
+//! blow up on STS-B/MRPC; SMS-Nyström and SiCUR good everywhere; StaCUR
+//! stable but weaker.
+//!
+//! Run: cargo bench --bench fig3_approx_error [-- --trials 5 --scale 0.6]
+
+use simmat::approx::{self, rel_fro_error, SmsConfig};
+use simmat::data::{CorpusPreset, GluePreset};
+use simmat::linalg::Mat;
+use simmat::runtime::shared_runtime;
+use simmat::sim::DenseOracle;
+use simmat::util::cli::Args;
+use simmat::util::report::{pm, Report};
+use simmat::util::rng::Rng;
+use simmat::util::stats;
+use simmat::workloads;
+
+const METHODS: [&str; 6] = [
+    "Nystrom",
+    "SMS-Nystrom",
+    "Skeleton",
+    "SiCUR",
+    "StaCUR(s)",
+    "StaCUR(d)",
+];
+
+fn run_method(
+    name: &str,
+    oracle: &DenseOracle,
+    s: usize,
+    rng: &mut Rng,
+) -> Result<approx::Factored, String> {
+    match name {
+        "Nystrom" => approx::nystrom(oracle, s, rng),
+        "SMS-Nystrom" => {
+            approx::sms_nystrom(oracle, s, SmsConfig::default(), rng).map(|r| r.factored)
+        }
+        "Skeleton" => approx::skeleton(oracle, s, rng),
+        // SiCUR's x-axis is s2/n in the paper, so feed s1 = s/2.
+        "SiCUR" => approx::sicur(oracle, (s / 2).max(2), 2.0, rng),
+        "StaCUR(s)" => approx::stacur(oracle, s, true, rng),
+        "StaCUR(d)" => approx::stacur(oracle, s, false, rng),
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let trials = args.get_usize("trials", 5);
+    let scale = args.get_f64("scale", workloads::bench_scale());
+    let fracs = [0.05, 0.10, 0.15, 0.20, 0.30, 0.40];
+
+    let mut rep = Report::new("fig3_approx_error");
+    rep.line("Paper Fig. 3: ||K - K~||_F / ||K||_F vs s/n, averaged over trials.");
+    rep.line(format!("trials={trials}, scale={scale}"));
+    rep.line("");
+
+    let rt = shared_runtime().expect("run `make artifacts` first");
+    let psd_n = (500.0 * scale) as usize;
+    let psd = workloads::psd_matrix(psd_n.max(100), 42);
+    let twitter =
+        workloads::wmd_workload(rt.clone(), CorpusPreset::Twitter, scale, 0.75, 11).unwrap();
+    let stsb = workloads::glue_workload(rt.clone(), GluePreset::StsB, scale, 12).unwrap();
+    let mrpc = workloads::glue_workload(rt, GluePreset::Mrpc, scale, 13).unwrap();
+
+    let matrices: Vec<(&str, &Mat)> = vec![
+        ("PSD", &psd),
+        ("Twitter-WMD", &twitter.k),
+        ("STS-B", &stsb.k_sym),
+        ("MRPC", &mrpc.k_sym),
+    ];
+
+    let mut rng = Rng::new(7);
+    let mut csv = Vec::new();
+    for (mat_name, k) in matrices {
+        let oracle = DenseOracle::new(k.clone());
+        let n = k.rows;
+        rep.line(format!("## {mat_name} (n={n})"));
+        let mut rows = Vec::new();
+        for &frac in &fracs {
+            let s = ((n as f64 * frac) as usize).max(4);
+            let mut row = vec![format!("{frac:.2}")];
+            for method in METHODS {
+                let mut errs = Vec::new();
+                for _ in 0..trials {
+                    match run_method(method, &oracle, s, &mut rng) {
+                        Ok(f) => errs.push(rel_fro_error(k, &f)),
+                        Err(_) => errs.push(f64::NAN),
+                    }
+                }
+                let mean = stats::mean(&errs);
+                let sd = stats::std_dev(&errs);
+                // Mirror the paper: huge errors are "out of range".
+                row.push(if mean.is_finite() && mean < 50.0 {
+                    pm(mean, sd, 3)
+                } else {
+                    ">50 (off-scale)".to_string()
+                });
+                csv.push(vec![
+                    mat_name.to_string(),
+                    method.to_string(),
+                    format!("{frac:.2}"),
+                    format!("{mean:.6}"),
+                    format!("{sd:.6}"),
+                ]);
+            }
+            rows.push(row);
+        }
+        let mut header = vec!["s/n"];
+        header.extend(METHODS);
+        rep.table(&header, &rows);
+    }
+    rep.csv(
+        "fig3_series",
+        &["matrix", "method", "s_over_n", "mean_err", "std_err"],
+        &csv,
+    );
+    let path = rep.write().unwrap();
+    println!("\nreport -> {}", path.display());
+}

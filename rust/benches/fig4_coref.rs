@@ -1,0 +1,107 @@
+//! Figure 4 (+ Figure 8 / App. C): cross-document coreference — CoNLL F1
+//! and approximation error vs the number of landmarks, for SiCUR, StaCUR,
+//! SMS-Nyström and its β-rescaled variant, against the exact-matrix
+//! clustering reference.
+//!
+//! Expected shape (paper): SiCUR within ~1 F1 point of exact at 90%
+//! landmarks and within ~1.5 at 50%; plain SMS-Nyström hurt by the shift's
+//! effect on the clustering threshold, the rescaled variant competitive
+//! with StaCUR.
+//!
+//! Run: cargo bench --bench fig4_coref [-- --runs 3]
+
+use simmat::approx::{self, rel_fro_error, SmsConfig};
+use simmat::data::CorefSpec;
+use simmat::runtime::shared_runtime_subset;
+use simmat::sim::DenseOracle;
+use simmat::tasks;
+use simmat::util::cli::Args;
+use simmat::util::report::{pm, Report};
+use simmat::util::rng::Rng;
+use simmat::util::stats;
+use simmat::workloads;
+
+fn main() {
+    let args = Args::parse_env();
+    let runs = args.get_usize("runs", 3);
+    let threshold = args.get_f64("threshold", 0.5);
+    let mut rep = Report::new("fig4_coref");
+    rep.line("Paper Fig. 4 + Fig. 8: ECB+ coreference CoNLL F1 and approximation error vs landmarks.");
+    rep.line(format!("runs={runs}, clustering threshold={threshold}"));
+    rep.line("");
+
+    let rt = shared_runtime_subset(&["coref_mlp"]).expect("run `make artifacts` first");
+    let w = workloads::coref_workload(rt, CorefSpec::default(), 14).unwrap();
+    let n = w.k_sym.rows;
+    let mut rng = Rng::new(8);
+
+    // Exact reference.
+    let exact_ids = tasks::average_linkage(&w.k_sym, threshold);
+    let exact_f1 = 100.0 * tasks::conll_f1(&exact_ids, &w.corpus.gold);
+    rep.line(format!(
+        "exact matrix (n={n}, {} gold entities): CoNLL F1 = {exact_f1:.2}",
+        w.corpus.entities
+    ));
+    rep.line("");
+
+    let fracs = [0.1, 0.2, 0.3, 0.5, 0.7, 0.9];
+    let methods = ["SiCUR", "StaCUR", "SMS-Nys", "SMS-Nys(rescaled)"];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &frac in &fracs {
+        let s = ((n as f64 * frac) as usize).max(4);
+        let mut row = vec![format!("{:.0}%", 100.0 * frac)];
+        for method in methods {
+            let mut f1s = Vec::new();
+            let mut errs = Vec::new();
+            for _ in 0..runs {
+                let oracle = DenseOracle::new(w.k_sym.clone());
+                let f = match method {
+                    "SiCUR" => approx::sicur(&oracle, (s / 2).max(2), 2.0, &mut rng),
+                    "StaCUR" => approx::stacur(&oracle, s, true, &mut rng),
+                    "SMS-Nys" => {
+                        approx::sms_nystrom(&oracle, s, SmsConfig::default(), &mut rng)
+                            .map(|r| r.factored)
+                    }
+                    "SMS-Nys(rescaled)" => {
+                        let cfg = SmsConfig {
+                            rescale: true,
+                            ..SmsConfig::default()
+                        };
+                        approx::sms_nystrom(&oracle, s, cfg, &mut rng).map(|r| r.factored)
+                    }
+                    _ => unreachable!(),
+                };
+                let Ok(f) = f else { continue };
+                errs.push(rel_fro_error(&w.k_sym, &f));
+                let ids = tasks::average_linkage(&f.to_dense().symmetrized(), threshold);
+                f1s.push(100.0 * tasks::conll_f1(&ids, &w.corpus.gold));
+            }
+            row.push(format!(
+                "{} (err {:.3})",
+                pm(stats::mean(&f1s), stats::std_dev(&f1s), 1),
+                stats::mean(&errs)
+            ));
+            csv.push(vec![
+                method.to_string(),
+                format!("{frac:.2}"),
+                format!("{:.3}", stats::mean(&f1s)),
+                format!("{:.3}", stats::std_dev(&f1s)),
+                format!("{:.5}", stats::mean(&errs)),
+            ]);
+        }
+        rows.push(row);
+        println!("landmarks {:.0}% done", 100.0 * frac);
+    }
+    let mut header = vec!["landmarks"];
+    header.extend(methods);
+    rep.table(&header, &rows);
+    rep.line(format!("(reference: exact CoNLL F1 = {exact_f1:.2})"));
+    rep.csv(
+        "fig4_series",
+        &["method", "landmark_frac", "f1_mean", "f1_std", "err_mean"],
+        &csv,
+    );
+    let path = rep.write().unwrap();
+    println!("\nreport -> {}", path.display());
+}

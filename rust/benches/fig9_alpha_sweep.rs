@@ -1,0 +1,80 @@
+//! Figure 9 (App. D): SMS-Nyström approximation error as a function of the
+//! shift multiplier α and the oversampling factor z = s2/s1, on the STS-B
+//! and MRPC cross-encoder matrices — the ablation justifying the paper's
+//! default {z=2, α=1.5}.
+//!
+//! Expected shape (paper): small z and α fail; α ≥ 1 with z ≥ 2 works and
+//! improves with samples; two-stage sampling (z > 1) clearly helps.
+//!
+//! Run: cargo bench --bench fig9_alpha_sweep [-- --trials 3]
+
+use simmat::approx::{rel_fro_error, sms_nystrom, SmsConfig};
+use simmat::data::GluePreset;
+use simmat::runtime::shared_runtime;
+use simmat::sim::DenseOracle;
+use simmat::util::cli::Args;
+use simmat::util::report::Report;
+use simmat::util::rng::Rng;
+use simmat::util::stats;
+use simmat::workloads;
+
+fn main() {
+    let args = Args::parse_env();
+    let trials = args.get_usize("trials", 3);
+    let scale = args.get_f64("scale", workloads::bench_scale());
+    let mut rep = Report::new("fig9_alpha_sweep");
+    rep.line("Paper Fig. 9: SMS-Nyström error vs (alpha, z) on STS-B and MRPC.");
+    rep.line(format!("trials={trials}, scale={scale}"));
+    rep.line("");
+
+    let rt = shared_runtime().expect("run `make artifacts` first");
+    let mut rng = Rng::new(9);
+    let alphas = [0.5, 1.0, 1.5, 2.0];
+    let zs = [1.0, 1.5, 2.0, 3.0];
+    let mut csv = Vec::new();
+
+    for preset in [GluePreset::StsB, GluePreset::Mrpc] {
+        let w = workloads::glue_workload(rt.clone(), preset, scale, 12 + preset as u64).unwrap();
+        let n = w.k_sym.rows;
+        let s1 = (n / 8).max(8);
+        rep.line(format!("## {} (n={n}, s1={s1})", preset.name()));
+        let mut rows = Vec::new();
+        for &alpha in &alphas {
+            let mut row = vec![format!("alpha={alpha}")];
+            for &z in &zs {
+                let mut errs = Vec::new();
+                for _ in 0..trials {
+                    let oracle = DenseOracle::new(w.k_sym.clone());
+                    let cfg = SmsConfig {
+                        alpha,
+                        z,
+                        ..SmsConfig::default()
+                    };
+                    if let Ok(r) = sms_nystrom(&oracle, s1, cfg, &mut rng) {
+                        errs.push(rel_fro_error(&w.k_sym, &r.factored));
+                    }
+                }
+                let m = stats::mean(&errs);
+                row.push(if m.is_finite() && m < 50.0 {
+                    format!("{m:.3}")
+                } else {
+                    ">50".into()
+                });
+                csv.push(vec![
+                    preset.name().into(),
+                    format!("{alpha}"),
+                    format!("{z}"),
+                    format!("{m:.6}"),
+                ]);
+            }
+            rows.push(row);
+        }
+        let mut header = vec!["".to_string()];
+        header.extend(zs.iter().map(|z| format!("z={z}")));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        rep.table(&header_refs, &rows);
+    }
+    rep.csv("fig9_series", &["dataset", "alpha", "z", "mean_err"], &csv);
+    let path = rep.write().unwrap();
+    println!("\nreport -> {}", path.display());
+}

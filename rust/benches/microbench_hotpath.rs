@@ -1,0 +1,129 @@
+//! §Perf instrument: micro-benchmarks of every hot path in the stack —
+//! entry/row serving (L3), factor construction (L3 linalg), dynamic
+//! batching overhead (L3 coordinator), and per-artifact PJRT execution
+//! latency (L1/L2 through the runtime). Results feed EXPERIMENTS.md §Perf.
+//!
+//! Run: cargo bench --bench microbench_hotpath
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use simmat::approx::{self, Factored, SmsConfig};
+use simmat::coordinator::{BatchService, BatchingOracle, Metrics};
+use simmat::linalg::{eigh, Mat};
+use simmat::runtime::{default_artifacts_dir, Runtime};
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::DenseOracle;
+use simmat::util::report::Report;
+use simmat::util::rng::Rng;
+use simmat::util::timer::bench;
+
+fn main() {
+    let mut rep = Report::new("microbench_hotpath");
+    rep.line("Hot-path micro-benchmarks (see EXPERIMENTS.md §Perf).");
+    rep.line("");
+    let budget = Duration::from_millis(300);
+    let mut rng = Rng::new(1);
+
+    // ---- L3 serving: entry / row / top-k on a realistic factor ----
+    let n = 2000;
+    let r = 256;
+    let f = Factored::from_z(Mat::gaussian(n, r, &mut rng));
+    let s = bench(budget, 3, || {
+        std::hint::black_box(f.entry(123, 1777));
+    });
+    rep.line(format!("- serve entry (n={n}, r={r}): {s}"));
+    let s = bench(budget, 1, || {
+        std::hint::black_box(f.row(123));
+    });
+    rep.line(format!("- serve row (n={n}, r={r}): {s}"));
+    let s = bench(budget, 1, || {
+        std::hint::black_box(f.top_k(7, 10));
+    });
+    rep.line(format!("- serve top-10 (n={n}, r={r}): {s}"));
+
+    // ---- L3 build: the dense-linalg stages of an SMS build ----
+    let ssize = 200;
+    let w = {
+        let g = Mat::gaussian(ssize, ssize, &mut rng);
+        g.add(&g.transpose()).scale(0.5)
+    };
+    let s = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(eigh(&w).unwrap());
+    });
+    rep.line(format!("- eigh {ssize}x{ssize} (joining matrix factorization): {s}"));
+    let c = Mat::gaussian(n, ssize, &mut rng);
+    let m = Mat::gaussian(ssize, ssize, &mut rng);
+    let s = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(c.matmul(&m));
+    });
+    rep.line(format!("- matmul {n}x{ssize} · {ssize}x{ssize} (Z assembly): {s}"));
+
+    // ---- full build end-to-end (dense oracle, no PJRT) ----
+    let o = NearPsdOracle::new(600, 20, 0.4, &mut rng);
+    let s = bench(Duration::from_millis(1500), 0, || {
+        let mut r2 = Rng::new(5);
+        std::hint::black_box(
+            approx::sms_nystrom(&o, 80, SmsConfig::default(), &mut r2).unwrap(),
+        );
+    });
+    rep.line(format!("- SMS-Nyström build n=600 s=80 (dense oracle): {s}"));
+
+    // ---- coordinator: batching overhead vs direct ----
+    let k = Mat::gaussian(500, 500, &mut rng);
+    let oracle = DenseOracle::new(k.clone());
+    let pairs: Vec<(usize, usize)> = (0..4096).map(|i| (i % 500, (i * 7) % 500)).collect();
+    let s = bench(budget, 1, || {
+        use simmat::sim::SimOracle;
+        std::hint::black_box(oracle.eval_batch(&pairs));
+    });
+    rep.line(format!("- direct oracle 4096 pairs: {s}"));
+    let metrics = Arc::new(Metrics::new());
+    let batched = BatchingOracle::new(&oracle, 64, metrics);
+    let s = bench(budget, 1, || {
+        use simmat::sim::SimOracle;
+        std::hint::black_box(batched.eval_batch(&pairs));
+    });
+    rep.line(format!("- batched oracle 4096 pairs (batch=64): {s}"));
+
+    // Threaded service round-trip latency.
+    let svc = BatchService::spawn(
+        DenseOracle::new(k.clone()),
+        64,
+        Duration::from_micros(200),
+    );
+    let client = svc.client();
+    let s = bench(budget, 5, || {
+        std::hint::black_box(client.eval(3, 77));
+    });
+    rep.line(format!("- batch service single-request round trip: {s}"));
+
+    // ---- PJRT per-artifact execution latency ----
+    if let Some(dir) = default_artifacts_dir() {
+        let mut rt = Runtime::load(&dir).unwrap();
+        let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+        for name in names {
+            let spec = rt.manifest.spec(&name).unwrap().clone();
+            let inputs: Vec<Vec<f32>> = spec
+                .inputs
+                .iter()
+                .map(|sh| {
+                    let numel: usize = sh.iter().product::<usize>().max(1);
+                    (0..numel).map(|i| 0.01 + (i % 97) as f32 * 1e-3).collect()
+                })
+                .collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            rt.execute(&name, &refs).unwrap(); // warm
+            let s = bench(Duration::from_millis(800), 1, || {
+                std::hint::black_box(rt.execute(&name, &refs).unwrap());
+            });
+            let batch = spec.inputs[0][0];
+            rep.line(format!("- PJRT `{name}` (batch {batch}): {s}"));
+        }
+    } else {
+        rep.line("- PJRT artifacts not built; skipped runtime latencies");
+    }
+
+    let path = rep.write().unwrap();
+    println!("\nreport -> {}", path.display());
+}

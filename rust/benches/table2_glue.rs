@@ -1,0 +1,146 @@
+//! Table 2: downstream GLUE performance of approximated cross-encoder
+//! matrices — Pearson/Spearman for STS-B, F1 for MRPC, accuracy for RTE —
+//! at three ranks per method, plus the exact BERT / SYM-BERT rows.
+//!
+//! Expected shape (paper): SMS-Nyström strongest on STS-B, SiCUR on MRPC,
+//! all comparable on RTE; symmetrized exact slightly beats raw exact.
+//!
+//! Run: cargo bench --bench table2_glue [-- --runs 5]
+
+use simmat::approx::{self, SmsConfig};
+use simmat::data::GluePreset;
+use simmat::runtime::shared_runtime;
+use simmat::sim::DenseOracle;
+use simmat::tasks;
+use simmat::util::cli::Args;
+use simmat::util::report::{pm, Report};
+use simmat::util::rng::Rng;
+use simmat::util::stats;
+use simmat::workloads::{self, GlueWorkload};
+
+/// Score pair predictions against gold for the preset's metric(s).
+fn score(w: &GlueWorkload, pred: &[f64]) -> Vec<(String, f64)> {
+    match w.task.preset {
+        GluePreset::StsB => vec![
+            ("STS-B(P)".into(), 100.0 * tasks::pearson(pred, &w.task.gold)),
+            ("STS-B(S)".into(), 100.0 * tasks::spearman(pred, &w.task.gold)),
+        ],
+        GluePreset::Mrpc | GluePreset::Rte => {
+            let gold: Vec<bool> = w.task.gold.iter().map(|&g| g > 0.5).collect();
+            let half = gold.len() / 2;
+            let thr = tasks::calibrate_threshold(&pred[..half], &gold[..half]);
+            let p: Vec<bool> = pred[half..].iter().map(|&s| s > thr).collect();
+            let metric = if w.task.preset == GluePreset::Mrpc {
+                ("MRPC(F1)".into(), 100.0 * tasks::f1(&p, &gold[half..]))
+            } else {
+                ("RTE(acc)".into(), 100.0 * tasks::accuracy(&p, &gold[half..]))
+            };
+            vec![metric]
+        }
+    }
+}
+
+fn predictions(k_entry: impl Fn(usize, usize) -> f64, w: &GlueWorkload) -> Vec<f64> {
+    w.task.pairs.iter().map(|&(i, j)| k_entry(i, j)).collect()
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let runs = args.get_usize("runs", 5);
+    let scale = args.get_f64("scale", workloads::bench_scale());
+    let mut rep = Report::new("table2_glue");
+    rep.line("Paper Table 2: GLUE downstream performance from approximated similarity matrices.");
+    rep.line(format!("runs={runs}, scale={scale}"));
+    rep.line("");
+
+    let rt = shared_runtime().expect("run `make artifacts` first");
+    let mut rng = Rng::new(23);
+    let methods = ["SMS-Nys", "StaCUR", "SiCUR"];
+    let mut csv = Vec::new();
+
+    for preset in GluePreset::ALL {
+        let w = workloads::glue_workload(rt.clone(), preset, scale, 12 + preset as u64).unwrap();
+        let n = w.k_sym.rows;
+        // Three ranks scaled from the paper's grids (e.g. 250/350/700 of 3000).
+        let ranks = [n / 12, n / 8, n / 4];
+        rep.line(format!("## {} (n={n})", preset.name()));
+        println!("== {} (n={n}) ==", preset.name());
+
+        let mut rows = Vec::new();
+        for method in methods {
+            for &s in &ranks {
+                let s = s.max(4);
+                let mut per_metric: Vec<Vec<f64>> = Vec::new();
+                for _ in 0..runs {
+                    let oracle = DenseOracle::new(w.k_sym.clone());
+                    let f = match method {
+                        "SMS-Nys" => approx::sms_nystrom(
+                            &oracle,
+                            s,
+                            SmsConfig::default(),
+                            &mut rng,
+                        )
+                        .map(|r| r.factored),
+                        "StaCUR" => approx::stacur(&oracle, s, true, &mut rng),
+                        "SiCUR" => approx::sicur(&oracle, (s / 2).max(2), 2.0, &mut rng),
+                        _ => unreachable!(),
+                    };
+                    let Ok(f) = f else { continue };
+                    let pred = predictions(|i, j| f.entry(i, j), &w);
+                    for (mi, (_, v)) in score(&w, &pred).into_iter().enumerate() {
+                        if per_metric.len() <= mi {
+                            per_metric.push(Vec::new());
+                        }
+                        per_metric[mi].push(v);
+                    }
+                }
+                let metric_names: Vec<String> = score(&w, &predictions(|i, j| w.k_sym.get(i, j), &w))
+                    .into_iter()
+                    .map(|(name, _)| name)
+                    .collect();
+                let mut row = vec![method.to_string(), format!("@{s}")];
+                for (mi, vals) in per_metric.iter().enumerate() {
+                    row.push(format!(
+                        "{}: {}",
+                        metric_names[mi],
+                        pm(stats::mean(vals), stats::std_dev(vals), 2)
+                    ));
+                    csv.push(vec![
+                        preset.name().into(),
+                        method.into(),
+                        s.to_string(),
+                        metric_names[mi].clone(),
+                        format!("{:.3}", stats::mean(vals)),
+                        format!("{:.3}", stats::std_dev(vals)),
+                    ]);
+                }
+                rows.push(row);
+            }
+        }
+        // Exact rows: raw (BERT) and symmetrized (SYM-BERT).
+        for (label, k) in [("BERT(raw)", &w.k_raw), ("SYM-BERT", &w.k_sym)] {
+            let pred = predictions(|i, j| k.get(i, j), &w);
+            let mut row = vec![label.to_string(), "exact".into()];
+            for (name, v) in score(&w, &pred) {
+                row.push(format!("{name}: {v:.2}"));
+                csv.push(vec![
+                    preset.name().into(),
+                    label.into(),
+                    "exact".into(),
+                    name,
+                    format!("{v:.3}"),
+                    "0".into(),
+                ]);
+            }
+            rows.push(row);
+        }
+        rep.table(&["Method", "Rank", "Metric(s)", ""], &rows);
+    }
+    rep.csv(
+        "table2_series",
+        &["dataset", "method", "rank", "metric", "mean", "std"],
+        &csv,
+    );
+    let path = rep.write().unwrap();
+    println!("\nreport -> {}", path.display());
+}

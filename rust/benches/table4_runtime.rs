@@ -1,0 +1,106 @@
+//! Table 4 (App. A): wall-clock runtime of WME feature construction vs the
+//! SMS-Nyström build at small and large rank, per corpus. Both pipelines
+//! route their similarity evaluations through the PJRT WMD artifact via
+//! the dynamic batcher — the production path.
+//!
+//! Expected shape (paper): WME faster than SMS-N at equal rank (it needs
+//! only n·R evaluations against *short* random documents), both sublinear;
+//! LR costs ≈ (LR/SR)× more.
+//!
+//! Run: cargo bench --bench table4_runtime [-- --scale 0.5]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use simmat::approx::{self, SmsConfig};
+use simmat::coordinator::{BatchingOracle, Metrics};
+use simmat::data::CorpusPreset;
+use simmat::runtime::{shared_runtime_subset, PaddedDoc};
+use simmat::sim::CountingOracle;
+use simmat::util::cli::Args;
+use simmat::util::report::Report;
+use simmat::util::rng::Rng;
+use simmat::workloads;
+
+fn main() {
+    let args = Args::parse_env();
+    let scale = args.get_f64("scale", workloads::bench_scale());
+    let gamma = 0.75;
+    let mut rep = Report::new("table4_runtime");
+    rep.line("Paper Table 4: runtime (seconds) of WME vs SMS-Nyström feature construction.");
+    rep.line("Both pipelines evaluate similarities through the PJRT wmd_sim artifact.");
+    rep.line(format!("scale={scale}"));
+    rep.line("");
+
+    let rt = shared_runtime_subset(&["wmd_sim"]).expect("run `make artifacts` first");
+    let mut rng = Rng::new(4);
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut header = vec!["Method".to_string()];
+
+    let mut table: Vec<Vec<String>> = vec![
+        vec!["WME(SR)".into()],
+        vec!["SMS-N(SR)".into()],
+        vec!["WME(LR)".into()],
+        vec!["SMS-N(LR)".into()],
+    ];
+
+    for preset in CorpusPreset::ALL {
+        header.push(preset.name().to_string());
+        // Build corpus + PJRT oracle (no cached matrix — we time real work).
+        let mut prng = Rng::new(17);
+        let dim = { rt.lock().unwrap().manifest.wmd.dim };
+        let (max_len,) = { (rt.lock().unwrap().manifest.wmd.max_len,) };
+        let table_w = simmat::data::WordTable::new(24, 40, dim, 0.55, &mut prng);
+        let corpus = simmat::data::corpus::generate(preset, scale, &table_w, &mut prng);
+        let oracle = workloads::wmd_oracle(rt.clone(), &corpus, gamma).unwrap();
+        let n = corpus.n();
+        let (sr, lr) = (n / 8, n / 2);
+        println!("== {} (n={n}, SR={sr}, LR={lr}) ==", preset.name());
+
+        for (ri, (label, rank)) in [("SR", sr), ("SR", sr), ("LR", lr), ("LR", lr)]
+            .iter()
+            .enumerate()
+        {
+            let is_wme = ri % 2 == 0;
+            let t0 = Instant::now();
+            if is_wme {
+                // WME: n x R similarities against R random short docs.
+                let omegas: Vec<PaddedDoc> = (0..*rank)
+                    .map(|_| {
+                        let d = approx::wme::random_doc(&corpus.docs, 6, &mut rng);
+                        PaddedDoc::from_doc(&d, max_len, dim)
+                    })
+                    .collect();
+                let mut feats = Vec::with_capacity(n);
+                for i in 0..n {
+                    feats.push(oracle.sim_to_externals(i, &omegas));
+                }
+                std::hint::black_box(&feats);
+            } else {
+                let metrics = Arc::new(Metrics::new());
+                let counter = CountingOracle::new(&oracle);
+                let batched = BatchingOracle::new(&counter, 64, metrics);
+                let r = approx::sms_nystrom(&batched, *rank, SmsConfig::default(), &mut rng)
+                    .unwrap();
+                std::hint::black_box(&r.factored);
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let method = if is_wme { "WME" } else { "SMS-N" };
+            table[ri].push(format!("{secs:.2}"));
+            csv.push(vec![
+                preset.name().into(),
+                format!("{method}({label})"),
+                rank.to_string(),
+                format!("{secs:.3}"),
+            ]);
+            println!("  {method}({label}) rank={rank}: {secs:.2}s");
+        }
+    }
+    rows.extend(table);
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    rep.table(&header_refs, &rows);
+    rep.csv("table4_series", &["corpus", "method", "rank", "seconds"], &csv);
+    let path = rep.write().unwrap();
+    println!("\nreport -> {}", path.display());
+}

@@ -1,0 +1,86 @@
+//! Table 7 (App. B): relative Frobenius error of the approximations
+//! against the *raw* cross-encoder outputs, including the SYM-BERT row
+//! (symmetrization error itself).
+//!
+//! Expected shape (paper): SiCUR lowest among CUR variants, SMS-Nyström
+//! competitive at moderate ranks, StaCUR higher; SYM row small but
+//! non-zero.
+//!
+//! Run: cargo bench --bench table7_bert_error [-- --runs 5]
+
+use simmat::approx::{self, rel_fro_error_dense, SmsConfig};
+use simmat::data::GluePreset;
+use simmat::runtime::shared_runtime;
+use simmat::sim::DenseOracle;
+use simmat::util::cli::Args;
+use simmat::util::report::{pm, Report};
+use simmat::util::rng::Rng;
+use simmat::util::stats;
+use simmat::workloads;
+
+fn main() {
+    let args = Args::parse_env();
+    let runs = args.get_usize("runs", 5);
+    let scale = args.get_f64("scale", workloads::bench_scale());
+    let mut rep = Report::new("table7_bert_error");
+    rep.line("Paper Table 7: relative Frobenius error vs raw cross-encoder outputs.");
+    rep.line(format!("runs={runs}, scale={scale}"));
+    rep.line("");
+
+    let rt = shared_runtime().expect("run `make artifacts` first");
+    let mut rng = Rng::new(77);
+    let methods = ["SMS-Nys", "StaCUR", "SiCUR"];
+    let mut csv = Vec::new();
+
+    for preset in GluePreset::ALL {
+        let w = workloads::glue_workload(rt.clone(), preset, scale, 12 + preset as u64).unwrap();
+        let n = w.k_sym.rows;
+        let ranks = [n / 12, n / 8, n / 4];
+        rep.line(format!("## {} (n={n})", preset.name()));
+        let mut rows = Vec::new();
+        for method in methods {
+            let mut row = vec![method.to_string()];
+            for &s in &ranks {
+                let s = s.max(4);
+                let mut errs = Vec::new();
+                for _ in 0..runs {
+                    let oracle = DenseOracle::new(w.k_sym.clone());
+                    let f = match method {
+                        "SMS-Nys" => approx::sms_nystrom(&oracle, s, SmsConfig::default(), &mut rng)
+                            .map(|r| r.factored),
+                        "StaCUR" => approx::stacur(&oracle, s, true, &mut rng),
+                        "SiCUR" => approx::sicur(&oracle, (s / 2).max(2), 2.0, &mut rng),
+                        _ => unreachable!(),
+                    };
+                    if let Ok(f) = f {
+                        // Error against the RAW (asymmetric) matrix, as in
+                        // the paper's Table 7.
+                        errs.push(rel_fro_error_dense(&w.k_raw, &f.to_dense()));
+                    }
+                }
+                row.push(format!("{}@{s}", pm(stats::mean(&errs), stats::std_dev(&errs), 4)));
+                csv.push(vec![
+                    preset.name().into(),
+                    method.into(),
+                    s.to_string(),
+                    format!("{:.6}", stats::mean(&errs)),
+                ]);
+            }
+            rows.push(row);
+        }
+        // Exact rows.
+        let sym_err = rel_fro_error_dense(&w.k_raw, &w.k_sym);
+        rows.push(vec!["BERT(raw)".into(), "0.0".into(), String::new(), String::new()]);
+        rows.push(vec![
+            "SYM-BERT".into(),
+            format!("{sym_err:.4}"),
+            String::new(),
+            String::new(),
+        ]);
+        csv.push(vec![preset.name().into(), "SYM-BERT".into(), "exact".into(), format!("{sym_err:.6}")]);
+        rep.table(&["Method", "Rank1", "Rank2", "Rank3"], &rows);
+    }
+    rep.csv("table7_series", &["dataset", "method", "rank", "rel_fro_err"], &csv);
+    let path = rep.write().unwrap();
+    println!("\nreport -> {}", path.display());
+}

@@ -1,0 +1,67 @@
+//! Approximation-error metrics: relative Frobenius error ‖K − K̃‖_F/‖K‖_F
+//! (the paper's Fig. 3 / Table 7 measure), computed blockwise against the
+//! factored form without materializing K̃ separately.
+
+use super::factored::Factored;
+use crate::linalg::{dot, Mat};
+
+/// ‖K − L·Rᵀ‖_F / ‖K‖_F.
+pub fn rel_fro_error(k: &Mat, f: &Factored) -> f64 {
+    assert_eq!(k.rows, f.n());
+    let n = k.rows;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..n {
+        let li = f.left.row(i);
+        let krow = k.row(i);
+        for j in 0..n {
+            let approx = dot(li, f.right_t.row(j));
+            let diff = krow[j] - approx;
+            num += diff * diff;
+            den += krow[j] * krow[j];
+        }
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Relative Frobenius error between two dense matrices.
+pub fn rel_fro_error_dense(k: &Mat, approx: &Mat) -> f64 {
+    let num = k.sub(approx).frobenius_norm();
+    num / k.frobenius_norm().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_for_exact_factorization() {
+        let mut rng = Rng::new(1);
+        let l = Mat::gaussian(10, 3, &mut rng);
+        let r = Mat::gaussian(10, 3, &mut rng);
+        let k = l.matmul_nt(&r);
+        let f = Factored::new(l, r);
+        assert!(rel_fro_error(&k, &f) < 1e-12);
+    }
+
+    #[test]
+    fn one_for_zero_approximation() {
+        let mut rng = Rng::new(2);
+        let k = Mat::gaussian(8, 8, &mut rng);
+        let f = Factored::new(Mat::zeros(8, 2), Mat::zeros(8, 2));
+        assert!((rel_fro_error(&k, &f) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_and_factored_agree() {
+        let mut rng = Rng::new(3);
+        let k = Mat::gaussian(12, 12, &mut rng);
+        let l = Mat::gaussian(12, 4, &mut rng);
+        let r = Mat::gaussian(12, 4, &mut rng);
+        let f = Factored::new(l, r);
+        let e1 = rel_fro_error(&k, &f);
+        let e2 = rel_fro_error_dense(&k, &f.to_dense());
+        assert!((e1 - e2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,143 @@
+//! Factored approximation K̃ = L · Rᵀ — the object every sublinear method
+//! produces and the serving layer queries. Storing R transposed (n x r)
+//! keeps both entry operands row-contiguous, which is the hot layout for
+//! the coordinator's Entry/Row/TopK queries.
+
+use crate::linalg::{dot, Mat};
+
+#[derive(Clone, Debug)]
+pub struct Factored {
+    /// n x r.
+    pub left: Mat,
+    /// n x r — the transposed right factor; K̃ = left · right_t^T.
+    pub right_t: Mat,
+    /// True when left == right_t semantically (Nyström-style K̃ = Z Zᵀ);
+    /// rows of `left` are then usable as point embeddings directly.
+    pub symmetric: bool,
+}
+
+impl Factored {
+    pub fn from_z(z: Mat) -> Factored {
+        Factored {
+            right_t: z.clone(),
+            left: z,
+            symmetric: true,
+        }
+    }
+
+    pub fn new(left: Mat, right_t: Mat) -> Factored {
+        assert_eq!(left.rows, right_t.rows, "factor row-count mismatch");
+        assert_eq!(left.cols, right_t.cols, "factor rank mismatch");
+        Factored {
+            left,
+            right_t,
+            symmetric: false,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.left.rows
+    }
+
+    pub fn rank(&self) -> usize {
+        self.left.cols
+    }
+
+    /// Approximate similarity K̃_ij.
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        dot(self.left.row(i), self.right_t.row(j))
+    }
+
+    /// Full approximate row K̃_{i,·}.
+    pub fn row(&self, i: usize) -> Vec<f64> {
+        let li = self.left.row(i);
+        (0..self.n()).map(|j| dot(li, self.right_t.row(j))).collect()
+    }
+
+    /// Embedding of point i (rows of the left factor; for symmetric
+    /// factorizations these are the paper's document embeddings Z_i).
+    pub fn embedding(&self, i: usize) -> &[f64] {
+        self.left.row(i)
+    }
+
+    /// All embeddings as a matrix view (copy).
+    pub fn embeddings(&self) -> Mat {
+        self.left.clone()
+    }
+
+    /// Top-k most similar indices to `i` (excluding i itself). Partial
+    /// selection (select_nth) instead of a full sort — O(n + k log k)
+    /// after the O(n·r) row reconstruction (§Perf).
+    pub fn top_k(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
+        let row = self.row(i);
+        let mut idx: Vec<usize> = (0..self.n()).filter(|&j| j != i).collect();
+        let k = k.min(idx.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                row[b].partial_cmp(&row[a]).unwrap()
+            });
+            idx.truncate(k);
+        }
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        idx.into_iter().map(|j| (j, row[j])).collect()
+    }
+
+    /// Materialize the dense approximation (evaluation only — Ω(n² r)).
+    pub fn to_dense(&self) -> Mat {
+        self.left.matmul_nt(&self.right_t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn entry_matches_dense() {
+        let mut rng = Rng::new(1);
+        let l = Mat::gaussian(8, 3, &mut rng);
+        let r = Mat::gaussian(8, 3, &mut rng);
+        let f = Factored::new(l, r);
+        let d = f.to_dense();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((f.entry(i, j) - d.get(i, j)).abs() < 1e-12);
+            }
+            let row = f.row(i);
+            for j in 0..8 {
+                assert!((row[j] - d.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn from_z_is_symmetric() {
+        let mut rng = Rng::new(2);
+        let z = Mat::gaussian(6, 2, &mut rng);
+        let f = Factored::from_z(z);
+        assert!(f.symmetric);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((f.entry(i, j) - f.entry(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_sorted_and_excludes_self() {
+        let mut rng = Rng::new(3);
+        let z = Mat::gaussian(10, 4, &mut rng);
+        let f = Factored::from_z(z);
+        let top = f.top_k(3, 4);
+        assert_eq!(top.len(), 4);
+        assert!(top.iter().all(|&(j, _)| j != 3));
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Sublinear similarity-matrix approximation — the paper's algorithmic
+//! layer. Every method consumes a [`crate::sim::SimOracle`] and produces a
+//! [`Factored`] low-rank approximation with O(n·s) oracle calls:
+//!
+//! | method | paper | oracle calls |
+//! |---|---|---|
+//! | [`nystrom::nystrom`] | Williams & Seeger 2001, Eq. (1) | n·s |
+//! | [`sms::sms_nystrom`] | **Algorithm 1 (contribution)** | n·s1 + s2² |
+//! | [`cur::skeleton`] | Goreinov et al. 1997 | 2·n·s |
+//! | [`cur::sicur`] | Sec. 3 (SiCUR) | n·s2 |
+//! | [`cur::stacur`] | Sec. 3 (StaCUR) | n·s (s) / 2·n·s (d) |
+//! | [`optimal::optimal_rank_k`] | 'Optimal' baseline | n² (cap) |
+//! | [`wme`] | Wu et al. 2018 baseline | n·R |
+
+pub mod cur;
+pub mod error;
+pub mod factored;
+pub mod nystrom;
+pub mod optimal;
+pub mod sampling;
+pub mod sms;
+pub mod wme;
+
+pub use cur::{cur_embeddings, sicur, skeleton, stacur};
+pub use error::{rel_fro_error, rel_fro_error_dense};
+pub use factored::Factored;
+pub use nystrom::{nystrom, nystrom_psd_embedding};
+pub use optimal::{optimal_embeddings, optimal_rank_k};
+pub use sampling::LandmarkPlan;
+pub use sms::{sms_nystrom, SmsConfig, SmsResult};

@@ -1,0 +1,92 @@
+//! 'Optimal' baseline: the best rank-k approximation of the fully
+//! materialized matrix (eigendecomposition for symmetric inputs). Ω(n²)
+//! oracle calls + O(n³) — a quality cap for the sublinear methods
+//! (Table 1's "Optimal" row), never a production path.
+
+use super::factored::Factored;
+use crate::linalg::{eigh, Mat};
+
+/// Best rank-k approximation of a symmetric matrix by eigenvalue
+/// magnitude: K̃ = Q_k Λ_k Q_kᵀ.
+pub fn optimal_rank_k(k_dense: &Mat, k: usize) -> Result<Factored, String> {
+    let e = eigh(&k_dense.symmetrized())?;
+    let n = e.vals.len();
+    let k = k.min(n);
+    // Indices of the k largest-|λ| eigenvalues.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| e.vals[b].abs().partial_cmp(&e.vals[a].abs()).unwrap());
+    order.truncate(k);
+    let q = e.vecs.select_cols(&order); // n x k
+    let mut ql = q.clone();
+    for (jj, &j) in order.iter().enumerate() {
+        let lam = e.vals[j];
+        for i in 0..n {
+            let v = ql.get(i, jj) * lam;
+            ql.set(i, jj, v);
+        }
+    }
+    Ok(Factored::new(ql, q))
+}
+
+/// Optimal embeddings for downstream tasks: columns scaled by |λ|^{1/2}
+/// (handles indefinite spectra by magnitude).
+pub fn optimal_embeddings(k_dense: &Mat, k: usize) -> Result<Mat, String> {
+    let e = eigh(&k_dense.symmetrized())?;
+    let n = e.vals.len();
+    let k = k.min(n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| e.vals[b].abs().partial_cmp(&e.vals[a].abs()).unwrap());
+    order.truncate(k);
+    let mut q = e.vecs.select_cols(&order);
+    for (jj, &j) in order.iter().enumerate() {
+        let s = e.vals[j].abs().sqrt();
+        for i in 0..n {
+            let v = q.get(i, jj) * s;
+            q.set(i, jj, v);
+        }
+    }
+    Ok(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::error::rel_fro_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_at_full_rank() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(15, 15, &mut rng);
+        let k = a.add(&a.transpose()).scale(0.5);
+        let f = optimal_rank_k(&k, 15).unwrap();
+        assert!(rel_fro_error(&k, &f) < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_rank() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(20, 20, &mut rng);
+        let k = a.add(&a.transpose()).scale(0.5);
+        let mut prev = f64::INFINITY;
+        for r in [2, 5, 10, 20] {
+            let err = rel_fro_error(&k, &optimal_rank_k(&k, r).unwrap());
+            assert!(err <= prev + 1e-12, "rank {r}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn captures_negative_eigenvalues() {
+        // Indefinite: diag(5, -4, 0.1). Rank-2 optimal keeps 5 and -4.
+        let mut k = Mat::zeros(3, 3);
+        k.set(0, 0, 5.0);
+        k.set(1, 1, -4.0);
+        k.set(2, 2, 0.1);
+        let f = optimal_rank_k(&k, 2).unwrap();
+        let d = f.to_dense();
+        assert!((d.get(0, 0) - 5.0).abs() < 1e-9);
+        assert!((d.get(1, 1) + 4.0).abs() < 1e-9);
+        assert!(d.get(2, 2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,78 @@
+//! Landmark sampling plans. All methods in the paper sample uniformly
+//! without replacement (leverage-score sampling needs Ω(n²) work — Sec. 3).
+
+use crate::util::rng::Rng;
+
+/// Two-stage landmark plan: S1 ⊆ S2 with |S1| = s1, |S2| = s2 (the nested
+/// sampling used by SMS-Nyström and SiCUR; Alg. 1 lines 2-3).
+#[derive(Clone, Debug)]
+pub struct LandmarkPlan {
+    pub s1: Vec<usize>,
+    pub s2: Vec<usize>,
+}
+
+impl LandmarkPlan {
+    /// Nested: draw S2 uniformly from [0,n), then S1 uniformly from S2.
+    pub fn nested(n: usize, s1: usize, s2: usize, rng: &mut Rng) -> LandmarkPlan {
+        assert!(s1 <= s2 && s2 <= n, "need s1 <= s2 <= n (s1={s1}, s2={s2}, n={n})");
+        let big = rng.sample_indices(n, s2);
+        let small = rng.sample_from(&big, s1);
+        LandmarkPlan { s1: small, s2: big }
+    }
+
+    /// Independent: S1 and S2 drawn independently (skeleton / StaCUR(d)).
+    pub fn independent(n: usize, s1: usize, s2: usize, rng: &mut Rng) -> LandmarkPlan {
+        assert!(s1 <= n && s2 <= n);
+        LandmarkPlan {
+            s1: rng.sample_indices(n, s1),
+            s2: rng.sample_indices(n, s2),
+        }
+    }
+
+    /// Shared: S1 == S2 (classic Nyström, StaCUR(s)).
+    pub fn shared(n: usize, s: usize, rng: &mut Rng) -> LandmarkPlan {
+        let idx = rng.sample_indices(n, s);
+        LandmarkPlan {
+            s1: idx.clone(),
+            s2: idx,
+        }
+    }
+
+    pub fn is_nested(&self) -> bool {
+        self.s1.iter().all(|i| self.s2.contains(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn nested_invariants() {
+        check("landmark-nested", 25, |rng| {
+            let n = 10 + rng.below(200);
+            let s2 = 2 + rng.below(n - 2);
+            let s1 = 1 + rng.below(s2);
+            let p = LandmarkPlan::nested(n, s1, s2, rng);
+            assert_eq!(p.s1.len(), s1);
+            assert_eq!(p.s2.len(), s2);
+            assert!(p.is_nested(), "S1 must be a subset of S2");
+            let mut sorted = p.s2.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), s2, "S2 has duplicates");
+            assert!(p.s2.iter().all(|&i| i < n));
+        });
+    }
+
+    #[test]
+    fn shared_is_identical() {
+        check("landmark-shared", 10, |rng| {
+            let n = 5 + rng.below(50);
+            let s = 1 + rng.below(n);
+            let p = LandmarkPlan::shared(n, s, rng);
+            assert_eq!(p.s1, p.s2);
+        });
+    }
+}

@@ -1,0 +1,259 @@
+//! Dynamic batcher: the vLLM-router-style component that packs incoming
+//! similarity requests into the fixed batch shape the AOT artifact was
+//! lowered for, flushing on size or deadline.
+//!
+//! Two faces:
+//! * [`BatchingOracle`] — synchronous facade used by the approximation
+//!   algorithms' bulk column assembly (already-batched workloads);
+//!   records batching metrics.
+//! * [`BatchService`] — threaded request loop for interactive serving:
+//!   callers submit (i, j) requests over a channel, a worker thread owned
+//!   by the service coalesces them and replies per-request.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::sim::SimOracle;
+
+use super::metrics::Metrics;
+
+/// Synchronous batching wrapper: chunks `eval_batch` into `batch`-sized
+/// oracle calls (mirroring the PJRT execution shape) and records metrics.
+pub struct BatchingOracle<'a> {
+    inner: &'a dyn SimOracle,
+    batch: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+impl<'a> BatchingOracle<'a> {
+    pub fn new(inner: &'a dyn SimOracle, batch: usize, metrics: Arc<Metrics>) -> Self {
+        assert!(batch > 0);
+        BatchingOracle {
+            inner,
+            batch,
+            metrics,
+        }
+    }
+}
+
+impl SimOracle for BatchingOracle<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(self.batch) {
+            let t0 = Instant::now();
+            out.extend(self.inner.eval_batch(chunk));
+            self.metrics.record_batch(chunk.len(), self.batch);
+            self.metrics.record_latency(t0.elapsed());
+        }
+        out
+    }
+}
+
+/// A single in-flight request.
+struct Request {
+    pair: (usize, usize),
+    reply: Sender<f64>,
+    submitted: Instant,
+}
+
+/// Handle for submitting requests to a running [`BatchService`].
+#[derive(Clone)]
+pub struct BatchClient {
+    tx: Sender<Request>,
+}
+
+impl BatchClient {
+    /// Evaluate a single similarity, blocking until the batch containing
+    /// it flushes.
+    pub fn eval(&self, i: usize, j: usize) -> f64 {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                pair: (i, j),
+                reply: reply_tx,
+                submitted: Instant::now(),
+            })
+            .expect("batch service stopped");
+        reply_rx.recv().expect("batch service dropped reply")
+    }
+
+    /// Fire off many requests and collect them in order.
+    pub fn eval_many(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let receivers: Vec<Receiver<f64>> = pairs
+            .iter()
+            .map(|&(i, j)| {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                self.tx
+                    .send(Request {
+                        pair: (i, j),
+                        reply: reply_tx,
+                        submitted: Instant::now(),
+                    })
+                    .expect("batch service stopped");
+                reply_rx
+            })
+            .collect();
+        receivers
+            .into_iter()
+            .map(|r| r.recv().expect("batch service dropped reply"))
+            .collect()
+    }
+}
+
+/// Threaded dynamic batcher that owns an oracle.
+pub struct BatchService {
+    client: BatchClient,
+    handle: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl BatchService {
+    /// Spawn the worker. `batch` is the flush size (the artifact batch
+    /// shape), `deadline` the max time the oldest request waits before a
+    /// partial batch flushes.
+    pub fn spawn<O>(oracle: O, batch: usize, deadline: Duration) -> BatchService
+    where
+        O: SimOracle + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let handle = std::thread::spawn(move || worker_loop(oracle, rx, batch, deadline, m));
+        BatchService {
+            client: BatchClient { tx },
+            handle: Some(handle),
+            metrics,
+        }
+    }
+
+    pub fn client(&self) -> BatchClient {
+        self.client.clone()
+    }
+}
+
+impl Drop for BatchService {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker after it drains the queue.
+        let (tx, _) = mpsc::channel();
+        self.client = BatchClient { tx };
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop<O: SimOracle>(
+    oracle: O,
+    rx: Receiver<Request>,
+    batch: usize,
+    deadline: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let mut pending: Vec<Request> = Vec::with_capacity(batch);
+    loop {
+        // Block for the first request of the batch.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => return, // all clients dropped
+            }
+        }
+        // Fill until size or the oldest request's deadline.
+        let flush_at = pending[0].submitted + deadline;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= flush_at {
+                break;
+            }
+            match rx.recv_timeout(flush_at - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Execute the batch.
+        let pairs: Vec<(usize, usize)> = pending.iter().map(|r| r.pair).collect();
+        let t0 = Instant::now();
+        let vals = oracle.eval_batch(&pairs);
+        metrics.record_batch(pairs.len(), batch);
+        metrics.record_latency(t0.elapsed());
+        for (req, val) in pending.drain(..).zip(vals) {
+            let _ = req.reply.send(val); // receiver may have given up
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::sim::DenseOracle;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn toy_oracle(n: usize, seed: u64) -> DenseOracle {
+        let mut rng = Rng::new(seed);
+        DenseOracle::new(Mat::gaussian(n, n, &mut rng))
+    }
+
+    #[test]
+    fn batching_oracle_matches_direct() {
+        let o = toy_oracle(20, 1);
+        let metrics = Arc::new(Metrics::new());
+        let b = BatchingOracle::new(&o, 7, metrics.clone());
+        let pairs: Vec<(usize, usize)> = (0..20).map(|i| (i, (i * 3) % 20)).collect();
+        assert_eq!(b.eval_batch(&pairs), o.eval_batch(&pairs));
+        // 20 pairs at batch 7 -> 3 batches, 1 padded slot.
+        assert_eq!(metrics.batches.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(metrics.oracle_calls.load(std::sync::atomic::Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn service_answers_every_request_correctly() {
+        // Property: no request dropped, duplicated, or mis-routed under
+        // concurrent submission — the key coordinator invariant.
+        check("batch-service-routing", 5, |rng| {
+            let n = 12;
+            let o = toy_oracle(n, rng.next_u64());
+            let reference = o.k.clone();
+            let svc = BatchService::spawn(o, 8, Duration::from_millis(2));
+            let mut joins = Vec::new();
+            for t in 0..4 {
+                let client = svc.client();
+                let k = reference.clone();
+                let mut trng = rng.fork();
+                joins.push(std::thread::spawn(move || {
+                    for q in 0..25 {
+                        let i = trng.below(n);
+                        let j = trng.below(n);
+                        let got = client.eval(i, j);
+                        assert_eq!(got, k.get(i, j), "thread {t} query {q}");
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn eval_many_preserves_order() {
+        let o = toy_oracle(10, 3);
+        let k = o.k.clone();
+        let svc = BatchService::spawn(o, 16, Duration::from_millis(1));
+        let pairs: Vec<(usize, usize)> = (0..30).map(|i| (i % 10, (i * 7) % 10)).collect();
+        let got = svc.client().eval_many(&pairs);
+        for (v, &(i, j)) in got.iter().zip(&pairs) {
+            assert_eq!(*v, k.get(i, j));
+        }
+        // Coalescing should have produced far fewer batches than requests.
+        assert!(svc.metrics.batches.load(std::sync::atomic::Ordering::Relaxed) <= 30);
+    }
+}

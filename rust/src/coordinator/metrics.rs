@@ -1,0 +1,121 @@
+//! Serving metrics: oracle calls, batch executions, padding waste, and a
+//! fixed-bucket latency histogram. Lock-free (atomics) so the batcher's
+//! hot loop never contends.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds.
+const BUCKETS_US: [u64; 10] = [50, 100, 250, 500, 1000, 2500, 5000, 10_000, 50_000, 250_000];
+
+#[derive(Default)]
+pub struct Metrics {
+    pub oracle_calls: AtomicU64,
+    pub batches: AtomicU64,
+    /// Slots occupied by padding (batch efficiency = 1 - padded/total).
+    pub padded_slots: AtomicU64,
+    pub total_slots: AtomicU64,
+    pub queries: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
+    latency_sum_us: AtomicU64,
+    latency_count: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, real: usize, capacity: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.oracle_calls.fetch_add(real as u64, Ordering::Relaxed);
+        self.total_slots.fetch_add(capacity as u64, Ordering::Relaxed);
+        self.padded_slots
+            .fetch_add((capacity - real) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_query(&self) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let c = self.latency_count.load(Ordering::Relaxed);
+        if c == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile from the histogram (upper bound of the bucket).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(1_000_000);
+            }
+        }
+        1_000_000
+    }
+
+    pub fn batch_efficiency(&self) -> f64 {
+        let total = self.total_slots.load(Ordering::Relaxed);
+        if total == 0 {
+            return 1.0;
+        }
+        1.0 - self.padded_slots.load(Ordering::Relaxed) as f64 / total as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "oracle_calls={} batches={} batch_efficiency={:.3} queries={} mean_latency={:.1}us p95={}us",
+            self.oracle_calls.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.batch_efficiency(),
+            self.queries.load(Ordering::Relaxed),
+            self.mean_latency_us(),
+            self.latency_quantile_us(0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_efficiency_tracks_padding() {
+        let m = Metrics::new();
+        m.record_batch(48, 64);
+        m.record_batch(64, 64);
+        assert_eq!(m.oracle_calls.load(Ordering::Relaxed), 112);
+        assert!((m.batch_efficiency() - 112.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_quantiles_monotone() {
+        let m = Metrics::new();
+        for us in [10u64, 80, 300, 700, 2000, 20_000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert!(m.latency_quantile_us(0.5) <= m.latency_quantile_us(0.95));
+        assert!(m.mean_latency_us() > 0.0);
+    }
+}

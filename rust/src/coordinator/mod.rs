@@ -1,0 +1,17 @@
+//! L3 coordinator — the serving plane around the sublinear approximation:
+//! landmark scheduling, dynamic batching into artifact shapes, the query
+//! router over the factored store, and serving metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+pub mod tiles;
+
+pub use batcher::{BatchClient, BatchService, BatchingOracle};
+pub use metrics::Metrics;
+pub use router::{route, Query, Response};
+pub use scheduler::{schedule, SampleMode, Schedule};
+pub use server::{BuildStats, Method, SimilarityService};
+pub use tiles::TileServer;

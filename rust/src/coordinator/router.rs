@@ -1,0 +1,121 @@
+//! Query router: serves similarity queries against the factored store,
+//! falling back to the exact oracle only when explicitly asked. This is
+//! the read path after an approximation is built — all O(r) per entry,
+//! no Δ evaluations.
+
+use crate::approx::Factored;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Query {
+    /// K̃_ij.
+    Entry(usize, usize),
+    /// Full approximate row i.
+    Row(usize),
+    /// k nearest neighbours of i under K̃.
+    TopK(usize, usize),
+    /// Embedding of point i (left-factor row).
+    Embed(usize),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Scalar(f64),
+    Vector(Vec<f64>),
+    Ranked(Vec<(usize, f64)>),
+}
+
+#[derive(Debug)]
+pub enum RouteError {
+    OutOfRange { index: usize, n: usize },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::OutOfRange { index, n } => {
+                write!(f, "index {index} out of range for n={n}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+pub fn route(f: &Factored, q: &Query) -> Result<Response, RouteError> {
+    let n = f.n();
+    let check = |i: usize| {
+        if i < n {
+            Ok(())
+        } else {
+            Err(RouteError::OutOfRange { index: i, n })
+        }
+    };
+    match *q {
+        Query::Entry(i, j) => {
+            check(i)?;
+            check(j)?;
+            Ok(Response::Scalar(f.entry(i, j)))
+        }
+        Query::Row(i) => {
+            check(i)?;
+            Ok(Response::Vector(f.row(i)))
+        }
+        Query::TopK(i, k) => {
+            check(i)?;
+            Ok(Response::Ranked(f.top_k(i, k.min(n - 1))))
+        }
+        Query::Embed(i) => {
+            check(i)?;
+            Ok(Response::Vector(f.embedding(i).to_vec()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    fn toy() -> Factored {
+        let mut rng = Rng::new(1);
+        Factored::from_z(Mat::gaussian(8, 3, &mut rng))
+    }
+
+    #[test]
+    fn routes_all_query_kinds() {
+        let f = toy();
+        match route(&f, &Query::Entry(1, 2)).unwrap() {
+            Response::Scalar(v) => assert_eq!(v, f.entry(1, 2)),
+            _ => panic!(),
+        }
+        match route(&f, &Query::Row(3)).unwrap() {
+            Response::Vector(v) => assert_eq!(v, f.row(3)),
+            _ => panic!(),
+        }
+        match route(&f, &Query::TopK(0, 3)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r.len(), 3),
+            _ => panic!(),
+        }
+        match route(&f, &Query::Embed(5)).unwrap() {
+            Response::Vector(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let f = toy();
+        assert!(route(&f, &Query::Entry(8, 0)).is_err());
+        assert!(route(&f, &Query::Row(100)).is_err());
+    }
+
+    #[test]
+    fn topk_clamps_k() {
+        let f = toy();
+        match route(&f, &Query::TopK(0, 99)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r.len(), 7),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Landmark scheduler: decides *which* O(n·s) oracle evaluations to issue
+//! and in what order. Plans the two-stage sample (S1 ⊆ S2), dedupes the
+//! overlap between the column block K·S1 and the shift submatrix S2ᵀK S2,
+//! and chunks the work into artifact-batch-aligned jobs.
+
+use crate::approx::LandmarkPlan;
+use crate::util::rng::Rng;
+
+/// A chunk of pair evaluations, aligned to the artifact batch size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Job {
+    pub pairs: Vec<(usize, usize)>,
+}
+
+/// The full schedule for an SMS-Nyström / SiCUR style build.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub plan: LandmarkPlan,
+    pub jobs: Vec<Job>,
+    /// Total unique pair evaluations (the similarity-computation budget).
+    pub total_pairs: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum SampleMode {
+    /// S1 ⊆ S2 (SMS-Nyström, SiCUR).
+    Nested,
+    /// S1, S2 independent (skeleton, StaCUR(d)).
+    Independent,
+    /// S1 = S2 (classic Nyström, StaCUR(s)).
+    Shared,
+}
+
+/// Build a schedule covering the column block K[:, S2] plus the submatrix
+/// K[S2, S2] (the SMS shift estimate), deduplicated: submatrix entries
+/// whose row is already in [0, n) column coverage are *not* duplicated —
+/// the column block K[:, S2] already contains all rows, so the submatrix
+/// needs no extra evaluations at all when columns cover S2. For plans
+/// where only K[:, S1] is assembled (classic SMS), the extra
+/// (s2² - s1·s2) submatrix entries are scheduled explicitly.
+pub fn schedule(
+    n: usize,
+    s1: usize,
+    s2: usize,
+    mode: SampleMode,
+    cover_all_s2_columns: bool,
+    batch: usize,
+    rng: &mut Rng,
+) -> Schedule {
+    let plan = match mode {
+        SampleMode::Nested => LandmarkPlan::nested(n, s1, s2, rng),
+        SampleMode::Independent => LandmarkPlan::independent(n, s1, s2, rng),
+        SampleMode::Shared => LandmarkPlan::shared(n, s1, rng),
+    };
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    if cover_all_s2_columns {
+        // K[:, S2] — covers the submatrix too.
+        for i in 0..n {
+            for &j in &plan.s2 {
+                pairs.push((i, j));
+            }
+        }
+    } else {
+        // K[:, S1] + the S2 submatrix entries not already covered.
+        for i in 0..n {
+            for &j in &plan.s1 {
+                pairs.push((i, j));
+            }
+        }
+        for &i in &plan.s2 {
+            for &j in &plan.s2 {
+                if !plan.s1.contains(&j) {
+                    pairs.push((i, j));
+                }
+            }
+        }
+    }
+    let total_pairs = pairs.len();
+    let jobs = pairs
+        .chunks(batch)
+        .map(|c| Job { pairs: c.to_vec() })
+        .collect();
+    Schedule {
+        plan,
+        jobs,
+        total_pairs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use std::collections::HashSet;
+
+    #[test]
+    fn schedule_covers_columns_without_duplicates() {
+        check("schedule-coverage", 15, |rng| {
+            let n = 20 + rng.below(60);
+            let s1 = 2 + rng.below(6);
+            let s2 = s1 * 2;
+            let batch = 1 + rng.below(64);
+            let sch = schedule(n, s1, s2, SampleMode::Nested, true, batch, rng);
+            let mut seen = HashSet::new();
+            for job in &sch.jobs {
+                assert!(job.pairs.len() <= batch);
+                for &p in &job.pairs {
+                    assert!(seen.insert(p), "duplicate pair {p:?}");
+                }
+            }
+            // Every (i, s2-landmark) pair present.
+            for i in 0..n {
+                for &j in &sch.plan.s2 {
+                    assert!(seen.contains(&(i, j)));
+                }
+            }
+            assert_eq!(sch.total_pairs, n * s2);
+        });
+    }
+
+    #[test]
+    fn sms_mode_schedules_shift_extras() {
+        check("schedule-sms-extras", 10, |rng| {
+            let n = 30 + rng.below(40);
+            let s1 = 3 + rng.below(5);
+            let s2 = 2 * s1;
+            let sch = schedule(n, s1, s2, SampleMode::Nested, false, 32, rng);
+            // n·s1 column pairs + s2·(s2-s1) submatrix extras.
+            assert_eq!(sch.total_pairs, n * s1 + s2 * (s2 - s1));
+            let seen: HashSet<(usize, usize)> = sch
+                .jobs
+                .iter()
+                .flat_map(|j| j.pairs.iter().copied())
+                .collect();
+            // Submatrix fully covered by columns + extras.
+            for &i in &sch.plan.s2 {
+                for &j in &sch.plan.s2 {
+                    let covered = seen.contains(&(i, j)) || sch.plan.s1.contains(&j);
+                    assert!(covered, "submatrix entry ({i},{j}) uncovered");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn shared_mode_uses_s1_only() {
+        let mut rng = Rng::new(5);
+        let sch = schedule(50, 8, 16, SampleMode::Shared, true, 64, &mut rng);
+        assert_eq!(sch.plan.s1, sch.plan.s2);
+        assert_eq!(sch.total_pairs, 50 * 8);
+    }
+}

@@ -1,0 +1,200 @@
+//! The similarity service: ties scheduler + batcher + approximation +
+//! router together. `SimilarityService::build` runs the sublinear build
+//! (O(n·s) oracle calls through the dynamic batcher), after which queries
+//! are served from the factored store with zero oracle traffic.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::approx::{self, Factored, SmsConfig};
+use crate::sim::{CountingOracle, SimOracle};
+use crate::util::rng::Rng;
+
+use super::batcher::BatchingOracle;
+use super::metrics::Metrics;
+use super::router::{route, Query, Response, RouteError};
+
+/// Which approximation the service builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Nystrom,
+    SmsNystrom,
+    SmsNystromRescaled,
+    Skeleton,
+    SiCur,
+    StaCurShared,
+    StaCurIndependent,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::Nystrom,
+        Method::SmsNystrom,
+        Method::SmsNystromRescaled,
+        Method::Skeleton,
+        Method::SiCur,
+        Method::StaCurShared,
+        Method::StaCurIndependent,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Nystrom => "Nystrom",
+            Method::SmsNystrom => "SMS-Nystrom",
+            Method::SmsNystromRescaled => "SMS-Nystrom(rescaled)",
+            Method::Skeleton => "Skeleton",
+            Method::SiCur => "SiCUR",
+            Method::StaCurShared => "StaCUR(s)",
+            Method::StaCurIndependent => "StaCUR(d)",
+        }
+    }
+
+    /// Build the factored approximation with `s1` landmarks.
+    pub fn build(
+        &self,
+        oracle: &dyn SimOracle,
+        s1: usize,
+        rng: &mut Rng,
+    ) -> Result<Factored, String> {
+        match self {
+            Method::Nystrom => approx::nystrom(oracle, s1, rng),
+            Method::SmsNystrom => {
+                approx::sms_nystrom(oracle, s1, SmsConfig::default(), rng).map(|r| r.factored)
+            }
+            Method::SmsNystromRescaled => {
+                let cfg = SmsConfig {
+                    rescale: true,
+                    ..SmsConfig::default()
+                };
+                approx::sms_nystrom(oracle, s1, cfg, rng).map(|r| r.factored)
+            }
+            Method::Skeleton => approx::skeleton(oracle, s1, rng),
+            Method::SiCur => approx::sicur(oracle, s1, 2.0, rng),
+            Method::StaCurShared => approx::stacur(oracle, s1, true, rng),
+            Method::StaCurIndependent => approx::stacur(oracle, s1, false, rng),
+        }
+    }
+}
+
+/// Build statistics reported by the service.
+#[derive(Clone, Debug)]
+pub struct BuildStats {
+    pub method: Method,
+    pub n: usize,
+    pub s1: usize,
+    pub oracle_calls: u64,
+    pub build_seconds: f64,
+    /// n² equivalent — the exact-matrix cost this build avoided.
+    pub exact_calls: u64,
+}
+
+impl BuildStats {
+    pub fn savings(&self) -> f64 {
+        1.0 - self.oracle_calls as f64 / self.exact_calls as f64
+    }
+}
+
+pub struct SimilarityService {
+    factored: Factored,
+    pub stats: BuildStats,
+    pub metrics: Arc<Metrics>,
+}
+
+impl SimilarityService {
+    /// Run the sublinear build through the batching pipeline.
+    pub fn build(
+        oracle: &dyn SimOracle,
+        method: Method,
+        s1: usize,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Result<SimilarityService, String> {
+        let metrics = Arc::new(Metrics::new());
+        let counter = CountingOracle::new(oracle);
+        let t0 = Instant::now();
+        let factored = {
+            let batched = BatchingOracle::new(&counter, batch, metrics.clone());
+            method.build(&batched, s1, rng)?
+        };
+        let n = oracle.n();
+        let stats = BuildStats {
+            method,
+            n,
+            s1,
+            oracle_calls: counter.calls(),
+            build_seconds: t0.elapsed().as_secs_f64(),
+            exact_calls: (n * n) as u64,
+        };
+        Ok(SimilarityService {
+            factored,
+            stats,
+            metrics,
+        })
+    }
+
+    pub fn query(&self, q: &Query) -> Result<Response, RouteError> {
+        self.metrics.record_query();
+        route(&self.factored, q)
+    }
+
+    pub fn factored(&self) -> &Factored {
+        &self.factored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::synthetic::NearPsdOracle;
+    use crate::util::prop::check;
+
+    #[test]
+    fn all_methods_build_and_serve() {
+        let mut rng = Rng::new(1);
+        let o = NearPsdOracle::new(60, 8, 0.3, &mut rng);
+        for method in Method::ALL {
+            let svc = SimilarityService::build(&o, method, 12, 64, &mut rng)
+                .unwrap_or_else(|e| panic!("{} failed: {e}", method.name()));
+            assert!(svc.stats.oracle_calls > 0);
+            assert!(
+                svc.stats.oracle_calls < svc.stats.exact_calls,
+                "{} not sublinear",
+                method.name()
+            );
+            match svc.query(&Query::Entry(0, 1)).unwrap() {
+                Response::Scalar(v) => assert!(v.is_finite()),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_budget_property() {
+        // Coordinator invariant: build cost is O(n·s2 + s2²) for every
+        // method, never Ω(n²).
+        check("service-oracle-budget", 6, |rng| {
+            let n = 40 + rng.below(40);
+            let o = NearPsdOracle::new(n, 6, 0.3, rng);
+            let s1 = 4 + rng.below(8);
+            for method in Method::ALL {
+                let svc = SimilarityService::build(&o, method, s1, 32, rng).unwrap();
+                let s2 = 2 * s1;
+                let bound = (2 * n * s2 + s2 * s2) as u64;
+                assert!(
+                    svc.stats.oracle_calls <= bound,
+                    "{}: {} calls > bound {bound}",
+                    method.name(),
+                    svc.stats.oracle_calls
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn savings_reported() {
+        let mut rng = Rng::new(3);
+        let o = NearPsdOracle::new(100, 8, 0.3, &mut rng);
+        let svc = SimilarityService::build(&o, Method::SiCur, 10, 64, &mut rng).unwrap();
+        assert!(svc.stats.savings() > 0.5, "savings {}", svc.stats.savings());
+    }
+}

@@ -1,0 +1,145 @@
+//! Tile server: serves dense K̃ tiles through the AOT `reconstruct_tile`
+//! artifact (Z_rows · Z_colsᵀ on PJRT) instead of the scalar dot-product
+//! path. Bulk consumers (clustering, nearest-neighbour sweeps) pull
+//! row-blocks here; pointwise queries stay on the in-process router.
+//!
+//! Factors of any rank r ≤ the artifact's padded rank are zero-padded;
+//! requested tiles of any shape are covered by stepping the fixed
+//! (rows x cols) artifact tile.
+
+use anyhow::{anyhow, Result};
+
+use crate::approx::Factored;
+use crate::linalg::Mat;
+use crate::runtime::SharedRuntime;
+
+pub struct TileServer {
+    rt: SharedRuntime,
+    /// Zero-padded row-major f32 factors (n x rank_pad).
+    left: Vec<f32>,
+    right: Vec<f32>,
+    n: usize,
+    rank_pad: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+}
+
+impl TileServer {
+    pub fn new(rt: SharedRuntime, f: &Factored) -> Result<TileServer> {
+        let (tile_rows, tile_cols, rank_pad) = {
+            let r = rt.lock().unwrap();
+            let spec = r.manifest.spec("reconstruct_tile")?;
+            (spec.inputs[0][0], spec.inputs[1][0], spec.inputs[0][1])
+        };
+        if f.rank() > rank_pad {
+            return Err(anyhow!(
+                "factor rank {} exceeds artifact rank {rank_pad}",
+                f.rank()
+            ));
+        }
+        let pad = |m: &Mat| -> Vec<f32> {
+            let mut out = vec![0.0f32; m.rows * rank_pad];
+            for i in 0..m.rows {
+                for (j, &v) in m.row(i).iter().enumerate() {
+                    out[i * rank_pad + j] = v as f32;
+                }
+            }
+            out
+        };
+        Ok(TileServer {
+            left: pad(&f.left),
+            right: pad(&f.right_t),
+            n: f.n(),
+            rank_pad,
+            tile_rows,
+            tile_cols,
+            rt,
+        })
+    }
+
+    /// Dense K̃[rows, cols] tile, any shape, computed on PJRT.
+    pub fn tile(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> Result<Mat> {
+        anyhow::ensure!(rows.end <= self.n && cols.end <= self.n, "tile out of range");
+        let (nr, nc) = (rows.len(), cols.len());
+        let mut out = Mat::zeros(nr, nc);
+        let rp = self.rank_pad;
+        for r0 in (0..nr).step_by(self.tile_rows) {
+            for c0 in (0..nc).step_by(self.tile_cols) {
+                // Pack the fixed-shape operands (zero rows beyond range).
+                let mut zr = vec![0.0f32; self.tile_rows * rp];
+                let mut zc = vec![0.0f32; self.tile_cols * rp];
+                let rcount = (nr - r0).min(self.tile_rows);
+                let ccount = (nc - c0).min(self.tile_cols);
+                for i in 0..rcount {
+                    let src = (rows.start + r0 + i) * rp;
+                    zr[i * rp..(i + 1) * rp].copy_from_slice(&self.left[src..src + rp]);
+                }
+                for j in 0..ccount {
+                    let src = (cols.start + c0 + j) * rp;
+                    zc[j * rp..(j + 1) * rp].copy_from_slice(&self.right[src..src + rp]);
+                }
+                let vals = self
+                    .rt
+                    .lock()
+                    .unwrap()
+                    .execute("reconstruct_tile", &[&zr, &zc])?;
+                for i in 0..rcount {
+                    for j in 0..ccount {
+                        out.set(r0 + i, c0 + j, vals[i * self.tile_cols + j] as f64);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Full dense K̃ (bulk consumers: clustering, error evaluation).
+    pub fn full(&self) -> Result<Mat> {
+        self.tile(0..self.n, 0..self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::shared_runtime_subset;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiles_match_in_process_entries() {
+        let Ok(rt) = shared_runtime_subset(&["reconstruct_tile"]) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::new(1);
+        let f = Factored::from_z(Mat::gaussian(300, 37, &mut rng));
+        let srv = TileServer::new(rt, &f).unwrap();
+        // Odd-shaped tile spanning multiple artifact tiles.
+        let t = srv.tile(10..215, 40..300).unwrap();
+        for (ti, i) in (10..215).enumerate().step_by(31) {
+            for (tj, j) in (40..300).enumerate().step_by(29) {
+                let want = f.entry(i, j);
+                let got = t.get(ti, tj);
+                assert!(
+                    (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                    "tile[{ti},{tj}] {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_rank() {
+        let Ok(rt) = shared_runtime_subset(&["reconstruct_tile"]) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::new(2);
+        let rank_pad = {
+            let r = rt.lock().unwrap();
+            r.manifest.spec("reconstruct_tile").unwrap().inputs[0][1]
+        };
+        let f = Factored::from_z(Mat::gaussian(10, rank_pad + 1, &mut rng));
+        assert!(TileServer::new(rt, &f).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Synthetic classification corpora — laptop-scale analogues of the four
+//! WMD datasets in Table 3 of the paper (Twitter, Recipe-L, Ohsumed,
+//! 20News). Class and length statistics mirror the paper at reduced n;
+//! documents are topic-mixture bags of words over a [`WordTable`].
+
+use super::embeddings::WordTable;
+use crate::sim::wmd::Doc;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusPreset {
+    /// 3 classes, short docs (paper: 2176/932, len 9.9).
+    Twitter,
+    /// 20 classes, medium docs (paper: 27841/11933, len 18.5).
+    RecipeL,
+    /// 10 classes, long docs (paper: 3999/5153, len 59.2).
+    Ohsumed,
+    /// 20 classes, long docs (paper: 11293/7528, len 72).
+    News20,
+}
+
+impl CorpusPreset {
+    pub const ALL: [CorpusPreset; 4] = [
+        CorpusPreset::Twitter,
+        CorpusPreset::RecipeL,
+        CorpusPreset::Ohsumed,
+        CorpusPreset::News20,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusPreset::Twitter => "twitter",
+            CorpusPreset::RecipeL => "recipe_l",
+            CorpusPreset::Ohsumed => "ohsumed",
+            CorpusPreset::News20 => "20news",
+        }
+    }
+
+    /// (classes, n_train, n_test, mean_len) at reproduction scale. Lengths
+    /// are capped at the artifact max_len (32); the paper's longer corpora
+    /// map to longer docs within that cap.
+    pub fn spec(&self) -> (usize, usize, usize, f64) {
+        match self {
+            CorpusPreset::Twitter => (3, 420, 180, 10.0),
+            CorpusPreset::RecipeL => (20, 700, 300, 18.0),
+            CorpusPreset::Ohsumed => (10, 520, 220, 26.0),
+            CorpusPreset::News20 => (20, 640, 280, 28.0),
+        }
+    }
+
+    /// Class-topic confusability: how much classes share topics (higher =
+    /// harder task, tuned so downstream accuracies land in the paper's
+    /// relative ordering).
+    fn topic_overlap(&self) -> f64 {
+        match self {
+            CorpusPreset::Twitter => 0.55,
+            CorpusPreset::RecipeL => 0.62,
+            CorpusPreset::Ohsumed => 0.75,
+            CorpusPreset::News20 => 0.58,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub preset: CorpusPreset,
+    pub docs: Vec<Doc>,
+    pub labels: Vec<usize>,
+    pub n_train: usize,
+    pub classes: usize,
+}
+
+impl Corpus {
+    pub fn n(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn train_indices(&self) -> Vec<usize> {
+        (0..self.n_train).collect()
+    }
+
+    pub fn test_indices(&self) -> Vec<usize> {
+        (self.n_train..self.n()).collect()
+    }
+}
+
+/// Generate a corpus. `scale` multiplies the preset sizes (1.0 = default
+/// reproduction scale; tests use ~0.1).
+pub fn generate(preset: CorpusPreset, scale: f64, table: &WordTable, rng: &mut Rng) -> Corpus {
+    let (classes, n_train0, n_test0, mean_len) = preset.spec();
+    let n_train = ((n_train0 as f64 * scale).round() as usize).max(classes * 2);
+    let n_test = ((n_test0 as f64 * scale).round() as usize).max(classes);
+    let overlap = preset.topic_overlap();
+    assert!(table.topics >= classes, "word table needs >= classes topics");
+
+    // Each class draws mostly from its own topic, sometimes from a shared
+    // pool (class % topics), modelling vocabulary overlap.
+    let make_doc = |class: usize, rng: &mut Rng| -> Doc {
+        let len = sample_len(mean_len, rng);
+        let mut words = Vec::with_capacity(len);
+        let mut counts: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+        for _ in 0..len {
+            let topic = if rng.f64() < overlap {
+                rng.below(table.topics)
+            } else {
+                class % table.topics
+            };
+            let w = table.sample_word(topic, rng);
+            *counts.entry(w).or_insert(0.0) += 1.0;
+        }
+        // Bag-of-words: unique words with normalized counts (nBOW of
+        // Kusner et al. 2015).
+        let total: f64 = counts.values().sum();
+        let mut weights = Vec::with_capacity(counts.len());
+        for (w, c) in counts {
+            words.push(table.vectors[w].clone());
+            weights.push(c / total);
+        }
+        Doc { words, weights }
+    };
+
+    let mut docs = Vec::with_capacity(n_train + n_test);
+    let mut labels = Vec::with_capacity(n_train + n_test);
+    for split_n in [n_train, n_test] {
+        for i in 0..split_n {
+            let class = i % classes; // balanced
+            docs.push(make_doc(class, rng));
+            labels.push(class);
+        }
+    }
+    Corpus {
+        preset,
+        docs,
+        labels,
+        n_train,
+        classes,
+    }
+}
+
+/// Document length: clipped Poisson-ish around the mean, capped at the
+/// artifact max_len (32) and at least 2.
+fn sample_len(mean: f64, rng: &mut Rng) -> usize {
+    let jitter = 1.0 + 0.35 * rng.normal();
+    ((mean * jitter).round() as isize).clamp(2, 32) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::wmd::{sinkhorn_cost, SinkhornCfg};
+
+    #[test]
+    fn corpus_shapes_and_balance() {
+        let mut rng = Rng::new(1);
+        let table = WordTable::new(20, 30, 16, 0.3, &mut rng);
+        let c = generate(CorpusPreset::Twitter, 0.2, &table, &mut rng);
+        assert_eq!(c.n(), c.n_train + c.test_indices().len());
+        assert!(c.docs.iter().all(|d| d.len() >= 1 && d.len() <= 32));
+        for d in &c.docs {
+            let s: f64 = d.weights.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "weights must be normalized");
+        }
+        // Balanced classes in train split.
+        let mut counts = vec![0usize; c.classes];
+        for i in c.train_indices() {
+            counts[c.labels[i]] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn same_class_docs_closer_in_wmd() {
+        let mut rng = Rng::new(2);
+        let table = WordTable::new(20, 30, 16, 0.3, &mut rng);
+        let c = generate(CorpusPreset::Twitter, 0.1, &table, &mut rng);
+        let cfg = SinkhornCfg::default();
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..c.n().min(20) {
+            for j in (i + 1)..c.n().min(20) {
+                let d = sinkhorn_cost(&c.docs[i], &c.docs[j], cfg);
+                if c.labels[i] == c.labels[j] {
+                    same.push(d);
+                } else {
+                    diff.push(d);
+                }
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&same) < mean(&diff),
+            "same-class WMD {} should be < cross-class {}",
+            mean(&same),
+            mean(&diff)
+        );
+    }
+
+    #[test]
+    fn presets_have_distinct_stats() {
+        for p in CorpusPreset::ALL {
+            let (classes, tr, te, len) = p.spec();
+            assert!(classes >= 3 && tr > te && len >= 10.0);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Synthetic word-embedding table: the Word2Vec substitute. Words are
+//! organized into topics; a word vector is its topic centroid plus noise,
+//! so WMD between topically-related documents is small — the structure
+//! that makes exp(-γ·WMD) matrices class-clustered and near-PSD (Fig. 1).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct WordTable {
+    pub dim: usize,
+    pub topics: usize,
+    pub words_per_topic: usize,
+    /// vocab_size x dim, vocab id = topic * words_per_topic + k.
+    pub vectors: Vec<Vec<f64>>,
+}
+
+impl WordTable {
+    pub fn new(topics: usize, words_per_topic: usize, dim: usize, spread: f64, rng: &mut Rng) -> WordTable {
+        let centroids: Vec<Vec<f64>> = (0..topics)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let mut vectors = Vec::with_capacity(topics * words_per_topic);
+        for c in &centroids {
+            for _ in 0..words_per_topic {
+                vectors.push(c.iter().map(|x| x + spread * rng.normal()).collect());
+            }
+        }
+        WordTable {
+            dim,
+            topics,
+            words_per_topic,
+            vectors,
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vectors.len()
+    }
+
+    pub fn topic_of(&self, word: usize) -> usize {
+        word / self.words_per_topic
+    }
+
+    /// Sample a word id from `topic` with Zipf rank frequency.
+    pub fn sample_word(&self, topic: usize, rng: &mut Rng) -> usize {
+        topic * self.words_per_topic + rng.zipf(self.words_per_topic, 1.05)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    #[test]
+    fn within_topic_words_closer_than_across() {
+        let mut rng = Rng::new(1);
+        let t = WordTable::new(5, 20, 16, 0.3, &mut rng);
+        let d2 = |a: &[f64], b: &[f64]| {
+            let diff: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+            dot(&diff, &diff)
+        };
+        let mut within = 0.0;
+        let mut across = 0.0;
+        for k in 0..10 {
+            within += d2(&t.vectors[k], &t.vectors[k + 1]);
+            across += d2(&t.vectors[k], &t.vectors[k + 25]);
+        }
+        assert!(within < across, "within={within} across={across}");
+    }
+
+    #[test]
+    fn sample_word_stays_in_topic() {
+        let mut rng = Rng::new(2);
+        let t = WordTable::new(4, 10, 8, 0.3, &mut rng);
+        for topic in 0..4 {
+            for _ in 0..20 {
+                let w = t.sample_word(topic, &mut rng);
+                assert_eq!(t.topic_of(w), topic);
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Synthetic GLUE-style sentence-pair tasks — analogues of STS-B, MRPC and
+//! RTE (Sec. 4.2 / Table 6). Sentences are token-embedding sequences built
+//! around latent meaning vectors; the fine-tuned-BERT relationship is
+//! inverted: gold human scores are a noisy monotone function of the
+//! cross-encoder oracle's *symmetrized* score for the pair, exactly the
+//! coupling a fine-tuned cross-encoder has with its training labels.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GluePreset {
+    /// Continuous similarity scores 0..5 (paper val matrix 3000x3000).
+    StsB,
+    /// Binary semantic equivalence (paper 816x816).
+    Mrpc,
+    /// Binary entailment (paper 554x554).
+    Rte,
+}
+
+impl GluePreset {
+    pub const ALL: [GluePreset; 3] = [GluePreset::StsB, GluePreset::Mrpc, GluePreset::Rte];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GluePreset::StsB => "stsb",
+            GluePreset::Mrpc => "mrpc",
+            GluePreset::Rte => "rte",
+        }
+    }
+
+    /// (n sentences, n labeled pairs) at reproduction scale — the paper's
+    /// shapes scaled down (3000/816/554 sentences; 1469/409/278 pairs).
+    pub fn spec(&self) -> (usize, usize) {
+        match self {
+            GluePreset::StsB => (900, 440),
+            GluePreset::Mrpc => (600, 300),
+            GluePreset::Rte => (420, 210),
+        }
+    }
+
+    pub fn binary(&self) -> bool {
+        !matches!(self, GluePreset::StsB)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GlueTask {
+    pub preset: GluePreset,
+    /// Token-embedding sentences, each seq*dim f32 (artifact layout).
+    pub sentences: Vec<Vec<f32>>,
+    /// Labeled evaluation pairs (i, j).
+    pub pairs: Vec<(usize, usize)>,
+    /// Gold scores per pair: continuous in [0, 5] for STS-B, {0, 1}
+    /// otherwise. Filled in by [`attach_gold_scores`] after the oracle
+    /// scores the pairs.
+    pub gold: Vec<f64>,
+}
+
+/// Generate sentences + labeled pair set. `scale` multiplies preset sizes.
+///
+/// Latent structure: sentences come in "meaning clusters"; a labeled pair
+/// is drawn within-cluster with 50% probability (high similarity) and
+/// across clusters otherwise, mirroring GLUE's balanced pair construction.
+pub fn generate(
+    preset: GluePreset,
+    scale: f64,
+    seq: usize,
+    dim: usize,
+    rng: &mut Rng,
+) -> GlueTask {
+    let (n0, m0) = preset.spec();
+    let n = ((n0 as f64 * scale).round() as usize).max(16);
+    let m = ((m0 as f64 * scale).round() as usize).max(8);
+    let clusters = (n / 6).max(2);
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let mut cluster_of = Vec::with_capacity(n);
+    let mut sentences = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % clusters;
+        cluster_of.push(c);
+        let mut s = vec![0.0f32; seq * dim];
+        for t in 0..seq {
+            for d in 0..dim {
+                // token = meaning direction + positional noise
+                s[t * dim + d] = centers[c][d] + 0.55 * rng.normal() as f32;
+            }
+        }
+        sentences.push(s);
+    }
+    // Labeled pairs: half within-cluster, half across.
+    let mut pairs = Vec::with_capacity(m);
+    let mut seen = std::collections::HashSet::new();
+    while pairs.len() < m {
+        let i = rng.below(n);
+        let within = rng.f64() < 0.5;
+        let j = if within {
+            // another sentence in the same cluster
+            let c = cluster_of[i];
+            let mut j = (i + clusters) % n;
+            for _ in 0..n {
+                if cluster_of[j] == c && j != i {
+                    break;
+                }
+                j = (j + 1) % n;
+            }
+            j
+        } else {
+            rng.below(n)
+        };
+        if i != j && seen.insert((i.min(j), i.max(j))) {
+            pairs.push((i, j));
+        }
+    }
+    GlueTask {
+        preset,
+        sentences,
+        pairs,
+        gold: Vec::new(),
+    }
+}
+
+/// Derive gold labels from the oracle's symmetrized scores: monotone map
+/// plus label noise, thresholded at the median for binary tasks.
+pub fn attach_gold_scores(task: &mut GlueTask, sym_scores: &[f64], noise: f64, rng: &mut Rng) {
+    assert_eq!(sym_scores.len(), task.pairs.len());
+    let noisy: Vec<f64> = sym_scores
+        .iter()
+        .map(|&s| s + noise * rng.normal())
+        .collect();
+    if task.preset.binary() {
+        let mut sorted = noisy.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr = sorted[sorted.len() / 2];
+        task.gold = noisy.iter().map(|&s| if s > thr { 1.0 } else { 0.0 }).collect();
+    } else {
+        // Affine map of the noisy score into [0, 5].
+        let lo = noisy.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = noisy.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        task.gold = noisy.iter().map(|&s| 5.0 * (s - lo) / span).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_valid_and_unique() {
+        let mut rng = Rng::new(1);
+        let t = generate(GluePreset::Mrpc, 0.2, 8, 16, &mut rng);
+        let n = t.sentences.len();
+        let mut seen = std::collections::HashSet::new();
+        for &(i, j) in &t.pairs {
+            assert!(i < n && j < n && i != j);
+            assert!(seen.insert((i.min(j), i.max(j))), "duplicate pair");
+        }
+    }
+
+    #[test]
+    fn gold_scores_binary_balanced() {
+        let mut rng = Rng::new(2);
+        let mut t = generate(GluePreset::Rte, 0.3, 8, 16, &mut rng);
+        let fake_scores: Vec<f64> = (0..t.pairs.len()).map(|_| rng.normal()).collect();
+        attach_gold_scores(&mut t, &fake_scores, 0.1, &mut rng);
+        let pos: usize = t.gold.iter().filter(|&&g| g > 0.5).count();
+        let frac = pos as f64 / t.gold.len() as f64;
+        assert!(frac > 0.3 && frac < 0.7, "balanced-ish labels, got {frac}");
+    }
+
+    #[test]
+    fn gold_scores_continuous_range() {
+        let mut rng = Rng::new(3);
+        let mut t = generate(GluePreset::StsB, 0.1, 8, 16, &mut rng);
+        let fake: Vec<f64> = (0..t.pairs.len()).map(|_| rng.normal()).collect();
+        attach_gold_scores(&mut t, &fake, 0.05, &mut rng);
+        assert!(t.gold.iter().all(|&g| (0.0..=5.0).contains(&g)));
+        // Gold correlates with the underlying score.
+        let mean_g: f64 = t.gold.iter().sum::<f64>() / t.gold.len() as f64;
+        let mean_f: f64 = fake.iter().sum::<f64>() / fake.len() as f64;
+        let cov: f64 = t
+            .gold
+            .iter()
+            .zip(&fake)
+            .map(|(g, f)| (g - mean_g) * (f - mean_f))
+            .sum();
+        assert!(cov > 0.0);
+    }
+}

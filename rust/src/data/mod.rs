@@ -1,0 +1,13 @@
+//! Synthetic data generators — the substitutes for the paper's corpora
+//! (Twitter/Recipe-L/Ohsumed/20News, GLUE STS-B/MRPC/RTE, ECB+) per
+//! DESIGN.md §Substitutions. All generators are seeded and deterministic.
+
+pub mod coref;
+pub mod corpus;
+pub mod embeddings;
+pub mod glue;
+
+pub use coref::{CorefCorpus, CorefSpec};
+pub use corpus::{Corpus, CorpusPreset};
+pub use embeddings::WordTable;
+pub use glue::{GluePreset, GlueTask};

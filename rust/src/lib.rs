@@ -1,0 +1,25 @@
+//! # simmat — Sublinear Time Approximation of Text Similarity Matrices
+//!
+//! A Rust + JAX + Pallas reproduction of Ray, Monath, McCallum & Musco
+//! (AAAI 2022): approximate an n x n text similarity matrix with only
+//! O(n·s) exact similarity computations via SMS-Nyström and CUR variants,
+//! then serve all n² similarities from the factored approximation.
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — approximation algorithms, landmark scheduling,
+//!   dynamic batching, factored-matrix serving, downstream tasks, benches.
+//! * **L2/L1 (python/, build-time)** — JAX similarity oracles with a
+//!   Pallas Sinkhorn kernel, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime** — loads the artifacts through PJRT (`xla` crate); Python
+//!   never runs on the request path.
+
+pub mod approx;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod opt;
+pub mod runtime;
+pub mod sim;
+pub mod tasks;
+pub mod util;
+pub mod workloads;

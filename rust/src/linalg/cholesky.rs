@@ -1,0 +1,116 @@
+//! Cholesky factorization and PD solves — used by the GP in the Bayesian
+//! optimizer and as the fast path for well-conditioned PSD joining
+//! matrices.
+
+use super::mat::Mat;
+
+/// Lower-triangular L with A = L L^T. Errors if A is not (numerically)
+/// positive definite.
+pub fn cholesky(a: &Mat) -> Result<Mat, String> {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("cholesky: not PD at pivot {i} (sum={sum:.3e})"));
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A x = b given L from `cholesky(A)`.
+pub fn chol_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // Forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.get(i, k) * y[k];
+        }
+        y[i] = sum / l.get(i, i);
+    }
+    // Backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l.get(k, i) * x[k];
+        }
+        x[i] = sum / l.get(i, i);
+    }
+    x
+}
+
+/// log det(A) from the factor (2 * sum log diag L).
+pub fn chol_logdet(l: &Mat) -> f64 {
+    (0..l.rows).map(|i| l.get(i, i).ln()).sum::<f64>() * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_pd(n: usize, rng: &mut Rng) -> Mat {
+        let b = Mat::gaussian(n, n + 2, rng);
+        let mut a = b.matmul_nt(&b);
+        a.shift_diag(0.1);
+        a
+    }
+
+    #[test]
+    fn factor_multiplies_back() {
+        check("cholesky-llt", 12, |rng| {
+            let n = 1 + rng.below(15);
+            let a = random_pd(n, rng);
+            let l = cholesky(&a).unwrap();
+            let llt = l.matmul_nt(&l);
+            assert!(llt.max_abs_diff(&a) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        check("cholesky-solve", 12, |rng| {
+            let n = 1 + rng.below(12);
+            let a = random_pd(n, rng);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let l = cholesky(&a).unwrap();
+            let x = chol_solve(&l, &b);
+            for (got, want) in x.iter().zip(&x_true) {
+                assert!((got - want).abs() < 1e-7);
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1, 3
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn logdet_of_diag() {
+        let mut a = Mat::zeros(3, 3);
+        a.set(0, 0, 2.0);
+        a.set(1, 1, 3.0);
+        a.set(2, 2, 4.0);
+        let l = cholesky(&a).unwrap();
+        assert!((chol_logdet(&l) - (24.0f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,327 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization followed by
+//! implicit-shift QL iteration (the classical tred2/tql2 pair). O(n^3),
+//! robust, and the backbone of every spectral operation in the library —
+//! spectra figures, Nyström joining-matrix factorizations, SMS shifts,
+//! optimal low-rank baselines.
+
+use super::mat::Mat;
+
+/// Eigendecomposition A = Q diag(vals) Q^T of a symmetric matrix.
+/// `vals` ascending; columns of `vecs` are the matching eigenvectors.
+pub struct Eigh {
+    pub vals: Vec<f64>,
+    pub vecs: Mat, // n x n, column j <-> vals[j]
+}
+
+/// Householder reduction of a symmetric matrix to tridiagonal form,
+/// accumulating the orthogonal transform in `z` (tred2).
+fn tridiagonalize(z: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = z.rows;
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 = (0..=l).map(|k| z.get(i, k).abs()).sum();
+            if scale == 0.0 {
+                e[i] = z.get(i, l);
+            } else {
+                for k in 0..=l {
+                    let v = z.get(i, k) / scale;
+                    z.set(i, k, v);
+                    h += v * v;
+                }
+                let mut f = z.get(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z.set(i, l, f - g);
+                f = 0.0;
+                for j in 0..=l {
+                    z.set(j, i, z.get(i, j) / h);
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z.get(j, k) * z.get(i, k);
+                    }
+                    for k in (j + 1)..=l {
+                        g += z.get(k, j) * z.get(i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z.get(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z.get(i, j);
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let v = z.get(j, k) - (f * e[k] + g * z.get(i, k));
+                        z.set(j, k, v);
+                    }
+                }
+            }
+        } else {
+            e[i] = z.get(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z.get(i, k) * z.get(k, j);
+                }
+                for k in 0..i {
+                    let v = z.get(k, j) - g * z.get(k, i);
+                    z.set(k, j, v);
+                }
+            }
+        }
+        d[i] = z.get(i, i);
+        z.set(i, i, 1.0);
+        for j in 0..i {
+            z.set(j, i, 0.0);
+            z.set(i, j, 0.0);
+        }
+    }
+}
+
+/// Implicit-shift QL on the tridiagonal (d, e), rotations applied to z (tql2).
+fn ql_implicit(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<(), String> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a negligible off-diagonal element.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(format!("eigh: QL failed to converge at index {l}"));
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = z.get(k, i + 1);
+                    z.set(k, i + 1, s * z.get(k, i) + c * f);
+                    z.set(k, i, c * z.get(k, i) - s * f);
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Full eigendecomposition of a symmetric matrix. Panics on shape mismatch,
+/// errors only if QL fails to converge (pathological inputs).
+pub fn eigh(a: &Mat) -> Result<Eigh, String> {
+    assert!(a.is_square(), "eigh needs a square matrix");
+    let n = a.rows;
+    let mut z = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tridiagonalize(&mut z, &mut d, &mut e);
+    ql_implicit(&mut d, &mut e, &mut z)?;
+    // Sort ascending by eigenvalue, permuting eigenvector columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| d[x].partial_cmp(&d[y]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let vecs = z.select_cols(&order);
+    Ok(Eigh { vals, vecs })
+}
+
+/// Minimum eigenvalue of a symmetric matrix (full decomposition; the s×s
+/// matrices this is called on are small).
+pub fn lambda_min(a: &Mat) -> Result<f64, String> {
+    Ok(eigh(a)?.vals[0])
+}
+
+impl Eigh {
+    /// Reconstruct Q diag(f(vals)) Q^T.
+    pub fn apply_spectral(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let n = self.vals.len();
+        // Q * diag(f) then * Q^T
+        let mut qd = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                qd.set(i, j, self.vecs.get(i, j) * f(self.vals[j]));
+            }
+        }
+        qd.matmul_nt(&self.vecs)
+    }
+
+    /// Pseudo-inverse via spectral cutoff.
+    pub fn pinv(&self, rcond: f64) -> Mat {
+        let amax = self
+            .vals
+            .iter()
+            .map(|v| v.abs())
+            .fold(0.0f64, f64::max);
+        let cut = rcond * amax;
+        self.apply_spectral(|l| if l.abs() > cut { 1.0 / l } else { 0.0 })
+    }
+
+    /// Inverse square root (PSD inputs; negative eigenvalues clamped to 0).
+    pub fn inv_sqrt(&self, rcond: f64) -> Mat {
+        let amax = self
+            .vals
+            .iter()
+            .map(|v| v.abs())
+            .fold(0.0f64, f64::max);
+        let cut = rcond * amax;
+        self.apply_spectral(|l| if l > cut { 1.0 / l.sqrt() } else { 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::gaussian(n, n, rng);
+        a.add(&a.transpose()).scale(0.5)
+    }
+
+    #[test]
+    fn diag_matrix_eigvals() {
+        let mut a = Mat::zeros(4, 4);
+        for (i, v) in [3.0, -1.0, 2.0, 0.5].iter().enumerate() {
+            a.set(i, i, *v);
+        }
+        let e = eigh(&a).unwrap();
+        assert_eq!(e.vals.len(), 4);
+        let want = [-1.0, 0.5, 2.0, 3.0];
+        for (got, want) in e.vals.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = eigh(&a).unwrap();
+        assert!((e.vals[0] - 1.0).abs() < 1e-12);
+        assert!((e.vals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        check("eigh-reconstruction", 15, |rng| {
+            let n = 2 + rng.below(20);
+            let a = random_symmetric(n, rng);
+            let e = eigh(&a).unwrap();
+            let recon = e.apply_spectral(|l| l);
+            assert!(
+                recon.max_abs_diff(&a) < 1e-9,
+                "n={n} err={}",
+                recon.max_abs_diff(&a)
+            );
+        });
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        check("eigh-orthonormal", 10, |rng| {
+            let n = 2 + rng.below(15);
+            let a = random_symmetric(n, rng);
+            let e = eigh(&a).unwrap();
+            let qtq = e.vecs.matmul_tn(&e.vecs);
+            assert!(qtq.max_abs_diff(&Mat::eye(n)) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn lambda_min_matches_trace_bound() {
+        let mut rng = Rng::new(9);
+        let a = random_symmetric(12, &mut rng);
+        let lmin = lambda_min(&a).unwrap();
+        let e = eigh(&a).unwrap();
+        assert!((lmin - e.vals[0]).abs() < 1e-12);
+        // Rayleigh quotient of any vector is >= lambda_min.
+        let v: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let av = a.matvec(&v);
+        let rq = super::super::mat::dot(&v, &av) / super::super::mat::dot(&v, &v);
+        assert!(rq >= lmin - 1e-9);
+    }
+
+    #[test]
+    fn pinv_of_singular() {
+        // rank-1 PSD matrix vv^T: pinv has eigenvalue 1/|v|^2 on v.
+        let v = [1.0, 2.0, 2.0];
+        let a = Mat::from_fn(3, 3, |i, j| v[i] * v[j]);
+        let p = eigh(&a).unwrap().pinv(1e-12);
+        // A * pinv(A) * A == A
+        let apa = a.matmul(&p).matmul(&a);
+        assert!(apa.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn inv_sqrt_of_psd() {
+        let mut rng = Rng::new(10);
+        let b = Mat::gaussian(8, 8, &mut rng);
+        let a = b.matmul_nt(&b); // PSD, full rank w.h.p.
+        let is = eigh(&a).unwrap().inv_sqrt(1e-12);
+        // (A^{-1/2}) A (A^{-1/2}) == I
+        let ident = is.matmul(&a).matmul(&is);
+        assert!(ident.max_abs_diff(&Mat::eye(8)) < 1e-8);
+    }
+
+    #[test]
+    fn large_matrix_converges() {
+        let mut rng = Rng::new(11);
+        let a = random_symmetric(120, &mut rng);
+        let e = eigh(&a).unwrap();
+        // Semicircle-ish check: eigenvalue sum equals trace.
+        let trace: f64 = (0..120).map(|i| a.get(i, i)).sum();
+        let sum: f64 = e.vals.iter().sum();
+        assert!((trace - sum).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,100 @@
+//! Lanczos iteration for extreme eigenvalues of large symmetric matrices.
+//! SMS-Nyström only needs lambda_min of an s2 x s2 principal submatrix;
+//! for large s2 this is much cheaper than a full eigh (the paper notes
+//! "this value can also be very efficiently approximated using iterative
+//! methods").
+
+use super::eigh::eigh;
+use super::mat::{dot, norm, normalize, Mat};
+use crate::util::rng::Rng;
+
+/// Extreme eigenvalue estimates (min, max) via Lanczos with full
+/// reorthogonalization. `steps` Krylov dimensions (e.g. 40).
+pub fn lanczos_extreme(a: &Mat, steps: usize, rng: &mut Rng) -> Result<(f64, f64), String> {
+    assert!(a.is_square());
+    let n = a.rows;
+    let steps = steps.min(n);
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(steps);
+    let mut alpha = Vec::with_capacity(steps);
+    let mut beta: Vec<f64> = Vec::with_capacity(steps);
+
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    q.push(v.clone());
+
+    for j in 0..steps {
+        let mut w = a.matvec(&q[j]);
+        let a_j = dot(&w, &q[j]);
+        alpha.push(a_j);
+        for i in 0..n {
+            w[i] -= a_j * q[j][i];
+            if j > 0 {
+                w[i] -= beta[j - 1] * q[j - 1][i];
+            }
+        }
+        // Full reorthogonalization (stability on clustered spectra).
+        for qi in &q {
+            let c = dot(&w, qi);
+            for i in 0..n {
+                w[i] -= c * qi[i];
+            }
+        }
+        let b_j = norm(&w);
+        if b_j < 1e-12 || j + 1 == steps {
+            break;
+        }
+        beta.push(b_j);
+        for x in w.iter_mut() {
+            *x /= b_j;
+        }
+        q.push(w);
+    }
+
+    // Eigenvalues of the small tridiagonal via eigh.
+    let k = alpha.len();
+    let t = Mat::from_fn(k, k, |i, j| {
+        if i == j {
+            alpha[i]
+        } else if j + 1 == i || i + 1 == j {
+            beta[i.min(j)]
+        } else {
+            0.0
+        }
+    });
+    let e = eigh(&t)?;
+    Ok((e.vals[0], e.vals[k - 1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_eigh_on_random_symmetric() {
+        let mut rng = Rng::new(21);
+        let b = Mat::gaussian(60, 60, &mut rng);
+        let a = b.add(&b.transpose()).scale(0.5);
+        let exact = eigh(&a).unwrap();
+        let (lo, hi) = lanczos_extreme(&a, 60, &mut rng).unwrap();
+        assert!((lo - exact.vals[0]).abs() < 1e-6, "lo {lo} vs {}", exact.vals[0]);
+        assert!(
+            (hi - exact.vals[exact.vals.len() - 1]).abs() < 1e-6,
+            "hi {hi} vs {}",
+            exact.vals[exact.vals.len() - 1]
+        );
+    }
+
+    #[test]
+    fn truncated_run_brackets_spectrum() {
+        let mut rng = Rng::new(22);
+        let b = Mat::gaussian(100, 100, &mut rng);
+        let a = b.add(&b.transpose()).scale(0.5);
+        let exact = eigh(&a).unwrap();
+        let (lo, hi) = lanczos_extreme(&a, 40, &mut rng).unwrap();
+        // Ritz values lie inside the true spectrum and near the extremes.
+        assert!(lo >= exact.vals[0] - 1e-9);
+        assert!(hi <= exact.vals[exact.vals.len() - 1] + 1e-9);
+        let spread = exact.vals[exact.vals.len() - 1] - exact.vals[0];
+        assert!((lo - exact.vals[0]).abs() < 0.1 * spread);
+    }
+}

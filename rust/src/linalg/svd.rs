@@ -1,0 +1,258 @@
+//! Singular value decomposition via one-sided Jacobi (Hestenes) rotations.
+//! Used for CUR joining-matrix factorization (U = W S^{1/2} · S^{1/2} V^T)
+//! and rectangular pseudo-inverses. Accurate for the small/skinny matrices
+//! the sublinear methods produce (s x s, s2 x s1).
+
+use super::mat::Mat;
+
+pub struct Svd {
+    pub u: Mat,        // m x r
+    pub s: Vec<f64>,   // r singular values, descending
+    pub vt: Mat,       // r x n
+}
+
+/// One-sided Jacobi SVD of an m x n matrix with m >= n (transposes
+/// internally otherwise). Returns thin SVD with r = min(m, n).
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        let t = svd(&a.transpose());
+        return Svd {
+            u: t.vt.transpose(),
+            s: t.s,
+            vt: t.u.transpose(),
+        };
+    }
+    let (m, n) = (a.rows, a.cols);
+    // Work on columns of A; accumulate V.
+    let mut u = a.clone(); // m x n, columns orthogonalized in place
+    let mut v = Mat::eye(n);
+    let eps = 1e-13;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let x = u.get(i, p);
+                    let y = u.get(i, q);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + f64::MIN_POSITIVE {
+                    continue;
+                }
+                off = off.max(apq.abs() / ((app * aqq).sqrt() + f64::MIN_POSITIVE));
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = u.get(i, p);
+                    let y = u.get(i, q);
+                    u.set(i, p, c * x - s * y);
+                    u.set(i, q, s * x + c * y);
+                }
+                for i in 0..n {
+                    let x = v.get(i, p);
+                    let y = v.get(i, q);
+                    v.set(i, p, c * x - s * y);
+                    v.set(i, q, s * x + c * y);
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+    // Column norms are the singular values.
+    let mut svals: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| u.get(i, j).powi(2)).sum::<f64>().sqrt())
+        .collect();
+    // Normalize U columns (zero columns left as-is for exact-zero sigma).
+    for j in 0..n {
+        if svals[j] > 0.0 {
+            for i in 0..m {
+                let val = u.get(i, j) / svals[j];
+                u.set(i, j, val);
+            }
+        }
+    }
+    // Sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| svals[y].partial_cmp(&svals[x]).unwrap());
+    let u = u.select_cols(&order);
+    let v = v.select_cols(&order);
+    svals.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    Svd {
+        u,
+        s: svals,
+        vt: v.transpose(),
+    }
+}
+
+/// Moore-Penrose pseudo-inverse via SVD with relative cutoff `rcond`.
+pub fn pinv(a: &Mat, rcond: f64) -> Mat {
+    let d = svd(a);
+    let smax = d.s.first().copied().unwrap_or(0.0);
+    let cut = rcond * smax;
+    // pinv = V S^+ U^T : (n x r) * (r x m)
+    let r = d.s.len();
+    let mut vs = d.vt.transpose(); // n x r
+    for j in 0..r {
+        let inv = if d.s[j] > cut { 1.0 / d.s[j] } else { 0.0 };
+        for i in 0..vs.rows {
+            let val = vs.get(i, j) * inv;
+            vs.set(i, j, val);
+        }
+    }
+    vs.matmul_nt(&d.u)
+}
+
+/// Split a (possibly indefinite is NOT allowed here — inputs are Gram-like)
+/// factorization U S V^T into (U S^{1/2}, S^{1/2} V^T) for CUR embeddings.
+pub fn split_factor(a: &Mat) -> (Mat, Mat) {
+    let d = svd(a);
+    let r = d.s.len();
+    let mut left = d.u.clone(); // m x r
+    let mut right = d.vt.clone(); // r x n
+    for j in 0..r {
+        let sq = d.s[j].max(0.0).sqrt();
+        for i in 0..left.rows {
+            let val = left.get(i, j) * sq;
+            left.set(i, j, val);
+        }
+        for k in 0..right.cols {
+            let val = right.get(j, k) * sq;
+            right.set(j, k, val);
+        }
+    }
+    (left, right)
+}
+
+/// Best rank-k approximation (dense baseline: 'Optimal' in the paper).
+pub fn best_rank_k(a: &Mat, k: usize) -> Mat {
+    let d = svd(a);
+    let k = k.min(d.s.len());
+    let mut out = Mat::zeros(a.rows, a.cols);
+    for j in 0..k {
+        let sj = d.s[j];
+        for i in 0..a.rows {
+            let uij = d.u.get(i, j) * sj;
+            if uij == 0.0 {
+                continue;
+            }
+            let vrow = d.vt.row(j);
+            let orow = &mut out.data[i * a.cols..(i + 1) * a.cols];
+            for (o, vv) in orow.iter_mut().zip(vrow) {
+                *o += uij * vv;
+            }
+        }
+    }
+    out
+}
+
+#[allow(dead_code)]
+fn col_dot(a: &Mat, p: usize, q: usize) -> f64 {
+    let (mut s, m) = (0.0, a.rows);
+    for i in 0..m {
+        s += a.get(i, p) * a.get(i, q);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn svd_reconstructs() {
+        check("svd-reconstruction", 12, |rng| {
+            let m = 2 + rng.below(15);
+            let n = 2 + rng.below(15);
+            let a = Mat::gaussian(m, n, rng);
+            let d = svd(&a);
+            // U S V^T == A
+            let mut us = d.u.clone();
+            for j in 0..d.s.len() {
+                for i in 0..us.rows {
+                    let val = us.get(i, j) * d.s[j];
+                    us.set(i, j, val);
+                }
+            }
+            let recon = us.matmul(&d.vt);
+            assert!(recon.max_abs_diff(&a) < 1e-9, "m={m} n={n}");
+        });
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Rng::new(3);
+        let a = Mat::gaussian(10, 6, &mut rng);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn pinv_properties() {
+        check("pinv-moore-penrose", 10, |rng| {
+            let m = 2 + rng.below(10);
+            let n = 2 + rng.below(10);
+            let a = Mat::gaussian(m, n, rng);
+            let p = pinv(&a, 1e-12);
+            let apa = a.matmul(&p).matmul(&a);
+            assert!(apa.max_abs_diff(&a) < 1e-8);
+            let pap = p.matmul(&a).matmul(&p);
+            assert!(pap.max_abs_diff(&p) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn pinv_rank_deficient() {
+        // Outer product: rank 1.
+        let u = [1.0, 2.0, 3.0];
+        let v = [2.0, -1.0];
+        let a = Mat::from_fn(3, 2, |i, j| u[i] * v[j]);
+        let p = pinv(&a, 1e-10);
+        let apa = a.matmul(&p).matmul(&a);
+        assert!(apa.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn best_rank_k_exact_for_low_rank() {
+        let mut rng = Rng::new(5);
+        let b = Mat::gaussian(12, 3, &mut rng);
+        let a = b.matmul_nt(&b); // rank 3
+        let approx = best_rank_k(&a, 3);
+        assert!(approx.max_abs_diff(&a) < 1e-9);
+        let worse = best_rank_k(&a, 2);
+        assert!(worse.max_abs_diff(&a) > 1e-6);
+    }
+
+    #[test]
+    fn split_factor_multiplies_back() {
+        let mut rng = Rng::new(6);
+        let a = Mat::gaussian(7, 5, &mut rng);
+        let (l, r) = split_factor(&a);
+        assert!(l.matmul(&r).max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn tall_and_wide_agree() {
+        let mut rng = Rng::new(7);
+        let a = Mat::gaussian(9, 4, &mut rng);
+        let s1 = svd(&a).s;
+        let s2 = svd(&a.transpose()).s;
+        for (x, y) in s1.iter().zip(&s2) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! `simmat` CLI — leader entrypoint for the similarity-approximation
+//! service and the experiment harness.
+//!
+//! Subcommands:
+//!   info                       runtime + artifact information
+//!   approx  [--workload W]     build an approximation, print stats
+//!   spectra [--workload W]     eigenspectrum summary of a workload matrix
+//!   serve   [--queries N]      demo serve loop over the factored store
+//!   smoke                      all-layers health check
+//!
+//! Workloads: psd | twitter | stsb | mrpc | rte | coref
+
+use simmat::approx::{self, SmsConfig};
+use simmat::coordinator::{Method, Query, Response, SimilarityService};
+use simmat::data::{CorefSpec, CorpusPreset, GluePreset};
+use simmat::linalg::{eigh, Mat};
+use simmat::runtime::{default_artifacts_dir, shared_runtime, Runtime};
+use simmat::sim::DenseOracle;
+use simmat::util::cli::Args;
+use simmat::util::rng::Rng;
+use simmat::workloads;
+
+fn load_workload(name: &str, scale: f64) -> anyhow::Result<Mat> {
+    Ok(match name {
+        "psd" => workloads::psd_matrix((500.0 * scale) as usize, 42),
+        "twitter" => {
+            let rt = shared_runtime()?;
+            workloads::wmd_workload(rt, CorpusPreset::Twitter, scale, 0.75, 11)?.k
+        }
+        "stsb" | "mrpc" | "rte" => {
+            let preset = match name {
+                "stsb" => GluePreset::StsB,
+                "mrpc" => GluePreset::Mrpc,
+                _ => GluePreset::Rte,
+            };
+            let rt = shared_runtime()?;
+            workloads::glue_workload(rt, preset, scale, 12)?.k_sym
+        }
+        "coref" => {
+            let rt = shared_runtime()?;
+            workloads::coref_workload(rt, CorefSpec::default(), 14)?.k_sym
+        }
+        other => anyhow::bail!("unknown workload '{other}'"),
+    })
+}
+
+fn method_of(name: &str) -> anyhow::Result<Method> {
+    Method::ALL
+        .into_iter()
+        .find(|m| m.name().eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown method '{name}' (choose from {:?})",
+                Method::ALL.map(|m| m.name())
+            )
+        })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let scale = args.get_f64("scale", 0.4);
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+
+    match cmd {
+        "info" => {
+            println!("simmat — sublinear text-similarity matrix approximation");
+            match default_artifacts_dir() {
+                Some(dir) => {
+                    println!("artifacts: {}", dir.display());
+                    let rt = Runtime::load(&dir)?;
+                    println!("platform:  {}", rt.platform());
+                    let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
+                    names.sort();
+                    for name in names {
+                        let spec = rt.manifest.spec(name)?;
+                        println!(
+                            "  {name}: inputs {:?} -> output {:?}",
+                            spec.inputs, spec.output
+                        );
+                    }
+                }
+                None => println!("artifacts: NOT BUILT (run `make artifacts`)"),
+            }
+        }
+        "approx" => {
+            let workload = args.get_str("workload", "coref");
+            let method = method_of(args.get_str("method", "SiCUR"))?;
+            let k = load_workload(workload, scale)?;
+            let n = k.rows;
+            let s = args.get_usize("s", n / 6);
+            let oracle = DenseOracle::new(k.clone());
+            let svc = SimilarityService::build(&oracle, method, s, 64, &mut rng)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            println!(
+                "{} on '{workload}' (n={n}, s={s}): {} oracle calls, {:.1}% saved, {:.2}s build",
+                method.name(),
+                svc.stats.oracle_calls,
+                100.0 * svc.stats.savings(),
+                svc.stats.build_seconds
+            );
+            println!(
+                "rel Frobenius error: {:.4}",
+                approx::rel_fro_error(&k, svc.factored())
+            );
+            // SMS diagnostics when applicable.
+            if matches!(method, Method::SmsNystrom) {
+                let r = approx::sms_nystrom(&oracle, s, SmsConfig::default(), &mut rng)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                println!(
+                    "SMS shift e = {:.4} (lambda_min(S2) = {:.4})",
+                    r.shift, r.lambda_min_s2
+                );
+            }
+        }
+        "spectra" => {
+            let workload = args.get_str("workload", "stsb");
+            let k = load_workload(workload, scale)?;
+            let e = eigh(&k.symmetrized()).map_err(|e| anyhow::anyhow!(e))?;
+            let neg = e.vals.iter().filter(|&&v| v < 0.0).count();
+            let neg_mass: f64 = e.vals.iter().filter(|&&v| v < 0.0).map(|v| -v).sum();
+            let pos_mass: f64 = e.vals.iter().filter(|&&v| v > 0.0).sum();
+            println!(
+                "'{workload}' (n={}): {neg} negative eigenvalues ({:.1}%), neg/pos mass {:.4}",
+                k.rows,
+                100.0 * neg as f64 / k.rows as f64,
+                neg_mass / pos_mass.max(1e-12)
+            );
+            println!(
+                "lambda_min {:.4}, lambda_max {:.4}",
+                e.vals[0],
+                e.vals.last().unwrap()
+            );
+        }
+        "serve" => {
+            let workload = args.get_str("workload", "coref");
+            let queries = args.get_usize("queries", 100_000);
+            let k = load_workload(workload, scale)?;
+            let n = k.rows;
+            let oracle = DenseOracle::new(k);
+            let svc = SimilarityService::build(
+                &oracle,
+                method_of(args.get_str("method", "SiCUR"))?,
+                n / 6,
+                64,
+                &mut rng,
+            )
+            .map_err(|e| anyhow::anyhow!(e))?;
+            let t0 = std::time::Instant::now();
+            let mut acc = 0.0;
+            for q in 0..queries {
+                if let Response::Scalar(v) = svc.query(&Query::Entry(q % n, (q * 7) % n))? {
+                    acc += v;
+                }
+            }
+            std::hint::black_box(acc);
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "served {queries} entry queries in {:.1}ms ({:.2}M q/s); {}",
+                dt * 1e3,
+                queries as f64 / dt / 1e6,
+                svc.metrics.summary()
+            );
+        }
+        "smoke" => {
+            // Quick all-layers health check used by CI-ish flows.
+            let rt = shared_runtime()?;
+            let mut r = rt.lock().unwrap();
+            let spec = r.manifest.spec("coref_mlp")?.clone();
+            let numel: usize = spec.inputs[0].iter().product();
+            let x = vec![0.1f32; numel];
+            let out = r.execute("coref_mlp", &[&x, &x])?;
+            anyhow::ensure!(out.iter().all(|v| v.is_finite()));
+            println!("smoke OK: coref_mlp produced {} finite scores", out.len());
+        }
+        other => {
+            anyhow::bail!("unknown command '{other}' (info|approx|spectra|serve|smoke)")
+        }
+    }
+    Ok(())
+}

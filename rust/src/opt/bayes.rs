@@ -1,0 +1,169 @@
+//! Bayesian optimization (GP surrogate + Expected Improvement) over a
+//! bounded box — the hyperparameter search (γ, λ⁻¹, s₂) of Appendix A /
+//! Fig. 5-6. Deterministic given the seed.
+
+use super::gp::Gp;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct BayesOpt {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+    pub xs: Vec<Vec<f64>>, // normalized to [0,1]^d
+    pub ys: Vec<f64>,
+}
+
+/// Standard normal pdf/cdf for EI.
+fn phi(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Abramowitz-Stegun erf approximation (|err| < 1.5e-7).
+fn erf(x: f64) -> f64 {
+    let sign = x.signum();
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+impl BayesOpt {
+    pub fn new(lo: Vec<f64>, hi: Vec<f64>) -> BayesOpt {
+        assert_eq!(lo.len(), hi.len());
+        BayesOpt {
+            lo,
+            hi,
+            xs: Vec::new(),
+            ys: Vec::new(),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    fn denorm(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(self.lo.iter().zip(&self.hi))
+            .map(|(v, (l, h))| l + v * (h - l))
+            .collect()
+    }
+
+    pub fn observe(&mut self, x_raw: &[f64], y: f64) {
+        let x: Vec<f64> = x_raw
+            .iter()
+            .zip(self.lo.iter().zip(&self.hi))
+            .map(|(v, (l, h))| ((v - l) / (h - l)).clamp(0.0, 1.0))
+            .collect();
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    /// Next point to evaluate (maximization): random for the first few,
+    /// then EI maximized over random candidates.
+    pub fn suggest(&self, rng: &mut Rng) -> Vec<f64> {
+        let d = self.dim();
+        if self.xs.len() < 2 * d + 1 {
+            return self.denorm(&(0..d).map(|_| rng.f64()).collect::<Vec<_>>());
+        }
+        // Normalize y for GP stability.
+        let ymean = self.ys.iter().sum::<f64>() / self.ys.len() as f64;
+        let ystd = (self
+            .ys
+            .iter()
+            .map(|y| (y - ymean).powi(2))
+            .sum::<f64>()
+            / self.ys.len() as f64)
+            .sqrt()
+            .max(1e-9);
+        let yn: Vec<f64> = self.ys.iter().map(|y| (y - ymean) / ystd).collect();
+        let Ok(gp) = Gp::fit(self.xs.clone(), &yn, 0.25, 1.0, 0.05) else {
+            return self.denorm(&(0..d).map(|_| rng.f64()).collect::<Vec<_>>());
+        };
+        let best = yn.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut top = (f64::NEG_INFINITY, vec![0.5; d]);
+        for _ in 0..256 {
+            let cand: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let (m, v) = gp.predict(&cand);
+            let s = v.sqrt();
+            let zscore = (m - best) / s;
+            let ei = (m - best) * cdf(zscore) + s * phi(zscore);
+            if ei > top.0 {
+                top = (ei, cand);
+            }
+        }
+        self.denorm(&top.1)
+    }
+
+    pub fn best(&self) -> Option<(Vec<f64>, f64)> {
+        let i = self
+            .ys
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())?
+            .0;
+        Some((self.denorm(&self.xs[i]), self.ys[i]))
+    }
+}
+
+/// Run a full BO loop against an objective.
+pub fn maximize(
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    budget: usize,
+    rng: &mut Rng,
+    mut f: impl FnMut(&[f64]) -> f64,
+) -> (Vec<f64>, f64, BayesOpt) {
+    let mut bo = BayesOpt::new(lo, hi);
+    for _ in 0..budget {
+        let x = bo.suggest(rng);
+        let y = f(&x);
+        bo.observe(&x, y);
+    }
+    let (x, y) = bo.best().unwrap();
+    (x, y, bo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_quadratic_peak() {
+        let mut rng = Rng::new(1);
+        let (x, y, _) = maximize(
+            vec![0.0, 0.0],
+            vec![1.0, 1.0],
+            40,
+            &mut rng,
+            |v| -((v[0] - 0.7).powi(2) + (v[1] - 0.3).powi(2)),
+        );
+        assert!(y > -0.02, "best objective {y}");
+        assert!((x[0] - 0.7).abs() < 0.15 && (x[1] - 0.3).abs() < 0.15, "{x:?}");
+    }
+
+    #[test]
+    fn beats_pure_random_on_narrow_peak() {
+        let obj = |v: &[f64]| -(10.0 * (v[0] - 0.42)).powi(2);
+        let mut rng = Rng::new(2);
+        let (_, y_bo, _) = maximize(vec![0.0], vec![1.0], 30, &mut rng, obj);
+        let mut rng2 = Rng::new(2);
+        let y_rand = (0..30)
+            .map(|_| obj(&[rng2.f64()]))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(y_bo >= y_rand - 1e-9, "bo {y_bo} vs random {y_rand}");
+    }
+
+    #[test]
+    fn erf_sane() {
+        assert!((erf(0.0)).abs() < 1e-6);
+        assert!((erf(10.0) - 1.0).abs() < 1e-7);
+        assert!((cdf(0.0) - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,86 @@
+//! Gaussian-process regression (RBF kernel + observation noise) — the
+//! surrogate model behind the Bayesian hyperparameter optimizer used for
+//! the Fig. 5/6 rank/γ sweeps (Shahriari et al. 2015 substitute).
+
+use crate::linalg::cholesky::{chol_solve, cholesky};
+use crate::linalg::Mat;
+
+pub struct Gp {
+    x: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    chol: Mat,
+    pub lengthscale: f64,
+    pub signal: f64,
+    pub noise: f64,
+}
+
+fn rbf(a: &[f64], b: &[f64], ls: f64, sig: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    sig * sig * (-d2 / (2.0 * ls * ls)).exp()
+}
+
+impl Gp {
+    /// Fit on observations (x_i, y_i). Inputs should be normalized to
+    /// [0, 1]^d by the caller.
+    pub fn fit(
+        x: Vec<Vec<f64>>,
+        y: &[f64],
+        lengthscale: f64,
+        signal: f64,
+        noise: f64,
+    ) -> Result<Gp, String> {
+        let n = x.len();
+        assert_eq!(n, y.len());
+        let mut k = Mat::from_fn(n, n, |i, j| rbf(&x[i], &x[j], lengthscale, signal));
+        k.shift_diag(noise * noise + 1e-10);
+        let chol = cholesky(&k)?;
+        let alpha = chol_solve(&chol, y);
+        Ok(Gp {
+            x,
+            alpha,
+            chol,
+            lengthscale,
+            signal,
+            noise,
+        })
+    }
+
+    /// Predictive mean and variance at a point.
+    pub fn predict(&self, xq: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kq: Vec<f64> = (0..n)
+            .map(|i| rbf(&self.x[i], xq, self.lengthscale, self.signal))
+            .collect();
+        let mean: f64 = kq.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+        let v = chol_solve(&self.chol, &kq);
+        let var = self.signal * self.signal - kq.iter().zip(&v).map(|(k, w)| k * w).sum::<f64>();
+        (mean, var.max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_training_points() {
+        let x: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64 / 5.0]).collect();
+        let y: Vec<f64> = x.iter().map(|v| (4.0 * v[0]).sin()).collect();
+        let gp = Gp::fit(x.clone(), &y, 0.3, 1.0, 1e-3).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (m, v) = gp.predict(xi);
+            assert!((m - yi).abs() < 0.05, "mean {m} vs {yi}");
+            assert!(v < 0.05);
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_away_from_data() {
+        let x = vec![vec![0.0], vec![0.1]];
+        let y = vec![0.0, 0.1];
+        let gp = Gp::fit(x, &y, 0.15, 1.0, 1e-3).unwrap();
+        let (_, v_near) = gp.predict(&[0.05]);
+        let (_, v_far) = gp.predict(&[0.9]);
+        assert!(v_far > v_near * 5.0);
+    }
+}

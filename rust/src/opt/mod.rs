@@ -1,0 +1,8 @@
+//! Bayesian hyperparameter optimization substrate (GP + EI) — used by the
+//! Fig. 5/6 validation-accuracy sweeps.
+
+pub mod bayes;
+pub mod gp;
+
+pub use bayes::{maximize, BayesOpt};
+pub use gp::Gp;

@@ -1,0 +1,182 @@
+//! Artifact manifest: the Rust-side mirror of python/compile/shapes.py,
+//! parsed from artifacts/manifest.json (written by aot.py). The runtime
+//! pads and batches strictly to these shapes — PJRT executables are
+//! shape-specialized.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes (all f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape (f32).
+    pub output: Vec<usize>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct WmdShapes {
+    pub batch: usize,
+    pub max_len: usize,
+    pub dim: usize,
+    pub sinkhorn_iters: usize,
+    pub eps: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CrossEncoderShapes {
+    pub batch: usize,
+    pub seq: usize,
+    pub dim: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CorefShapes {
+    pub batch: usize,
+    pub dim: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub wmd: WmdShapes,
+    pub cross_encoder: CrossEncoderShapes,
+    pub coref: CorefShapes,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_f64_vec()
+        .map(|v| v.into_iter().map(|x| x as usize).collect())
+        .ok_or_else(|| anyhow!("bad shape entry"))
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut artifacts = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, spec) in arts {
+            let file = dir.join(
+                spec.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+            );
+            let inputs = spec
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+                .iter()
+                .map(|i| shape_of(i.get("shape").ok_or_else(|| anyhow!("no shape"))?))
+                .collect::<Result<Vec<_>>>()?;
+            let output = shape_of(
+                spec.get("output")
+                    .and_then(|o| o.get("shape"))
+                    .ok_or_else(|| anyhow!("artifact {name} missing output"))?,
+            )?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file,
+                    inputs,
+                    output,
+                },
+            );
+        }
+
+        let shapes = j
+            .get("shapes")
+            .ok_or_else(|| anyhow!("manifest missing 'shapes'"))?;
+        let wmd_j = shapes.get("wmd").ok_or_else(|| anyhow!("no wmd shapes"))?;
+        let get = |o: &Json, k: &str| -> Result<f64> {
+            o.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("shapes missing {k}"))
+        };
+        let wmd = WmdShapes {
+            batch: get(wmd_j, "batch")? as usize,
+            max_len: get(wmd_j, "max_len")? as usize,
+            dim: get(wmd_j, "dim")? as usize,
+            sinkhorn_iters: get(wmd_j, "sinkhorn_iters")? as usize,
+            eps: get(wmd_j, "eps")?,
+        };
+        let ce_j = shapes
+            .get("cross_encoder")
+            .ok_or_else(|| anyhow!("no cross_encoder shapes"))?;
+        let cross_encoder = CrossEncoderShapes {
+            batch: get(ce_j, "batch")? as usize,
+            seq: get(ce_j, "seq")? as usize,
+            dim: get(ce_j, "dim")? as usize,
+        };
+        let co_j = shapes.get("coref").ok_or_else(|| anyhow!("no coref shapes"))?;
+        let coref = CorefShapes {
+            batch: get(co_j, "batch")? as usize,
+            dim: get(co_j, "dim")? as usize,
+        };
+        Ok(Manifest {
+            dir,
+            artifacts,
+            wmd,
+            cross_encoder,
+            coref,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+/// Locate the artifacts directory: $SIMMAT_ARTIFACTS or ./artifacts
+/// (walking up from cwd so tests and benches work from target dirs).
+pub fn default_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("SIMMAT_ARTIFACTS") {
+        return Some(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(dir) = default_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.contains_key("wmd_sim"));
+        let spec = m.spec("wmd_sim").unwrap();
+        assert_eq!(spec.inputs[0], vec![m.wmd.batch, m.wmd.max_len, m.wmd.dim]);
+        assert_eq!(spec.output, vec![m.wmd.batch]);
+        assert!(spec.file.exists());
+    }
+}

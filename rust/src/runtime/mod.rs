@@ -1,0 +1,27 @@
+//! PJRT runtime: artifact manifest, executable loading/execution, and the
+//! PJRT-backed similarity oracles. This is the only module that touches
+//! the `xla` crate — everything above it sees plain `SimOracle`s.
+
+pub mod manifest;
+pub mod oracles;
+pub mod pjrt;
+
+pub use manifest::{default_artifacts_dir, Manifest};
+pub use oracles::{CorefPjrtOracle, CrossEncoderPjrtOracle, PaddedDoc, SharedRuntime, WmdPjrtOracle};
+pub use pjrt::Runtime;
+
+use std::sync::{Arc, Mutex};
+
+/// Load the default artifacts directory into a shared runtime.
+pub fn shared_runtime() -> anyhow::Result<SharedRuntime> {
+    let dir = default_artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+    Ok(Arc::new(Mutex::new(Runtime::load(dir)?)))
+}
+
+/// Load a subset of artifacts into a shared runtime (faster startup).
+pub fn shared_runtime_subset(names: &[&str]) -> anyhow::Result<SharedRuntime> {
+    let dir = default_artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+    Ok(Arc::new(Mutex::new(Runtime::load_subset(dir, names)?)))
+}

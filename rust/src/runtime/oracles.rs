@@ -1,0 +1,240 @@
+//! PJRT-backed similarity oracles — the production request path. Each
+//! oracle packs index pairs into the fixed batch shape its artifact was
+//! lowered for, executes through the shared [`Runtime`], and unpacks the
+//! scores. Python is never involved.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::pjrt::Runtime;
+use crate::sim::wmd::Doc;
+use crate::sim::SimOracle;
+
+pub type SharedRuntime = Arc<Mutex<Runtime>>;
+
+/// A document padded to the artifact's (max_len, dim) with zero weights on
+/// padding rows (zero-weight rows carry no transport mass — see
+/// kernels/sinkhorn.py).
+#[derive(Clone, Debug)]
+pub struct PaddedDoc {
+    pub x: Vec<f32>, // max_len * dim
+    pub w: Vec<f32>, // max_len
+}
+
+impl PaddedDoc {
+    pub fn from_doc(doc: &Doc, max_len: usize, dim: usize) -> PaddedDoc {
+        assert!(
+            doc.len() <= max_len,
+            "document length {} exceeds artifact max_len {max_len}",
+            doc.len()
+        );
+        let mut x = vec![0.0f32; max_len * dim];
+        let mut w = vec![0.0f32; max_len];
+        for (i, word) in doc.words.iter().enumerate() {
+            assert_eq!(word.len(), dim, "embedding dim mismatch");
+            for (j, &v) in word.iter().enumerate() {
+                x[i * dim + j] = v as f32;
+            }
+            w[i] = doc.weights[i] as f32;
+        }
+        PaddedDoc { x, w }
+    }
+}
+
+/// exp(-γ·WMD) oracle over padded documents via the `wmd_sim` artifact
+/// (L2 graph + L1 Pallas Sinkhorn kernel).
+pub struct WmdPjrtOracle {
+    rt: SharedRuntime,
+    pub docs: Vec<PaddedDoc>,
+    pub gamma: f32,
+    batch: usize,
+    max_len: usize,
+    dim: usize,
+}
+
+impl WmdPjrtOracle {
+    pub fn new(rt: SharedRuntime, docs: &[Doc], gamma: f64) -> Result<WmdPjrtOracle> {
+        let (batch, max_len, dim) = {
+            let r = rt.lock().unwrap();
+            (r.manifest.wmd.batch, r.manifest.wmd.max_len, r.manifest.wmd.dim)
+        };
+        let padded = docs
+            .iter()
+            .map(|d| PaddedDoc::from_doc(d, max_len, dim))
+            .collect();
+        Ok(WmdPjrtOracle {
+            rt,
+            docs: padded,
+            gamma: gamma as f32,
+            batch,
+            max_len,
+            dim,
+        })
+    }
+
+    /// Similarity of document i against an external padded document (WME
+    /// random features). Batched over `externals`.
+    pub fn sim_to_externals(&self, i: usize, externals: &[PaddedDoc]) -> Vec<f64> {
+        let pairs: Vec<(&PaddedDoc, &PaddedDoc)> =
+            externals.iter().map(|e| (&self.docs[i], e)).collect();
+        self.run_doc_pairs(&pairs)
+    }
+
+    fn run_doc_pairs(&self, pairs: &[(&PaddedDoc, &PaddedDoc)]) -> Vec<f64> {
+        let (b, l, d) = (self.batch, self.max_len, self.dim);
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(b) {
+            let mut x1 = vec![0.0f32; b * l * d];
+            let mut w1 = vec![0.0f32; b * l];
+            let mut x2 = vec![0.0f32; b * l * d];
+            let mut w2 = vec![0.0f32; b * l];
+            for slot in 0..b {
+                // Pad the final partial chunk by repeating its first pair.
+                let (da, db) = chunk[slot.min(chunk.len() - 1)];
+                x1[slot * l * d..(slot + 1) * l * d].copy_from_slice(&da.x);
+                w1[slot * l..(slot + 1) * l].copy_from_slice(&da.w);
+                x2[slot * l * d..(slot + 1) * l * d].copy_from_slice(&db.x);
+                w2[slot * l..(slot + 1) * l].copy_from_slice(&db.w);
+            }
+            let gamma = [self.gamma];
+            let vals = self
+                .rt
+                .lock()
+                .unwrap()
+                .execute("wmd_sim", &[&x1, &w1, &x2, &w2, &gamma])
+                .expect("wmd_sim execution failed");
+            out.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        out
+    }
+}
+
+impl SimOracle for WmdPjrtOracle {
+    fn n(&self) -> usize {
+        self.docs.len()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let doc_pairs: Vec<(&PaddedDoc, &PaddedDoc)> = pairs
+            .iter()
+            .map(|&(i, j)| (&self.docs[i], &self.docs[j]))
+            .collect();
+        self.run_doc_pairs(&doc_pairs)
+    }
+}
+
+/// Cross-encoder sentence-pair oracle via the `cross_encoder` artifact.
+/// Inherently asymmetric — wrap in [`crate::sim::Symmetrized`] before
+/// approximating (Sec. 4.2).
+pub struct CrossEncoderPjrtOracle {
+    rt: SharedRuntime,
+    /// Sentence token embeddings, each seq*dim f32.
+    pub sentences: Vec<Vec<f32>>,
+    batch: usize,
+    seq: usize,
+    dim: usize,
+}
+
+impl CrossEncoderPjrtOracle {
+    pub fn new(rt: SharedRuntime, sentences: Vec<Vec<f32>>) -> Result<CrossEncoderPjrtOracle> {
+        let (batch, seq, dim) = {
+            let r = rt.lock().unwrap();
+            let s = r.manifest.cross_encoder;
+            (s.batch, s.seq, s.dim)
+        };
+        for s in &sentences {
+            assert_eq!(s.len(), seq * dim, "sentence shape mismatch");
+        }
+        Ok(CrossEncoderPjrtOracle {
+            rt,
+            sentences,
+            batch,
+            seq,
+            dim,
+        })
+    }
+}
+
+impl SimOracle for CrossEncoderPjrtOracle {
+    fn n(&self) -> usize {
+        self.sentences.len()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let (b, sd) = (self.batch, self.seq * self.dim);
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(b) {
+            let mut x1 = vec![0.0f32; b * sd];
+            let mut x2 = vec![0.0f32; b * sd];
+            for slot in 0..b {
+                let (i, j) = chunk[slot.min(chunk.len() - 1)];
+                x1[slot * sd..(slot + 1) * sd].copy_from_slice(&self.sentences[i]);
+                x2[slot * sd..(slot + 1) * sd].copy_from_slice(&self.sentences[j]);
+            }
+            let vals = self
+                .rt
+                .lock()
+                .unwrap()
+                .execute("cross_encoder", &[&x1, &x2])
+                .expect("cross_encoder execution failed");
+            out.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        out
+    }
+}
+
+/// Coreference mention-pair oracle via the `coref_mlp` artifact.
+pub struct CorefPjrtOracle {
+    rt: SharedRuntime,
+    /// Mention embeddings, each dim f32.
+    pub mentions: Vec<Vec<f32>>,
+    batch: usize,
+    dim: usize,
+}
+
+impl CorefPjrtOracle {
+    pub fn new(rt: SharedRuntime, mentions: Vec<Vec<f32>>) -> Result<CorefPjrtOracle> {
+        let (batch, dim) = {
+            let r = rt.lock().unwrap();
+            (r.manifest.coref.batch, r.manifest.coref.dim)
+        };
+        for m in &mentions {
+            assert_eq!(m.len(), dim, "mention dim mismatch");
+        }
+        Ok(CorefPjrtOracle {
+            rt,
+            mentions,
+            batch,
+            dim,
+        })
+    }
+}
+
+impl SimOracle for CorefPjrtOracle {
+    fn n(&self) -> usize {
+        self.mentions.len()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let (b, d) = (self.batch, self.dim);
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(b) {
+            let mut m1 = vec![0.0f32; b * d];
+            let mut m2 = vec![0.0f32; b * d];
+            for slot in 0..b {
+                let (i, j) = chunk[slot.min(chunk.len() - 1)];
+                m1[slot * d..(slot + 1) * d].copy_from_slice(&self.mentions[i]);
+                m2[slot * d..(slot + 1) * d].copy_from_slice(&self.mentions[j]);
+            }
+            let vals = self
+                .rt
+                .lock()
+                .unwrap()
+                .execute("coref_mlp", &[&m1, &m2])
+                .expect("coref_mlp execution failed");
+            out.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        out
+    }
+}

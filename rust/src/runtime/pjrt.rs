@@ -1,0 +1,149 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the CPU
+//! client. Mirrors /opt/xla-example/load_hlo — text interchange because
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos.
+//!
+//! The client and executables are owned by one `Runtime`; `SimOracle`
+//! implementations wrap it in a `Mutex` (PJRT handles are not `Sync`), and
+//! the coordinator runs executions on a dedicated worker thread.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed per artifact (serving metrics).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+// SAFETY: the xla crate wraps PJRT handles in `Rc`, making them !Send, but
+// every Rc clone lives inside this Runtime (client + executables compiled
+// from it) and is never shared outside it. All access goes through
+// `Arc<Mutex<Runtime>>` (see oracles.rs), so at most one thread touches the
+// handles — and the PJRT CPU client itself is thread-safe. Moving the whole
+// Runtime between threads under those conditions is sound.
+unsafe impl Send for Runtime {}
+
+impl Runtime {
+    /// Load + compile every artifact in the manifest (eager: serve-time
+    /// latency must not include compilation).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let exe = compile_artifact(&client, spec)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            manifest,
+            client,
+            exes,
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Load only the named artifacts (tests that need a subset compile
+    /// faster).
+    pub fn load_subset(dir: impl AsRef<Path>, names: &[&str]) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for &name in names {
+            let spec = manifest.spec(name)?;
+            let exe = compile_artifact(&client, spec)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(Runtime {
+            manifest,
+            client,
+            exes,
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact with f32 inputs, shape-checked against the
+    /// manifest. Returns the flattened f32 output.
+    pub fn execute(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let spec = self.manifest.spec(name)?.clone();
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}': {} inputs supplied, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (k, (data, shape)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let numel: usize = shape.iter().product();
+            if data.len() != numel {
+                return Err(anyhow!(
+                    "artifact '{name}' input {k}: {} elements, shape {:?} needs {numel}",
+                    data.len(),
+                    shape
+                ));
+            }
+            let lit = if shape.is_empty() {
+                xla::Literal::from(data[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input {k}: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute '{name}': {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal '{name}': {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple '{name}': {e:?}"))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("read output '{name}': {e:?}"))?;
+        let expect: usize = spec.output.iter().product();
+        if values.len() != expect {
+            return Err(anyhow!(
+                "artifact '{name}': output {} elements, expected {expect}",
+                values.len()
+            ));
+        }
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        Ok(values)
+    }
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    spec: &ArtifactSpec,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = spec
+        .file
+        .to_str()
+        .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.file))?;
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse HLO text {path}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {path}: {e:?}"))
+}

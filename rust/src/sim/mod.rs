@@ -1,0 +1,10 @@
+//! Similarity oracles: the trait, counting/symmetrizing wrappers, the
+//! Rust Sinkhorn-WMD twin of the L1 kernel, and synthetic test matrices.
+//! PJRT-backed oracles (the production path) live in `runtime::oracles`.
+
+pub mod oracle;
+pub mod synthetic;
+pub mod wmd;
+
+pub use oracle::{CountingOracle, DenseOracle, SimOracle, Symmetrized};
+pub use wmd::{Doc, SinkhornCfg, WmdOracle};

@@ -1,0 +1,215 @@
+//! The similarity-oracle abstraction the whole library is built around.
+//!
+//! A `SimOracle` answers batched similarity queries Δ(x_i, x_j) by index.
+//! The sublinear approximation algorithms only see this trait — the meter
+//! for the paper's headline claim is `CountingOracle`, which counts exact
+//! similarity evaluations so benches can report O(n·s) vs Ω(n²).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::Mat;
+
+pub trait SimOracle: Sync {
+    /// Number of data points.
+    fn n(&self) -> usize;
+
+    /// Evaluate Δ(x_i, x_j) for every pair in the batch.
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64>;
+
+    fn eval(&self, i: usize, j: usize) -> f64 {
+        self.eval_batch(&[(i, j)])[0]
+    }
+
+    /// Materialize the full n x n matrix — Ω(n²) evaluations; used only by
+    /// baselines ("WMD-kernel", "Optimal") and error measurement.
+    fn materialize(&self) -> Mat {
+        let n = self.n();
+        let mut pairs = Vec::with_capacity(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                pairs.push((i, j));
+            }
+        }
+        let vals = self.eval_batch(&pairs);
+        Mat {
+            rows: n,
+            cols: n,
+            data: vals,
+        }
+    }
+
+    /// Assemble the n x |cols| column block K S (plus dedup-friendly order).
+    fn columns(&self, cols: &[usize]) -> Mat {
+        let n = self.n();
+        let mut pairs = Vec::with_capacity(n * cols.len());
+        for i in 0..n {
+            for &j in cols {
+                pairs.push((i, j));
+            }
+        }
+        let vals = self.eval_batch(&pairs);
+        Mat {
+            rows: n,
+            cols: cols.len(),
+            data: vals,
+        }
+    }
+
+    /// Principal submatrix K[idx, idx].
+    fn submatrix(&self, idx: &[usize]) -> Mat {
+        let mut pairs = Vec::with_capacity(idx.len() * idx.len());
+        for &i in idx {
+            for &j in idx {
+                pairs.push((i, j));
+            }
+        }
+        let vals = self.eval_batch(&pairs);
+        Mat {
+            rows: idx.len(),
+            cols: idx.len(),
+            data: vals,
+        }
+    }
+}
+
+/// Oracle backed by a fully materialized matrix (tests, cached baselines).
+pub struct DenseOracle {
+    pub k: Mat,
+}
+
+impl DenseOracle {
+    pub fn new(k: Mat) -> Self {
+        assert!(k.is_square());
+        DenseOracle { k }
+    }
+}
+
+impl SimOracle for DenseOracle {
+    fn n(&self) -> usize {
+        self.k.rows
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        pairs.iter().map(|&(i, j)| self.k.get(i, j)).collect()
+    }
+}
+
+/// Wrapper that counts exact similarity evaluations (deduplicating repeats
+/// is the caller's job; the paper counts every Δ call).
+pub struct CountingOracle<'a> {
+    inner: &'a dyn SimOracle,
+    count: AtomicU64,
+}
+
+impl<'a> CountingOracle<'a> {
+    pub fn new(inner: &'a dyn SimOracle) -> Self {
+        CountingOracle {
+            inner,
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+impl SimOracle for CountingOracle<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        self.count.fetch_add(pairs.len() as u64, Ordering::Relaxed);
+        self.inner.eval_batch(pairs)
+    }
+}
+
+/// Symmetrizing wrapper: Δ̄(i,j) = (Δ(i,j) + Δ(j,i)) / 2 (Sec. 4.2 of the
+/// paper — applied to cross-encoder and coref matrices).
+pub struct Symmetrized<'a> {
+    inner: &'a dyn SimOracle,
+}
+
+impl<'a> Symmetrized<'a> {
+    pub fn new(inner: &'a dyn SimOracle) -> Self {
+        Symmetrized { inner }
+    }
+}
+
+impl SimOracle for Symmetrized<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let mut both = Vec::with_capacity(pairs.len() * 2);
+        for &(i, j) in pairs {
+            both.push((i, j));
+            both.push((j, i));
+        }
+        let vals = self.inner.eval_batch(&both);
+        vals.chunks(2).map(|c| 0.5 * (c[0] + c[1])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_oracle_roundtrip() {
+        let mut rng = Rng::new(1);
+        let k = Mat::gaussian(6, 6, &mut rng);
+        let o = DenseOracle::new(k.clone());
+        assert_eq!(o.n(), 6);
+        assert_eq!(o.eval(2, 3), k.get(2, 3));
+        assert!(o.materialize().max_abs_diff(&k) < 1e-15);
+    }
+
+    #[test]
+    fn counting_counts() {
+        let mut rng = Rng::new(2);
+        let k = Mat::gaussian(5, 5, &mut rng);
+        let o = DenseOracle::new(k);
+        let c = CountingOracle::new(&o);
+        c.eval_batch(&[(0, 1), (1, 2), (3, 4)]);
+        c.eval(0, 0);
+        assert_eq!(c.calls(), 4);
+        c.reset();
+        assert_eq!(c.calls(), 0);
+    }
+
+    #[test]
+    fn symmetrized_is_symmetric() {
+        let mut rng = Rng::new(3);
+        let k = Mat::gaussian(7, 7, &mut rng);
+        let o = DenseOracle::new(k.clone());
+        let s = Symmetrized::new(&o);
+        for i in 0..7 {
+            for j in 0..7 {
+                let v = s.eval(i, j);
+                assert!((v - s.eval(j, i)).abs() < 1e-15);
+                assert!((v - 0.5 * (k.get(i, j) + k.get(j, i))).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn columns_and_submatrix() {
+        let k = Mat::from_fn(4, 4, |i, j| (10 * i + j) as f64);
+        let o = DenseOracle::new(k);
+        let c = o.columns(&[1, 3]);
+        assert_eq!(c.rows, 4);
+        assert_eq!(c.get(2, 0), 21.0);
+        assert_eq!(c.get(2, 1), 23.0);
+        let s = o.submatrix(&[0, 2]);
+        assert_eq!(s.get(0, 1), 2.0);
+        assert_eq!(s.get(1, 0), 20.0);
+    }
+}

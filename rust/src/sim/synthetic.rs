@@ -1,0 +1,144 @@
+//! Synthetic test-matrix oracles used by Fig. 3's controlled comparisons:
+//! the i.i.d. Gaussian PSD matrix Z Z^T, RBF kernels, and tunable
+//! near-PSD matrices (PSD part + scaled indefinite perturbation).
+
+use super::oracle::SimOracle;
+use crate::linalg::{dot, Mat};
+use crate::util::rng::Rng;
+
+/// K = Z Z^T with Z in R^{n x d}, i.i.d. N(0,1) — the paper's PSD test
+/// matrix (they use d = n = 1000). Entries computed lazily from rows.
+pub struct GaussianPsdOracle {
+    z: Mat,
+}
+
+impl GaussianPsdOracle {
+    pub fn new(n: usize, d: usize, rng: &mut Rng) -> Self {
+        GaussianPsdOracle {
+            z: Mat::gaussian(n, d, rng),
+        }
+    }
+}
+
+impl SimOracle for GaussianPsdOracle {
+    fn n(&self) -> usize {
+        self.z.rows
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|&(i, j)| dot(self.z.row(i), self.z.row(j)))
+            .collect()
+    }
+}
+
+/// RBF kernel exp(-||x_i - x_j||^2 / (2 sigma^2)) over random points — a
+/// strictly PSD similarity with fast spectral decay.
+pub struct RbfOracle {
+    x: Mat,
+    inv_two_sigma_sq: f64,
+}
+
+impl RbfOracle {
+    pub fn new(n: usize, d: usize, sigma: f64, rng: &mut Rng) -> Self {
+        RbfOracle {
+            x: Mat::gaussian(n, d, rng),
+            inv_two_sigma_sq: 1.0 / (2.0 * sigma * sigma),
+        }
+    }
+}
+
+impl SimOracle for RbfOracle {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|&(i, j)| {
+                let d2: f64 = self
+                    .x
+                    .row(i)
+                    .iter()
+                    .zip(self.x.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (-d2 * self.inv_two_sigma_sq).exp()
+            })
+            .collect()
+    }
+}
+
+/// Controlled near-PSD matrix: K = G G^T / d + mu * (A - A^T)/2sym ... more
+/// precisely K = PSD + mu * S where S is a random symmetric indefinite
+/// perturbation. `mu` dials how far from PSD the matrix is — used by the
+/// alpha/z sweep (Fig 9) and unit tests for SMS-Nyström.
+pub struct NearPsdOracle {
+    k: Mat,
+}
+
+impl NearPsdOracle {
+    pub fn new(n: usize, rank: usize, mu: f64, rng: &mut Rng) -> Self {
+        let g = Mat::gaussian(n, rank, rng);
+        let mut k = g.matmul_nt(&g).scale(1.0 / rank as f64);
+        let p = Mat::gaussian(n, n, rng);
+        let s = p.add(&p.transpose()).scale(0.5 / (n as f64).sqrt());
+        k = k.add(&s.scale(mu));
+        NearPsdOracle { k }
+    }
+
+    pub fn dense(&self) -> &Mat {
+        &self.k
+    }
+}
+
+impl SimOracle for NearPsdOracle {
+    fn n(&self) -> usize {
+        self.k.rows
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        pairs.iter().map(|&(i, j)| self.k.get(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh;
+
+    #[test]
+    fn gaussian_psd_matches_zzt() {
+        let mut rng = Rng::new(1);
+        let o = GaussianPsdOracle::new(20, 20, &mut rng);
+        let k = o.materialize();
+        let e = eigh(&k.symmetrized()).unwrap();
+        assert!(e.vals[0] > -1e-9, "ZZ^T must be PSD, lmin={}", e.vals[0]);
+    }
+
+    #[test]
+    fn rbf_diag_is_one_and_psd() {
+        let mut rng = Rng::new(2);
+        let o = RbfOracle::new(15, 4, 1.0, &mut rng);
+        let k = o.materialize();
+        for i in 0..15 {
+            assert!((k.get(i, i) - 1.0).abs() < 1e-12);
+        }
+        let e = eigh(&k).unwrap();
+        assert!(e.vals[0] > -1e-9);
+    }
+
+    #[test]
+    fn near_psd_mu_controls_negativity() {
+        let mut rng = Rng::new(3);
+        let close = NearPsdOracle::new(40, 10, 0.05, &mut rng);
+        let far = NearPsdOracle::new(40, 10, 0.8, &mut rng);
+        let neg_mass = |k: &Mat| {
+            let e = eigh(k).unwrap();
+            e.vals.iter().filter(|&&v| v < 0.0).map(|v| -v).sum::<f64>()
+        };
+        assert!(neg_mass(close.dense()) < neg_mass(far.dense()));
+    }
+}

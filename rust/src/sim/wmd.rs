@@ -1,0 +1,207 @@
+//! Rust-side Sinkhorn WMD oracle — the numeric twin of the L1 Pallas
+//! kernel. Used (a) to cross-validate the PJRT artifact, (b) as a fallback
+//! oracle when artifacts are not built (unit tests), and (c) by the WME
+//! baseline for random-feature construction.
+//!
+//! Math is identical to python/compile/kernels/{sinkhorn.py, ref.py}:
+//! mean-normalized Euclidean ground cost, exp-domain Sinkhorn with
+//! epsilon-guarded divisions, cost = <P, C>, similarity = exp(-gamma d).
+
+use super::oracle::SimOracle;
+
+/// A document as a weighted point cloud in embedding space.
+#[derive(Clone, Debug)]
+pub struct Doc {
+    /// len x dim word embeddings.
+    pub words: Vec<Vec<f64>>,
+    /// Normalized bag-of-words weights (sum to 1).
+    pub weights: Vec<f64>,
+}
+
+impl Doc {
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+}
+
+/// Configuration mirroring python/compile/shapes.py::WmdShapes.
+#[derive(Clone, Copy, Debug)]
+pub struct SinkhornCfg {
+    pub iters: usize,
+    pub eps: f64,
+}
+
+impl Default for SinkhornCfg {
+    fn default() -> Self {
+        SinkhornCfg {
+            iters: 30,
+            eps: 0.05,
+        }
+    }
+}
+
+/// Euclidean cost matrix between two docs, normalized by the *weighted*
+/// mean cost Σ_ij wa_i wb_j d_ij (row-major la x lb). The weighted mean is
+/// invariant to zero-weight padding — the padded PJRT artifact and this
+/// unpadded twin produce identical costs (see kernels/ref.py).
+pub fn ground_cost(a: &Doc, b: &Doc) -> (Vec<f64>, usize, usize) {
+    let (la, lb) = (a.len(), b.len());
+    let mut c = vec![0.0; la * lb];
+    let mut wmean = 0.0;
+    for i in 0..la {
+        for j in 0..lb {
+            let d: f64 = a.words[i]
+                .iter()
+                .zip(&b.words[j])
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt();
+            c[i * lb + j] = d;
+            wmean += a.weights[i] * b.weights[j] * d;
+        }
+    }
+    let mean = wmean.max(1e-30);
+    for x in c.iter_mut() {
+        *x /= mean;
+    }
+    (c, la, lb)
+}
+
+/// Entropic OT cost between two documents.
+pub fn sinkhorn_cost(a: &Doc, b: &Doc, cfg: SinkhornCfg) -> f64 {
+    let (c, la, lb) = ground_cost(a, b);
+    let gibbs: Vec<f64> = c.iter().map(|x| (-x / cfg.eps).exp()).collect();
+    let mut u = a.weights.clone();
+    let mut v = vec![1.0; lb];
+    for _ in 0..cfg.iters {
+        // u = wa / (K v)
+        for i in 0..la {
+            let kv: f64 = gibbs[i * lb..(i + 1) * lb]
+                .iter()
+                .zip(&v)
+                .map(|(k, vv)| k * vv)
+                .sum();
+            u[i] = a.weights[i] / kv.max(1e-30);
+        }
+        // v = wb / (K^T u)
+        for j in 0..lb {
+            let mut ktu = 0.0;
+            for i in 0..la {
+                ktu += gibbs[i * lb + j] * u[i];
+            }
+            v[j] = b.weights[j] / ktu.max(1e-30);
+        }
+    }
+    let mut cost = 0.0;
+    for i in 0..la {
+        for j in 0..lb {
+            cost += u[i] * gibbs[i * lb + j] * c[i * lb + j] * v[j];
+        }
+    }
+    cost
+}
+
+/// exp(-gamma * WMD) similarity oracle over a document collection.
+pub struct WmdOracle {
+    pub docs: Vec<Doc>,
+    pub gamma: f64,
+    pub cfg: SinkhornCfg,
+}
+
+impl WmdOracle {
+    pub fn new(docs: Vec<Doc>, gamma: f64, cfg: SinkhornCfg) -> Self {
+        WmdOracle { docs, gamma, cfg }
+    }
+
+    /// Similarity against an external document (WME random features need
+    /// doc-vs-random-doc evaluations that are not index pairs).
+    pub fn sim_to(&self, i: usize, other: &Doc) -> f64 {
+        (-self.gamma * sinkhorn_cost(&self.docs[i], other, self.cfg)).exp()
+    }
+}
+
+impl SimOracle for WmdOracle {
+    fn n(&self) -> usize {
+        self.docs.len()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|&(i, j)| {
+                (-self.gamma * sinkhorn_cost(&self.docs[i], &self.docs[j], self.cfg)).exp()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_doc(len: usize, dim: usize, rng: &mut Rng) -> Doc {
+        let words = (0..len)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let mut w: Vec<f64> = (0..len).map(|_| rng.f64() + 0.1).collect();
+        let s: f64 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x /= s);
+        Doc { words, weights: w }
+    }
+
+    #[test]
+    fn self_cost_small_cross_cost_larger() {
+        let mut rng = Rng::new(1);
+        let a = random_doc(8, 16, &mut rng);
+        let b = random_doc(8, 16, &mut rng);
+        let cfg = SinkhornCfg { iters: 200, eps: 0.02 };
+        let self_cost = sinkhorn_cost(&a, &a, cfg);
+        let cross = sinkhorn_cost(&a, &b, cfg);
+        assert!(self_cost < cross, "self={self_cost} cross={cross}");
+        assert!(self_cost >= -1e-9);
+    }
+
+    #[test]
+    fn cost_symmetric_for_equal_weights() {
+        let mut rng = Rng::new(2);
+        let mut a = random_doc(6, 8, &mut rng);
+        let mut b = random_doc(6, 8, &mut rng);
+        a.weights = vec![1.0 / 6.0; 6];
+        b.weights = vec![1.0 / 6.0; 6];
+        let cfg = SinkhornCfg { iters: 300, eps: 0.05 };
+        let ab = sinkhorn_cost(&a, &b, cfg);
+        let ba = sinkhorn_cost(&b, &a, cfg);
+        assert!((ab - ba).abs() < 1e-6, "ab={ab} ba={ba}");
+    }
+
+    #[test]
+    fn oracle_similarities_in_unit_interval() {
+        let mut rng = Rng::new(3);
+        let docs: Vec<Doc> = (0..5).map(|_| random_doc(6, 8, &mut rng)).collect();
+        let o = WmdOracle::new(docs, 0.75, SinkhornCfg::default());
+        let k = o.materialize();
+        for v in &k.data {
+            assert!(*v > 0.0 && *v <= 1.0 + 1e-9);
+        }
+        // Diagonal should be the largest entry in its row most of the time.
+        for i in 0..5 {
+            let diag = k.get(i, i);
+            let row_max = (0..5).map(|j| k.get(i, j)).fold(f64::MIN, f64::max);
+            assert!(diag >= row_max - 1e-9);
+        }
+    }
+
+    #[test]
+    fn different_lengths_supported() {
+        let mut rng = Rng::new(4);
+        let a = random_doc(4, 8, &mut rng);
+        let b = random_doc(9, 8, &mut rng);
+        let c = sinkhorn_cost(&a, &b, SinkhornCfg::default());
+        assert!(c.is_finite() && c > 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Average-linkage agglomerative clustering with a similarity threshold —
+//! the clustering step of Cattan et al. 2020 used for cross-document
+//! coreference (Sec. 4.3). Lance-Williams updates on a dense similarity
+//! matrix; merging stops when the best pair falls below the threshold.
+
+use crate::linalg::Mat;
+
+/// Cluster `sim` (n x n similarity matrix, symmetric) with average
+/// linkage; stop when max inter-cluster similarity < `threshold`.
+/// Returns cluster id per point.
+pub fn average_linkage(sim: &Mat, threshold: f64) -> Vec<usize> {
+    let n = sim.rows;
+    assert!(sim.is_square());
+    // Active cluster -> member count; merged clusters become inactive.
+    let mut active: Vec<bool> = vec![true; n];
+    let mut size: Vec<f64> = vec![1.0; n];
+    let mut s = sim.clone(); // inter-cluster average similarity
+    let mut parent: Vec<usize> = (0..n).collect();
+
+    loop {
+        // Find best active pair.
+        let mut best = (f64::NEG_INFINITY, 0, 0);
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            for j in (i + 1)..n {
+                if !active[j] {
+                    continue;
+                }
+                let v = s.get(i, j);
+                if v > best.0 {
+                    best = (v, i, j);
+                }
+            }
+        }
+        let (v, a, b) = best;
+        if v < threshold || !v.is_finite() {
+            break;
+        }
+        // Merge b into a with Lance-Williams average-linkage update.
+        let (na, nb) = (size[a], size[b]);
+        for k in 0..n {
+            if !active[k] || k == a || k == b {
+                continue;
+            }
+            let new = (na * s.get(a, k) + nb * s.get(b, k)) / (na + nb);
+            s.set(a, k, new);
+            s.set(k, a, new);
+        }
+        size[a] += size[b];
+        active[b] = false;
+        parent[b] = a;
+    }
+    // Path-compress to cluster representatives, then densify ids.
+    let mut root = vec![0usize; n];
+    for i in 0..n {
+        let mut r = i;
+        while parent[r] != r {
+            r = parent[r];
+        }
+        root[i] = r;
+    }
+    let mut remap = std::collections::HashMap::new();
+    let mut next = 0usize;
+    root.iter()
+        .map(|&r| {
+            *remap.entry(r).or_insert_with(|| {
+                let id = next;
+                next += 1;
+                id
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn block_sim(blocks: &[usize], within: f64, across: f64, noise: f64, rng: &mut Rng) -> Mat {
+        let n = blocks.len();
+        let mut m = Mat::from_fn(n, n, |i, j| {
+            let base = if blocks[i] == blocks[j] { within } else { across };
+            base + noise * rng.normal()
+        });
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m.symmetrized()
+    }
+
+    #[test]
+    fn recovers_planted_blocks() {
+        let mut rng = Rng::new(1);
+        let blocks: Vec<usize> = (0..30).map(|i| i / 10).collect();
+        let sim = block_sim(&blocks, 0.8, 0.1, 0.03, &mut rng);
+        let got = average_linkage(&sim, 0.45);
+        // Same block -> same cluster; different blocks -> different.
+        for i in 0..30 {
+            for j in 0..30 {
+                assert_eq!(
+                    got[i] == got[j],
+                    blocks[i] == blocks[j],
+                    "pair ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn high_threshold_yields_singletons() {
+        let mut rng = Rng::new(2);
+        let blocks: Vec<usize> = (0..12).map(|i| i / 4).collect();
+        let sim = block_sim(&blocks, 0.6, 0.1, 0.01, &mut rng);
+        let got = average_linkage(&sim, 10.0);
+        let distinct: std::collections::HashSet<usize> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), 12);
+    }
+
+    #[test]
+    fn low_threshold_merges_everything() {
+        let mut rng = Rng::new(3);
+        let blocks: Vec<usize> = (0..12).map(|i| i / 4).collect();
+        let sim = block_sim(&blocks, 0.6, 0.1, 0.01, &mut rng);
+        let got = average_linkage(&sim, -10.0);
+        assert!(got.iter().all(|&c| c == got[0]));
+    }
+}

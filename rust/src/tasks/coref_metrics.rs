@@ -1,0 +1,249 @@
+//! Coreference metrics: MUC, B³, CEAF-e and their average (CoNLL F1,
+//! Pradhan et al. 2014) — the evaluation used for the ECB+ experiments
+//! (Fig. 4). CEAF-e uses an optimal cluster alignment computed with the
+//! Hungarian algorithm (implemented from scratch below).
+
+use std::collections::HashMap;
+
+/// Clusters as lists of member indices, from per-point cluster ids.
+fn to_clusters(ids: &[usize]) -> Vec<Vec<usize>> {
+    let mut m: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, &c) in ids.iter().enumerate() {
+        m.entry(c).or_default().push(i);
+    }
+    let mut v: Vec<Vec<usize>> = m.into_values().collect();
+    v.sort_by_key(|c| c[0]);
+    v
+}
+
+fn prf(p_num: f64, p_den: f64, r_num: f64, r_den: f64) -> (f64, f64, f64) {
+    let p = if p_den > 0.0 { p_num / p_den } else { 0.0 };
+    let r = if r_den > 0.0 { r_num / r_den } else { 0.0 };
+    let f = if p + r > 0.0 { 2.0 * p * r / (p + r) } else { 0.0 };
+    (p, r, f)
+}
+
+/// MUC (link-based): recall = Σ (|g| - partitions(g, pred)) / Σ (|g| - 1).
+pub fn muc(pred: &[usize], gold: &[usize]) -> (f64, f64, f64) {
+    let count = |from: &[usize], to: &[usize]| -> (f64, f64) {
+        let clusters = to_clusters(from);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for c in &clusters {
+            if c.len() < 2 {
+                continue;
+            }
+            let mut parts = std::collections::HashSet::new();
+            for &m in c {
+                parts.insert(to[m]);
+            }
+            num += (c.len() - parts.len()) as f64;
+            den += (c.len() - 1) as f64;
+        }
+        (num, den)
+    };
+    let (rn, rd) = count(gold, pred);
+    let (pn, pd) = count(pred, gold);
+    prf(pn, pd, rn, rd)
+}
+
+/// B³ (mention-based).
+pub fn b_cubed(pred: &[usize], gold: &[usize]) -> (f64, f64, f64) {
+    let n = pred.len();
+    let pred_c = to_clusters(pred);
+    let gold_c = to_clusters(gold);
+    let pred_of: Vec<usize> = {
+        let mut v = vec![0; n];
+        for (ci, c) in pred_c.iter().enumerate() {
+            for &m in c {
+                v[m] = ci;
+            }
+        }
+        v
+    };
+    let gold_of: Vec<usize> = {
+        let mut v = vec![0; n];
+        for (ci, c) in gold_c.iter().enumerate() {
+            for &m in c {
+                v[m] = ci;
+            }
+        }
+        v
+    };
+    // Overlap counts per (pred cluster, gold cluster).
+    let mut overlap: HashMap<(usize, usize), f64> = HashMap::new();
+    for i in 0..n {
+        *overlap.entry((pred_of[i], gold_of[i])).or_insert(0.0) += 1.0;
+    }
+    let mut p_sum = 0.0;
+    let mut r_sum = 0.0;
+    for (&(pc, gc), &o) in &overlap {
+        p_sum += o * o / pred_c[pc].len() as f64;
+        r_sum += o * o / gold_c[gc].len() as f64;
+    }
+    prf(p_sum, n as f64, r_sum, n as f64)
+}
+
+/// CEAF-e (entity-based, φ4 similarity) with optimal alignment.
+pub fn ceaf_e(pred: &[usize], gold: &[usize]) -> (f64, f64, f64) {
+    let pred_c = to_clusters(pred);
+    let gold_c = to_clusters(gold);
+    let phi4 = |a: &[usize], b: &[usize]| {
+        let sa: std::collections::HashSet<usize> = a.iter().copied().collect();
+        let inter = b.iter().filter(|m| sa.contains(m)).count() as f64;
+        2.0 * inter / (a.len() + b.len()) as f64
+    };
+    let rows = pred_c.len();
+    let cols = gold_c.len();
+    let dim = rows.max(cols);
+    // Cost matrix for Hungarian (maximize phi4 -> minimize (max - phi4)).
+    let mut score = vec![vec![0.0; dim]; dim];
+    for (i, row) in score.iter_mut().enumerate().take(rows) {
+        for (j, cell) in row.iter_mut().enumerate().take(cols) {
+            *cell = phi4(&pred_c[i], &gold_c[j]);
+        }
+    }
+    let total = hungarian_max(&score);
+    prf(total, rows as f64, total, cols as f64)
+}
+
+/// CoNLL F1 = mean of MUC, B³, CEAF-e F1s.
+pub fn conll_f1(pred: &[usize], gold: &[usize]) -> f64 {
+    (muc(pred, gold).2 + b_cubed(pred, gold).2 + ceaf_e(pred, gold).2) / 3.0
+}
+
+/// Maximum-weight perfect matching on a square score matrix via the
+/// Hungarian (Kuhn-Munkres) algorithm, O(n³). Returns total matched score.
+pub fn hungarian_max(score: &[Vec<f64>]) -> f64 {
+    let n = score.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let big = score
+        .iter()
+        .flat_map(|r| r.iter())
+        .cloned()
+        .fold(0.0f64, f64::max);
+    // Convert to min-cost with the JV-style potentials formulation.
+    // cost[i][j] = big - score[i][j] >= 0.
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0; n + 1];
+    let mut v = vec![0.0; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cost = big - score[i0 - 1][j - 1];
+                let cur = cost - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut total = 0.0;
+    for j in 1..=n {
+        if p[j] != 0 {
+            total += score[p[j] - 1][j - 1];
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_scores_one() {
+        let gold = vec![0, 0, 1, 1, 2, 2, 2];
+        assert!((muc(&gold, &gold).2 - 1.0).abs() < 1e-12);
+        assert!((b_cubed(&gold, &gold).2 - 1.0).abs() < 1e-12);
+        assert!((ceaf_e(&gold, &gold).2 - 1.0).abs() < 1e-12);
+        assert!((conll_f1(&gold, &gold) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_singletons_muc_zero() {
+        let gold = vec![0, 0, 1, 1];
+        let pred = vec![0, 1, 2, 3];
+        let (_, _, f) = muc(&pred, &gold);
+        assert_eq!(f, 0.0);
+        // B³ recall suffers but precision is 1.
+        let (p, r, _) = b_cubed(&pred, &gold);
+        assert!((p - 1.0).abs() < 1e-12);
+        assert!(r < 1.0);
+    }
+
+    #[test]
+    fn b_cubed_hand_worked() {
+        // Gold {0,1},{2}; pred {0,1,2}.
+        let gold = vec![0, 0, 1];
+        let pred = vec![0, 0, 0];
+        let (p, r, _) = b_cubed(&pred, &gold);
+        // precision: mentions 0,1 -> 2/3 each; mention 2 -> 1/3. mean = 5/9.
+        assert!((p - 5.0 / 9.0).abs() < 1e-12);
+        // recall: mentions 0,1 -> 2/2; mention 2 -> 1/1 -> 1.
+        assert!((r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hungarian_small_cases() {
+        let s = vec![vec![1.0, 2.0], vec![3.0, 1.0]];
+        assert!((hungarian_max(&s) - 5.0).abs() < 1e-9);
+        let s = vec![
+            vec![0.9, 0.1, 0.0],
+            vec![0.1, 0.8, 0.0],
+            vec![0.0, 0.0, 0.7],
+        ];
+        assert!((hungarian_max(&s) - 2.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conll_monotone_in_quality() {
+        let gold = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let good = vec![0, 0, 0, 1, 1, 1, 2, 2, 0]; // one error
+        let bad = vec![0, 1, 2, 0, 1, 2, 0, 1, 2]; // scrambled
+        let fg = conll_f1(&good, &gold);
+        let fb = conll_f1(&bad, &gold);
+        assert!(fg > fb, "good={fg} bad={fb}");
+        assert!(fg > 0.6 && fg < 1.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Downstream evaluation metrics: Pearson/Spearman correlation (STS-B),
+//! accuracy (RTE), binary F1 (MRPC), and threshold calibration.
+
+use crate::util::stats::ranks;
+
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        cov += (a - mx) * (b - my);
+        vx += (a - mx).powi(2);
+        vy += (b - my).powi(2);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+pub fn accuracy(pred: &[bool], gold: &[bool]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    pred.iter().zip(gold).filter(|(p, g)| p == g).count() as f64 / pred.len() as f64
+}
+
+/// Binary F1 on the positive class.
+pub fn f1(pred: &[bool], gold: &[bool]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let tp = pred.iter().zip(gold).filter(|(p, g)| **p && **g).count() as f64;
+    let fp = pred.iter().zip(gold).filter(|(p, g)| **p && !**g).count() as f64;
+    let fn_ = pred.iter().zip(gold).filter(|(p, g)| !**p && **g).count() as f64;
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fn_);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Calibrate a decision threshold on (score, gold) pairs by maximizing F1
+/// over candidate thresholds (the per-method calibration used for the
+/// MRPC/RTE rows; identical procedure for exact and approximate scores).
+pub fn calibrate_threshold(scores: &[f64], gold: &[bool]) -> f64 {
+    let mut cands: Vec<f64> = scores.to_vec();
+    cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cands.dedup();
+    let mut best = (f64::NEG_INFINITY, 0.0);
+    for w in cands.windows(2) {
+        let thr = 0.5 * (w[0] + w[1]);
+        let pred: Vec<bool> = scores.iter().map(|&s| s > thr).collect();
+        let score = f1(&pred, gold);
+        if score > best.0 {
+            best = (score, thr);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_invariant() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone but nonlinear
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        assert!(pearson(&x, &y) < 1.0);
+    }
+
+    #[test]
+    fn f1_hand_worked() {
+        // tp=2, fp=1, fn=1 -> P=2/3, R=2/3, F1=2/3.
+        let pred = [true, true, true, false, false];
+        let gold = [true, true, false, true, false];
+        assert!((f1(&pred, &gold) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((accuracy(&pred, &gold) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_finds_separating_threshold() {
+        let scores = [0.1, 0.2, 0.3, 0.8, 0.9, 0.95];
+        let gold = [false, false, false, true, true, true];
+        let thr = calibrate_threshold(&scores, &gold);
+        assert!(thr > 0.3 && thr < 0.8);
+        let pred: Vec<bool> = scores.iter().map(|&s| s > thr).collect();
+        assert!((f1(&pred, &gold) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Downstream tasks the paper evaluates through the approximated
+//! matrices: SVM document classification, GLUE-style correlation/F1
+//! scoring, and agglomerative-clustering coreference with CoNLL metrics.
+
+pub mod cluster;
+pub mod coref_metrics;
+pub mod metrics;
+pub mod svm;
+
+pub use cluster::average_linkage;
+pub use coref_metrics::{b_cubed, ceaf_e, conll_f1, muc};
+pub use metrics::{accuracy, calibrate_threshold, f1, pearson, spearman};
+pub use svm::{standardize, LinearSvm, SvmConfig};

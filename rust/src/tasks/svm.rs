@@ -1,0 +1,182 @@
+//! Linear multi-class SVM — the LIBLINEAR substitute. One-vs-rest hinge
+//! loss with L2 regularization trained by Pegasos-style SGD (Shalev-Shwartz
+//! et al.), classifying the embedding features Z produced by the
+//! approximation methods (Table 1's downstream task).
+
+use crate::linalg::{dot, Mat};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SvmConfig {
+    /// Regularization λ (the paper tunes LIBLINEAR's C = 1/(λ n)).
+    pub lambda: f64,
+    pub epochs: usize,
+}
+
+impl Default for SvmConfig {
+    fn default() -> Self {
+        SvmConfig {
+            lambda: 1e-2,
+            epochs: 40,
+        }
+    }
+}
+
+pub struct LinearSvm {
+    /// classes x (dim + 1) — last column is the bias.
+    w: Mat,
+    pub classes: usize,
+}
+
+impl LinearSvm {
+    /// Train one-vs-rest on rows of `x` with integer labels.
+    pub fn train(
+        x: &Mat,
+        labels: &[usize],
+        classes: usize,
+        cfg: SvmConfig,
+        rng: &mut Rng,
+    ) -> LinearSvm {
+        assert_eq!(x.rows, labels.len());
+        let d = x.cols;
+        let mut w = Mat::zeros(classes, d + 1);
+        let n = x.rows;
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut t: f64 = 1.0;
+        for _ in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let eta = 1.0 / (cfg.lambda * t);
+                t += 1.0;
+                let xi = x.row(i);
+                for c in 0..classes {
+                    let y = if labels[i] == c { 1.0 } else { -1.0 };
+                    let wc = w.row_mut(c);
+                    let margin = y * (dot(&wc[..d], xi) + wc[d]);
+                    // L2 shrink.
+                    let shrink = 1.0 - eta * cfg.lambda;
+                    for v in wc[..d].iter_mut() {
+                        *v *= shrink;
+                    }
+                    if margin < 1.0 {
+                        for (v, &xv) in wc[..d].iter_mut().zip(xi) {
+                            *v += eta * y * xv;
+                        }
+                        wc[d] += eta * y * 0.1; // bias learns slower
+                    }
+                }
+            }
+        }
+        LinearSvm { w, classes }
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> usize {
+        let d = self.w.cols - 1;
+        let mut best = (0, f64::NEG_INFINITY);
+        for c in 0..self.classes {
+            let wc = self.w.row(c);
+            let score = dot(&wc[..d], x) + wc[d];
+            if score > best.1 {
+                best = (c, score);
+            }
+        }
+        best.0
+    }
+
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        (0..x.rows).map(|i| self.predict_one(x.row(i))).collect()
+    }
+
+    pub fn accuracy(&self, x: &Mat, labels: &[usize]) -> f64 {
+        let pred = self.predict(x);
+        let correct = pred
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| p == l)
+            .count();
+        correct as f64 / labels.len() as f64
+    }
+}
+
+/// Standardize features column-wise using train-split statistics (fit on
+/// train, apply to all). Returns the transformed copy.
+pub fn standardize(x: &Mat, train_rows: &[usize]) -> Mat {
+    let d = x.cols;
+    let m = train_rows.len() as f64;
+    let mut mean = vec![0.0; d];
+    let mut var = vec![0.0; d];
+    for &i in train_rows {
+        for (j, v) in x.row(i).iter().enumerate() {
+            mean[j] += v / m;
+        }
+    }
+    for &i in train_rows {
+        for (j, v) in x.row(i).iter().enumerate() {
+            var[j] += (v - mean[j]).powi(2) / m;
+        }
+    }
+    let std: Vec<f64> = var.iter().map(|v| v.sqrt().max(1e-9)).collect();
+    Mat::from_fn(x.rows, d, |i, j| (x.get(i, j) - mean[j]) / std[j])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linearly separable blobs must be learned to high accuracy.
+    #[test]
+    fn separable_blobs() {
+        let mut rng = Rng::new(1);
+        let n_per = 40;
+        let classes = 3;
+        let centers = [[4.0, 0.0], [-4.0, 2.0], [0.0, -5.0]];
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for (c, center) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                rows.push(vec![
+                    center[0] + rng.normal() * 0.6,
+                    center[1] + rng.normal() * 0.6,
+                ]);
+                labels.push(c);
+            }
+        }
+        let x = Mat::from_rows(rows);
+        let svm = LinearSvm::train(&x, &labels, classes, SvmConfig::default(), &mut rng);
+        assert!(svm.accuracy(&x, &labels) > 0.95);
+    }
+
+    #[test]
+    fn generalizes_to_test_split() {
+        let mut rng = Rng::new(2);
+        let make = |n: usize, rng: &mut Rng| {
+            let mut rows = Vec::new();
+            let mut labels = Vec::new();
+            for i in 0..n {
+                let c = i % 2;
+                let off = if c == 0 { 2.5 } else { -2.5 };
+                rows.push(vec![off + rng.normal(), rng.normal()]);
+                labels.push(c);
+            }
+            (Mat::from_rows(rows), labels)
+        };
+        let (xtr, ytr) = make(120, &mut rng);
+        let (xte, yte) = make(60, &mut rng);
+        let svm = LinearSvm::train(&xtr, &ytr, 2, SvmConfig::default(), &mut rng);
+        assert!(svm.accuracy(&xte, &yte) > 0.9);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var_on_train() {
+        let mut rng = Rng::new(3);
+        let x = Mat::gaussian(50, 4, &mut rng).scale(3.0);
+        let train: Vec<usize> = (0..30).collect();
+        let z = standardize(&x, &train);
+        for j in 0..4 {
+            let mean: f64 = train.iter().map(|&i| z.get(i, j)).sum::<f64>() / 30.0;
+            let var: f64 = train.iter().map(|&i| z.get(i, j).powi(2)).sum::<f64>() / 30.0;
+            assert!(mean.abs() < 1e-9);
+            assert!((var - 1.0).abs() < 1e-6);
+        }
+    }
+}

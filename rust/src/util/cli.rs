@@ -1,0 +1,91 @@
+//! Minimal flag parser for the CLI and bench binaries (clap is unavailable
+//! offline). Supports `--flag value`, `--flag=value`, boolean `--flag`,
+//! and positional arguments.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(iter: impl IntoIterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse("run --n 100 --fast --gamma=0.5 corpus");
+        assert_eq!(a.positional, vec!["run", "corpus"]);
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert!(a.has("fast"));
+        assert!((a.get_f64("gamma", 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn boolean_before_flag() {
+        let a = parse("--verbose --n 5");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("n", 0), 5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared infrastructure: seeded RNG, statistics, JSON, CLI parsing,
+//! property-test harness, timers and report writers — all dependency-free
+//! (the offline vendor set only provides `xla` + `anyhow`).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod report;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,46 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! RNGs; a failure reports the reproducing seed. Generators live on `Rng`
+//! (see util::rng) — tests draw whatever structure they need from it.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. Panics with the failing seed so the
+/// case can be replayed with `Rng::new(seed)`.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("reflexivity", 20, |rng| {
+            let x = rng.f64();
+            assert!(x >= 0.0 && x < 1.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failing_seed() {
+        check("always-fails", 5, |_rng| panic!("boom"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Report writers: the bench harnesses print paper-style tables/series and
+//! persist them under `reports/` as markdown + CSV for EXPERIMENTS.md.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+pub struct Report {
+    name: String,
+    lines: Vec<String>,
+    csv: Vec<(String, String)>, // (file stem, contents)
+}
+
+impl Report {
+    pub fn new(name: &str) -> Self {
+        Report {
+            name: name.to_string(),
+            lines: vec![format!("# {name}"), String::new()],
+            csv: Vec::new(),
+        }
+    }
+
+    /// Add a markdown line (also echoed to stdout so `cargo bench` output
+    /// is self-contained).
+    pub fn line(&mut self, s: impl Into<String>) {
+        let s = s.into();
+        println!("{s}");
+        self.lines.push(s);
+    }
+
+    /// Add a markdown table from a header and rows.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        self.line(format!("| {} |", header.join(" | ")));
+        self.line(format!("|{}|", vec!["---"; header.len()].join("|")));
+        for row in rows {
+            self.line(format!("| {} |", row.join(" | ")));
+        }
+        self.line("");
+    }
+
+    /// Attach a CSV series (written alongside the markdown).
+    pub fn csv(&mut self, stem: &str, header: &[&str], rows: &[Vec<String>]) {
+        let mut out = String::new();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for row in rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        self.csv.push((stem.to_string(), out));
+    }
+
+    /// Write `reports/<name>.md` (+ CSVs) and return the md path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = Path::new("reports");
+        fs::create_dir_all(dir)?;
+        let md = dir.join(format!("{}.md", self.name));
+        let mut f = fs::File::create(&md)?;
+        writeln!(f, "{}", self.lines.join("\n"))?;
+        for (stem, contents) in &self.csv {
+            fs::write(dir.join(format!("{stem}.csv")), contents)?;
+        }
+        Ok(md)
+    }
+}
+
+/// Format a float with fixed decimals, right-padded for table alignment.
+pub fn fmt(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+/// Format `mean ± std`.
+pub fn pm(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{mean:.decimals$} ± {std:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt(1.23456, 2), "1.23");
+        assert_eq!(pm(75.25, 1.3, 1), "75.2 ± 1.3");
+    }
+}

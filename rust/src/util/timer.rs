@@ -1,0 +1,86 @@
+//! Timing + micro-bench helpers (criterion is unavailable offline).
+
+use std::time::{Duration, Instant};
+
+/// Time a closure once.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Micro-bench: run `f` with warmup, report mean/min over `iters` runs.
+pub struct BenchStats {
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let scale = |ns: f64| {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} us", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        write!(
+            f,
+            "mean {} (min {}, max {}, n={})",
+            scale(self.mean_ns),
+            scale(self.min_ns),
+            scale(self.max_ns),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to roughly `budget`.
+pub fn bench(budget: Duration, warmup: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    // Estimate per-call cost from one timed call.
+    let (_, est) = time_once(&mut f);
+    let per_call = est.as_nanos().max(1) as u64;
+    let iters = (budget.as_nanos() as u64 / per_call).clamp(3, 1000) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchStats {
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_ns: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        iters: samples.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let mut x = 0u64;
+        let stats = bench(Duration::from_millis(5), 1, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(stats.iters >= 3);
+        assert!(stats.min_ns <= stats.mean_ns);
+    }
+}

@@ -1,0 +1,186 @@
+//! Standard experiment workloads shared by the benches, the examples and
+//! the CLI: each builds (and disk-caches) the exact similarity matrix of
+//! one of the paper's settings through the PJRT oracles, plus whatever
+//! task data the downstream evaluation needs.
+//!
+//! Dense exact matrices are only ever used for *evaluation* (error
+//! measurement, Optimal/exact baselines) — production flows go through the
+//! sublinear path.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::{self, CorefSpec, CorpusPreset, GluePreset};
+use crate::linalg::Mat;
+use crate::runtime::{self, CorefPjrtOracle, CrossEncoderPjrtOracle, SharedRuntime, WmdPjrtOracle};
+use crate::sim::{SimOracle, Symmetrized};
+use crate::util::rng::Rng;
+
+/// Global scale knob for bench workloads (SIMMAT_SCALE env, default 1.0 =
+/// reproduction scale from DESIGN.md; CI/tests use ~0.15).
+pub fn bench_scale() -> f64 {
+    std::env::var("SIMMAT_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+fn cache_dir() -> PathBuf {
+    let dir = runtime::default_artifacts_dir()
+        .map(|d| d.join("cache"))
+        .unwrap_or_else(|| PathBuf::from("artifacts/cache"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Binary matrix cache: "SMAT" magic, rows, cols (u64 LE), f64 data.
+pub fn cache_load(name: &str) -> Option<Mat> {
+    let path = cache_dir().join(format!("{name}.bin"));
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() < 20 || &bytes[..4] != b"SMAT" {
+        return None;
+    }
+    let rows = u64::from_le_bytes(bytes[4..12].try_into().ok()?) as usize;
+    let cols = u64::from_le_bytes(bytes[12..20].try_into().ok()?) as usize;
+    if bytes.len() != 20 + rows * cols * 8 {
+        return None;
+    }
+    let data: Vec<f64> = bytes[20..]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Some(Mat { rows, cols, data })
+}
+
+pub fn cache_store(name: &str, m: &Mat) {
+    let mut bytes = Vec::with_capacity(20 + m.data.len() * 8);
+    bytes.extend_from_slice(b"SMAT");
+    bytes.extend_from_slice(&(m.rows as u64).to_le_bytes());
+    bytes.extend_from_slice(&(m.cols as u64).to_le_bytes());
+    for v in &m.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let _ = std::fs::write(cache_dir().join(format!("{name}.bin")), bytes);
+}
+
+fn materialize_cached(name: &str, oracle: &dyn SimOracle) -> Mat {
+    if let Some(m) = cache_load(name) {
+        if m.rows == oracle.n() {
+            return m;
+        }
+    }
+    let m = oracle.materialize();
+    cache_store(name, &m);
+    m
+}
+
+/// The paper's PSD control matrix: Z Zᵀ, Z i.i.d. N(0,1) (n x n).
+pub fn psd_matrix(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let z = Mat::gaussian(n, n, &mut rng);
+    z.matmul_nt(&z).scale(1.0 / n as f64)
+}
+
+/// WMD workload: corpus + exact exp(-γ·WMD) matrix via the PJRT oracle.
+pub struct WmdWorkload {
+    pub corpus: data::Corpus,
+    pub k: Mat,
+    pub gamma: f64,
+}
+
+pub fn wmd_workload(
+    rt: SharedRuntime,
+    preset: CorpusPreset,
+    scale: f64,
+    gamma: f64,
+    seed: u64,
+) -> Result<WmdWorkload> {
+    let mut rng = Rng::new(seed);
+    let (dim,) = { (rt.lock().unwrap().manifest.wmd.dim,) };
+    let table = data::WordTable::new(24, 40, dim, 0.55, &mut rng);
+    let corpus = data::corpus::generate(preset, scale, &table, &mut rng);
+    let oracle = WmdPjrtOracle::new(rt, &corpus.docs, gamma)?;
+    let key = format!("wmd_{}_{}_{}", preset.name(), corpus.n(), seed);
+    let k = materialize_cached(&key, &oracle);
+    Ok(WmdWorkload { corpus, k, gamma })
+}
+
+/// Build a [`WmdPjrtOracle`] over a corpus (for flows that must count
+/// oracle calls rather than read the cached matrix).
+pub fn wmd_oracle(
+    rt: SharedRuntime,
+    corpus: &data::Corpus,
+    gamma: f64,
+) -> Result<WmdPjrtOracle> {
+    WmdPjrtOracle::new(rt, &corpus.docs, gamma)
+}
+
+/// Cross-encoder GLUE workload: sentences, labeled pairs with gold scores
+/// derived from the symmetrized oracle, the raw (asymmetric) matrix and
+/// the symmetrized one.
+pub struct GlueWorkload {
+    pub task: data::GlueTask,
+    /// Raw asymmetric cross-encoder matrix ("BERT" row).
+    pub k_raw: Mat,
+    /// Symmetrized matrix ("SYM-BERT" row; what the methods approximate).
+    pub k_sym: Mat,
+}
+
+pub fn glue_workload(
+    rt: SharedRuntime,
+    preset: GluePreset,
+    scale: f64,
+    seed: u64,
+) -> Result<GlueWorkload> {
+    let mut rng = Rng::new(seed);
+    let (seq, dim) = {
+        let r = rt.lock().unwrap();
+        (r.manifest.cross_encoder.seq, r.manifest.cross_encoder.dim)
+    };
+    let mut task = data::glue::generate(preset, scale, seq, dim, &mut rng);
+    let oracle = CrossEncoderPjrtOracle::new(rt, task.sentences.clone())?;
+    let key = format!("ce_{}_{}_{}", preset.name(), task.sentences.len(), seed);
+    let k_raw = materialize_cached(&key, &oracle);
+    let k_sym = k_raw.symmetrized();
+    // Gold labels from the symmetrized oracle scores (see data::glue).
+    let scores: Vec<f64> = task.pairs.iter().map(|&(i, j)| k_sym.get(i, j)).collect();
+    data::glue::attach_gold_scores(&mut task, &scores, 0.08, &mut rng);
+    Ok(GlueWorkload { task, k_raw, k_sym })
+}
+
+/// Coreference workload: mention corpus + symmetrized exact matrix.
+pub struct CorefWorkload {
+    pub corpus: data::CorefCorpus,
+    pub k_sym: Mat,
+}
+
+pub fn coref_workload(rt: SharedRuntime, spec: CorefSpec, seed: u64) -> Result<CorefWorkload> {
+    let mut rng = Rng::new(seed);
+    let corpus = data::coref::generate(spec, &mut rng);
+    let oracle = CorefPjrtOracle::new(rt, corpus.mentions.clone())?;
+    let sym = Symmetrized::new(&oracle);
+    let key = format!("coref_{}_{}", corpus.mentions.len(), seed);
+    let k_sym = materialize_cached(&key, &sym);
+    Ok(CorefWorkload { corpus, k_sym })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::gaussian(7, 7, &mut rng);
+        cache_store("__test_cache", &m);
+        let back = cache_load("__test_cache").unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn psd_matrix_is_symmetric() {
+        let k = psd_matrix(12, 3);
+        assert!(k.max_abs_diff(&k.symmetrized()) < 1e-12);
+    }
+}

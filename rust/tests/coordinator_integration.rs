@@ -1,0 +1,102 @@
+//! Coordinator invariants under realistic load: batch service with a slow
+//! oracle, schedule/assembly consistency, and the routing contract.
+
+use std::time::Duration;
+
+use simmat::coordinator::{schedule, BatchService, Method, SampleMode, SimilarityService};
+use simmat::linalg::Mat;
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{DenseOracle, SimOracle};
+use simmat::util::prop::check;
+use simmat::util::rng::Rng;
+
+/// Oracle with artificial latency to exercise deadline-based flushing.
+struct SlowOracle {
+    inner: DenseOracle,
+    delay: Duration,
+}
+
+impl SimOracle for SlowOracle {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        std::thread::sleep(self.delay);
+        self.inner.eval_batch(pairs)
+    }
+}
+
+#[test]
+fn batch_service_under_concurrent_load_with_slow_oracle() {
+    let mut rng = Rng::new(1);
+    let k = Mat::gaussian(30, 30, &mut rng);
+    let svc = BatchService::spawn(
+        SlowOracle {
+            inner: DenseOracle::new(k.clone()),
+            delay: Duration::from_micros(300),
+        },
+        16,
+        Duration::from_millis(1),
+    );
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let client = svc.client();
+        let kk = k.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            for _ in 0..40 {
+                let (i, j) = (rng.below(30), rng.below(30));
+                assert_eq!(client.eval(i, j), kk.get(i, j));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // 240 requests coalesced into far fewer oracle batches.
+    let batches = svc
+        .metrics
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches < 240, "no coalescing happened: {batches} batches");
+}
+
+#[test]
+fn schedule_then_build_consistency() {
+    // The schedule's landmark plan produces the same factorization as
+    // calling the algorithm directly with that plan.
+    check("schedule-build-consistency", 5, |rng| {
+        let n = 50 + rng.below(30);
+        let o = NearPsdOracle::new(n, 8, 0.4, rng);
+        let sch = schedule(n, 10, 20, SampleMode::Nested, true, 64, rng);
+        let f1 = simmat::approx::cur::cur_with_plan(&o, &sch.plan).unwrap();
+        let f2 = simmat::approx::cur::cur_with_plan(&o, &sch.plan).unwrap();
+        // Deterministic given the plan.
+        assert!(f1.to_dense().max_abs_diff(&f2.to_dense()) < 1e-12);
+        // Total scheduled pairs cover the build's needs.
+        assert_eq!(sch.total_pairs, n * 20);
+    });
+}
+
+#[test]
+fn service_methods_rank_quality_on_indefinite_matrix() {
+    // Fig. 3's qualitative ordering at test scale: SMS-Nyström and SiCUR
+    // beat classic Nyström on an indefinite matrix.
+    let mut rng = Rng::new(5);
+    let o = NearPsdOracle::new(120, 12, 0.5, &mut rng);
+    let k = o.dense().clone();
+    let err_of = |method: Method, rng: &mut Rng| {
+        let mut total = 0.0;
+        for _ in 0..3 {
+            let svc = SimilarityService::build(&o, method, 36, 64, rng).unwrap();
+            total += simmat::approx::rel_fro_error(&k, svc.factored()) / 3.0;
+        }
+        total
+    };
+    let nys = err_of(Method::Nystrom, &mut rng);
+    let sms = err_of(Method::SmsNystrom, &mut rng);
+    let sicur = err_of(Method::SiCur, &mut rng);
+    assert!(sms < nys, "SMS {sms} !< Nystrom {nys}");
+    assert!(sicur < nys, "SiCUR {sicur} !< Nystrom {nys}");
+}

@@ -1,0 +1,156 @@
+//! End-to-end pipeline integration at test scale: PJRT oracles feeding the
+//! approximation algorithms feeding the downstream tasks. Exercises the
+//! same code paths as the benches but on tiny inputs.
+
+use simmat::approx::{self, SmsConfig};
+use simmat::coordinator::{Method, Query, Response, SimilarityService};
+use simmat::data::{self, CorpusPreset, CorefSpec};
+use simmat::runtime::{shared_runtime_subset, CorefPjrtOracle, WmdPjrtOracle};
+use simmat::sim::{CountingOracle, DenseOracle, SimOracle, Symmetrized};
+use simmat::tasks;
+use simmat::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    simmat::runtime::default_artifacts_dir().is_some()
+}
+
+#[test]
+fn wmd_pjrt_approximation_pipeline() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = shared_runtime_subset(&["wmd_sim"]).unwrap();
+    let mut rng = Rng::new(1);
+    let table = data::WordTable::new(20, 30, 64, 0.3, &mut rng);
+    let corpus = data::corpus::generate(CorpusPreset::Twitter, 0.12, &table, &mut rng);
+    let oracle = WmdPjrtOracle::new(rt, &corpus.docs, 0.75).unwrap();
+    let n = oracle.n();
+
+    // Sublinear build through the counting wrapper.
+    let counter = CountingOracle::new(&oracle);
+    let sms = approx::sms_nystrom(&counter, n / 6, SmsConfig::default(), &mut rng).unwrap();
+    assert!(counter.calls() < (n * n) as u64 / 2, "must be sublinear");
+
+    // Error against the exact matrix (small n so Ω(n²) is affordable).
+    let k = oracle.materialize();
+    let err = approx::rel_fro_error(&k, &sms.factored);
+    assert!(err < 0.3, "SMS error on WMD matrix too large: {err}");
+
+    // Downstream: kNN-style sanity — same-class neighbours dominate.
+    let f = &sms.factored;
+    let mut correct = 0;
+    for i in 0..n {
+        let top = f.top_k(i, 3);
+        let votes = top
+            .iter()
+            .filter(|(j, _)| corpus.labels[*j] == corpus.labels[i])
+            .count();
+        if votes >= 2 {
+            correct += 1;
+        }
+    }
+    assert!(
+        correct as f64 / n as f64 > 0.5,
+        "approximate neighbours should be class-consistent: {correct}/{n}"
+    );
+}
+
+#[test]
+fn coref_pjrt_clustering_pipeline() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = shared_runtime_subset(&["coref_mlp"]).unwrap();
+    let mut rng = Rng::new(2);
+    let spec = CorefSpec {
+        entities: 14,
+        ..CorefSpec::default()
+    };
+    let corpus = data::coref::generate(spec, &mut rng);
+    let oracle = CorefPjrtOracle::new(rt, corpus.mentions.clone()).unwrap();
+    let sym = Symmetrized::new(&oracle);
+    let n = sym.n();
+
+    // Exact clustering F1 as the reference.
+    let k = sym.materialize();
+    let exact_ids = tasks::average_linkage(&k, 0.5);
+    let exact_f1 = tasks::conll_f1(&exact_ids, &corpus.gold);
+    assert!(exact_f1 > 0.6, "exact coref F1 too low: {exact_f1}");
+
+    // SiCUR at 50% landmarks should stay close (Fig. 4's claim).
+    let dense = DenseOracle::new(k.clone());
+    let f = approx::sicur(&dense, n / 4, 2.0, &mut rng).unwrap();
+    let approx_ids = tasks::average_linkage(&f.to_dense().symmetrized(), 0.5);
+    let approx_f1 = tasks::conll_f1(&approx_ids, &corpus.gold);
+    assert!(
+        approx_f1 > exact_f1 - 0.25,
+        "SiCUR coref F1 {approx_f1} too far below exact {exact_f1}"
+    );
+}
+
+#[test]
+fn similarity_service_over_pjrt_oracle() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = shared_runtime_subset(&["coref_mlp"]).unwrap();
+    let mut rng = Rng::new(3);
+    let corpus = data::coref::generate(
+        CorefSpec {
+            entities: 10,
+            ..CorefSpec::default()
+        },
+        &mut rng,
+    );
+    let oracle = CorefPjrtOracle::new(rt, corpus.mentions.clone()).unwrap();
+    let svc =
+        SimilarityService::build(&oracle, Method::SiCur, oracle.n() / 5, 64, &mut rng).unwrap();
+    assert!(svc.stats.savings() > 0.3, "savings {}", svc.stats.savings());
+    // Entries served from factors agree with direct factored access.
+    match svc.query(&Query::Entry(0, 1)).unwrap() {
+        Response::Scalar(v) => {
+            assert!((v - svc.factored().entry(0, 1)).abs() < 1e-12)
+        }
+        _ => panic!(),
+    }
+    // Batching actually happened (batch size 64 << total pairs).
+    assert!(svc.metrics.batch_efficiency() > 0.5);
+}
+
+#[test]
+fn glue_prediction_pipeline_dense() {
+    // GLUE flow with the dense stand-in (PJRT cross-encoder covered by
+    // runtime_goldens; here we test the task wiring).
+    let mut rng = Rng::new(4);
+    let mut task = data::glue::generate(data::GluePreset::Mrpc, 0.25, 8, 16, &mut rng);
+    // Fake oracle: cosine of mean embeddings + noise, symmetric.
+    let n = task.sentences.len();
+    let mean_vec = |s: &Vec<f32>| -> Vec<f64> {
+        let d = 16;
+        let t = s.len() / d;
+        (0..d)
+            .map(|j| (0..t).map(|i| s[i * d + j] as f64).sum::<f64>() / t as f64)
+            .collect()
+    };
+    let means: Vec<Vec<f64>> = task.sentences.iter().map(mean_vec).collect();
+    let k = simmat::linalg::Mat::from_fn(n, n, |i, j| {
+        let (a, b) = (&means[i], &means[j]);
+        simmat::linalg::dot(a, b) / (simmat::linalg::dot(a, a).sqrt() * simmat::linalg::dot(b, b).sqrt())
+    });
+    let scores: Vec<f64> = task.pairs.iter().map(|&(i, j)| k.get(i, j)).collect();
+    data::glue::attach_gold_scores(&mut task, &scores, 0.05, &mut rng);
+
+    // Approximate K, predict from K̃ entries, measure F1 vs gold.
+    let dense = DenseOracle::new(k.clone());
+    let f = approx::sicur(&dense, n / 3, 2.0, &mut rng).unwrap();
+    let approx_scores: Vec<f64> = task.pairs.iter().map(|&(i, j)| f.entry(i, j)).collect();
+    let gold: Vec<bool> = task.gold.iter().map(|&g| g > 0.5).collect();
+    let half = gold.len() / 2;
+    let thr = tasks::calibrate_threshold(&approx_scores[..half], &gold[..half]);
+    let pred: Vec<bool> = approx_scores[half..].iter().map(|&s| s > thr).collect();
+    let f1 = tasks::f1(&pred, &gold[half..]);
+    assert!(f1 > 0.7, "approximate GLUE F1 too low: {f1}");
+}
