@@ -13,7 +13,8 @@ use simmat::coordinator::{BatchService, BatchingOracle, Metrics};
 use simmat::linalg::{eigh, Mat};
 use simmat::runtime::{default_artifacts_dir, Runtime};
 use simmat::sim::synthetic::NearPsdOracle;
-use simmat::sim::DenseOracle;
+use simmat::sim::{DenseOracle, SimOracle};
+use simmat::util::pool;
 use simmat::util::report::Report;
 use simmat::util::rng::Rng;
 use simmat::util::timer::bench;
@@ -59,15 +60,57 @@ fn main() {
     });
     rep.line(format!("- matmul {n}x{ssize} · {ssize}x{ssize} (Z assembly): {s}"));
 
+    // ---- parallel sharding vs the serial reference ----
+    // The paper's cost model counts similarity evaluations; sharding the
+    // oracle gathers + blocked matmul across the pool is the headline
+    // speedup. Serial numbers use the same kernels at pool size 1.
+    let hw = pool::workers();
+    rep.line(format!(
+        "- thread pool: {hw} workers (SIMMAT_THREADS to override)"
+    ));
+    let o_big = NearPsdOracle::new(1500, 16, 0.4, &mut rng);
+    let cols: Vec<usize> = (0..96).map(|i| i * 13).collect();
+    let s = bench(budget, 1, || {
+        pool::with_workers(1, || std::hint::black_box(o_big.columns(&cols)));
+    });
+    rep.line(format!("- oracle.columns 1500x96 serial: {s}"));
+    let s = bench(budget, 1, || {
+        pool::with_workers(hw, || std::hint::black_box(o_big.columns(&cols)));
+    });
+    rep.line(format!("- oracle.columns 1500x96 parallel ({hw} workers): {s}"));
+    let s = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(c.matmul_with_workers(&m, 1));
+    });
+    rep.line(format!("- matmul {n}x{ssize} · {ssize}x{ssize} serial: {s}"));
+    let s = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(c.matmul_with_workers(&m, hw));
+    });
+    rep.line(format!(
+        "- matmul {n}x{ssize} · {ssize}x{ssize} parallel ({hw} workers): {s}"
+    ));
+
     // ---- full build end-to-end (dense oracle, no PJRT) ----
     let o = NearPsdOracle::new(600, 20, 0.4, &mut rng);
     let s = bench(Duration::from_millis(1500), 0, || {
         let mut r2 = Rng::new(5);
-        std::hint::black_box(
-            approx::sms_nystrom(&o, 80, SmsConfig::default(), &mut r2).unwrap(),
-        );
+        pool::with_workers(1, || {
+            std::hint::black_box(
+                approx::sms_nystrom(&o, 80, SmsConfig::default(), &mut r2).unwrap(),
+            );
+        });
     });
-    rep.line(format!("- SMS-Nyström build n=600 s=80 (dense oracle): {s}"));
+    rep.line(format!("- SMS-Nyström build n=600 s=80 serial: {s}"));
+    let s = bench(Duration::from_millis(1500), 0, || {
+        let mut r2 = Rng::new(5);
+        pool::with_workers(hw, || {
+            std::hint::black_box(
+                approx::sms_nystrom(&o, 80, SmsConfig::default(), &mut r2).unwrap(),
+            );
+        });
+    });
+    rep.line(format!(
+        "- SMS-Nyström build n=600 s=80 parallel ({hw} workers): {s}"
+    ));
 
     // ---- coordinator: batching overhead vs direct ----
     let k = Mat::gaussian(500, 500, &mut rng);

@@ -247,6 +247,50 @@ mod tests {
     }
 
     #[test]
+    fn lanczos_shift_path_matches_dense_eigh_path() {
+        // Regression for the `lanczos_threshold` branch: forcing the
+        // iterative λ_min estimate (threshold below s2) must produce a
+        // finite, non-negative shift that agrees with the dense-`eigh`
+        // path on the same sampled submatrix, and an approximation error
+        // in the same range.
+        let mut rng = Rng::new(16);
+        let n = 120;
+        let o = NearPsdOracle::new(n, 10, 0.5, &mut rng);
+        let k = o.dense().clone();
+        let lanczos_cfg = SmsConfig {
+            lanczos_threshold: 10, // s2 = 60 > 10 → Lanczos branch
+            ..SmsConfig::default()
+        };
+        let dense_cfg = SmsConfig::default(); // s2 = 60 < 600 → eigh branch
+        let (mut err_lan, mut err_dense) = (0.0, 0.0);
+        for trial in 0..4 {
+            // Identical seeds → identical landmark plans, so the two λ_min
+            // estimates are computed on the same submatrix.
+            let mut r1 = Rng::new(400 + trial);
+            let mut r2 = Rng::new(400 + trial);
+            let lan = sms_nystrom(&o, 30, lanczos_cfg, &mut r1).unwrap();
+            let dense = sms_nystrom(&o, 30, dense_cfg, &mut r2).unwrap();
+            assert!(lan.shift.is_finite() && lan.shift >= 0.0, "shift {}", lan.shift);
+            assert!(lan.lambda_min_s2.is_finite());
+            // Full-reorthogonalization Lanczos at steps >= s2 is exact.
+            let scale = dense.lambda_min_s2.abs().max(1e-3);
+            assert!(
+                (lan.lambda_min_s2 - dense.lambda_min_s2).abs() < 1e-4 * scale,
+                "lambda_min: lanczos {} vs eigh {}",
+                lan.lambda_min_s2,
+                dense.lambda_min_s2
+            );
+            err_lan += rel_fro_error(&k, &lan.factored) / 4.0;
+            err_dense += rel_fro_error(&k, &dense.factored) / 4.0;
+        }
+        assert!(err_lan.is_finite() && err_lan < 1.0, "err_lan {err_lan}");
+        assert!(
+            (err_lan - err_dense).abs() < 0.05,
+            "Lanczos path error {err_lan} drifted from dense path {err_dense}"
+        );
+    }
+
+    #[test]
     fn exact_shift_baseline_runs() {
         let mut rng = Rng::new(15);
         let o = NearPsdOracle::new(50, 8, 0.4, &mut rng);

@@ -4,6 +4,7 @@
 
 use crate::linalg::Mat;
 use crate::sim::wmd::{sinkhorn_cost, Doc, SinkhornCfg};
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -33,15 +34,32 @@ pub fn random_doc(docs: &[Doc], d_max: usize, rng: &mut Rng) -> Doc {
 
 /// WME feature matrix (n x R). `sim` evaluates exp(-γ WMD(doc_i, ω)) — in
 //  production this routes through the PJRT WMD artifact; the pure-Rust
-//  closure twin is used for tests.
+//  closure twin is used for tests. The n·R similarity evaluations are the
+//  whole cost of the baseline, so document rows are sharded across the
+//  pool workers (`sim` must therefore be `Fn + Sync`).
 pub fn wme_features_with(
     n: usize,
     omegas: &[Doc],
-    mut sim: impl FnMut(usize, &Doc) -> f64,
+    sim: impl Fn(usize, &Doc) -> f64 + Sync,
 ) -> Mat {
     let r = omegas.len();
     let scale = 1.0 / (r as f64).sqrt();
-    Mat::from_fn(n, r, |i, j| scale * sim(i, &omegas[j]))
+    let mut out = Mat::zeros(n, r);
+    if n == 0 || r == 0 {
+        return out;
+    }
+    // Each `sim` call is a full Sinkhorn/PJRT evaluation (~tens of µs+),
+    // so a handful per worker already amortizes the spawn.
+    let workers = pool::auto_workers(n * r, 64);
+    pool::for_row_chunks(workers, &mut out.data, r, 1, |row0, chunk| {
+        for (k, orow) in chunk.chunks_mut(r).enumerate() {
+            let i = row0 + k;
+            for (j, omega) in omegas.iter().enumerate() {
+                orow[j] = scale * sim(i, omega);
+            }
+        }
+    });
+    out
 }
 
 /// Convenience: full WME pipeline over in-memory docs with the Rust

@@ -21,6 +21,14 @@ use super::metrics::Metrics;
 
 /// Synchronous batching wrapper: chunks `eval_batch` into `batch`-sized
 /// oracle calls (mirroring the PJRT execution shape) and records metrics.
+///
+/// Under the sharded gathers (`SimOracle::columns` et al.) each pool
+/// worker streams its own row range through this wrapper, so a gather
+/// produces up to one partial (padded) batch *per worker* instead of one
+/// total — `batches`/`padded_slots` therefore vary slightly with the
+/// worker count. Oracle-call counts stay exact; the ≤ workers−1 extra
+/// padded executions are the price of parallelizing the similarity
+/// evaluations, which dominate end-to-end.
 pub struct BatchingOracle<'a> {
     inner: &'a dyn SimOracle,
     batch: usize,

@@ -12,6 +12,7 @@ use anyhow::{anyhow, Result};
 use crate::approx::Factored;
 use crate::linalg::Mat;
 use crate::runtime::SharedRuntime;
+use crate::util::pool;
 
 pub struct TileServer {
     rt: SharedRuntime,
@@ -57,25 +58,58 @@ impl TileServer {
         })
     }
 
-    /// Dense K̃[rows, cols] tile, any shape, computed on PJRT.
+    /// Dense K̃[rows, cols] tile, any shape, computed on PJRT. Horizontal
+    /// bands (aligned to the artifact tile height) are rendered in
+    /// parallel on the pool workers: operand packing and output unpacking
+    /// run concurrently while the PJRT executions serialize on the runtime
+    /// mutex.
     pub fn tile(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> Result<Mat> {
         anyhow::ensure!(rows.end <= self.n && cols.end <= self.n, "tile out of range");
         let (nr, nc) = (rows.len(), cols.len());
         let mut out = Mat::zeros(nr, nc);
+        if nr == 0 || nc == 0 {
+            return Ok(out);
+        }
+        // No auto_workers gating here: `split` already caps spawns at the
+        // band count, and every band holds ≥ 1 PJRT execution (ms-scale,
+        // serialized on the runtime mutex) that dwarfs a thread spawn.
+        let bands = pool::map_chunks(pool::workers(), nr, self.tile_rows, |band| {
+            self.render_band(rows.start + band.start, cols.start, band.len(), nc)
+        });
+        let mut off = 0;
+        for band in bands {
+            let band = band?;
+            out.data[off..off + band.len()].copy_from_slice(&band);
+            off += band.len();
+        }
+        Ok(out)
+    }
+
+    /// Render one horizontal band (band_rows x nc, starting at absolute
+    /// factor row `abs_row0` and column `col0`): step the fixed
+    /// (tile_rows x tile_cols) artifact tile over it.
+    fn render_band(
+        &self,
+        abs_row0: usize,
+        col0: usize,
+        band_rows: usize,
+        nc: usize,
+    ) -> Result<Vec<f64>> {
         let rp = self.rank_pad;
-        for r0 in (0..nr).step_by(self.tile_rows) {
+        let mut chunk = vec![0.0f64; band_rows * nc];
+        for r0 in (0..band_rows).step_by(self.tile_rows) {
+            let rcount = (band_rows - r0).min(self.tile_rows);
             for c0 in (0..nc).step_by(self.tile_cols) {
+                let ccount = (nc - c0).min(self.tile_cols);
                 // Pack the fixed-shape operands (zero rows beyond range).
                 let mut zr = vec![0.0f32; self.tile_rows * rp];
                 let mut zc = vec![0.0f32; self.tile_cols * rp];
-                let rcount = (nr - r0).min(self.tile_rows);
-                let ccount = (nc - c0).min(self.tile_cols);
                 for i in 0..rcount {
-                    let src = (rows.start + r0 + i) * rp;
+                    let src = (abs_row0 + r0 + i) * rp;
                     zr[i * rp..(i + 1) * rp].copy_from_slice(&self.left[src..src + rp]);
                 }
                 for j in 0..ccount {
-                    let src = (cols.start + c0 + j) * rp;
+                    let src = (col0 + c0 + j) * rp;
                     zc[j * rp..(j + 1) * rp].copy_from_slice(&self.right[src..src + rp]);
                 }
                 let vals = self
@@ -85,12 +119,12 @@ impl TileServer {
                     .execute("reconstruct_tile", &[&zr, &zc])?;
                 for i in 0..rcount {
                     for j in 0..ccount {
-                        out.set(r0 + i, c0 + j, vals[i * self.tile_cols + j] as f64);
+                        chunk[(r0 + i) * nc + c0 + j] = vals[i * self.tile_cols + j] as f64;
                     }
                 }
             }
         }
-        Ok(out)
+        Ok(chunk)
     }
 
     /// Full dense K̃ (bulk consumers: clustering, error evaluation).

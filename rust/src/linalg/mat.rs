@@ -1,7 +1,13 @@
 //! Dense row-major f64 matrix with the operations the approximation
-//! algorithms need. Matmul is cache-blocked with an explicitly transposed
-//! RHS — this is the L3 hot path for factor construction (see §Perf).
+//! algorithms need. Matmul is cache-blocked (k- and j-tiled with a 2-row
+//! microkernel) and sharded over output-row ranges on the
+//! [`crate::util::pool`] workers — this is the L3 hot path for factor
+//! construction (see §Perf). Chunks are aligned to the microkernel's row
+//! pairs and each output element accumulates in the same (kb, kk) order
+//! regardless of chunking, so every worker count produces bit-identical
+//! results; `matmul*_with_workers(.., 1)` is the serial reference path.
 
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -103,91 +109,94 @@ impl Mat {
         Mat::from_fn(self.rows, idx.len(), |i, j| self.get(i, idx[j]))
     }
 
-    /// C = A * B, cache-blocked ikj loop with a 2-row microkernel: two
-    /// output rows accumulate against the same streamed B row, halving B
-    /// traffic and doubling ILP on the single-core target (§Perf: ~1.4x
-    /// over the plain ikj loop).
+    /// C = A * B, cache-blocked with a 2-row microkernel (two output rows
+    /// accumulate against the same streamed B row, halving B traffic and
+    /// doubling ILP — §Perf: ~1.4x over the plain ikj loop), sharded over
+    /// output-row ranges on the pool workers. Small products (most s x s
+    /// joining-matrix work) stay on the inline serial path — spawn/join
+    /// costs more than the multiply below ~1M flops per worker.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let flops = self.rows.saturating_mul(self.cols).saturating_mul(other.cols);
+        self.matmul_with_workers(other, pool::auto_workers(flops, FLOPS_PER_WORKER))
+    }
+
+    /// [`Self::matmul`] with an explicit worker count; 1 is the serial
+    /// reference kernel the equivalence tests compare against.
+    pub fn matmul_with_workers(&self, other: &Mat, workers: usize) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let (m, n) = (self.rows, other.cols);
         let mut out = Mat::zeros(m, n);
-        const BK: usize = 64;
-        for kb in (0..k).step_by(BK) {
-            let kend = (kb + BK).min(k);
-            let mut i = 0;
-            while i + 1 < m {
-                // Two mutable row views without overlap.
-                let (head, tail) = out.data.split_at_mut((i + 1) * n);
-                let orow0 = &mut head[i * n..];
-                let orow1 = &mut tail[..n];
-                let arow0 = &self.data[i * self.cols..(i + 1) * self.cols];
-                let arow1 = &self.data[(i + 1) * self.cols..(i + 2) * self.cols];
-                for kk in kb..kend {
-                    let a0 = arow0[kk];
-                    let a1 = arow1[kk];
-                    if a0 == 0.0 && a1 == 0.0 {
-                        continue;
-                    }
-                    let brow = &other.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        let b = brow[j];
-                        orow0[j] += a0 * b;
-                        orow1[j] += a1 * b;
-                    }
+        if m == 0 || n == 0 {
+            return out;
+        }
+        // Chunks aligned to 2 rows so the microkernel pairs rows the same
+        // way for every worker count (bit-identical outputs).
+        pool::for_row_chunks(workers, &mut out.data, n, 2, |row0, chunk| {
+            matmul_block(self, other, row0, chunk);
+        });
+        out
+    }
+
+    /// C = A * B^T — both operands walked row-wise (fastest layout here);
+    /// output rows are independent, sharded across the pool workers when
+    /// the product is large enough to amortize the spawns.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        let flops = self.rows.saturating_mul(self.cols).saturating_mul(other.rows);
+        self.matmul_nt_with_workers(other, pool::auto_workers(flops, FLOPS_PER_WORKER))
+    }
+
+    /// [`Self::matmul_nt`] with an explicit worker count.
+    pub fn matmul_nt_with_workers(&self, other: &Mat, workers: usize) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        pool::for_row_chunks(workers, &mut out.data, n, 1, |row0, chunk| {
+            for (r, orow) in chunk.chunks_mut(n).enumerate() {
+                let arow = self.row(row0 + r);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = dot(arow, other.row(j));
                 }
-                i += 2;
             }
-            if i < m {
-                let arow = self.row(i);
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for kk in kb..kend {
-                    let a = arow[kk];
+        });
+        out
+    }
+
+    /// C = A^T * B, sharded over output-row ranges; every worker streams
+    /// the k rows of A/B once for its range, accumulating in the same kk
+    /// order as the serial loop. Small products stay inline.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        let flops = self.cols.saturating_mul(self.rows).saturating_mul(other.cols);
+        self.matmul_tn_with_workers(other, pool::auto_workers(flops, FLOPS_PER_WORKER))
+    }
+
+    /// [`Self::matmul_tn`] with an explicit worker count.
+    pub fn matmul_tn_with_workers(&self, other: &Mat, workers: usize) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        pool::for_row_chunks(workers, &mut out.data, n, 1, |row0, chunk| {
+            let rows = chunk.len() / n;
+            for kk in 0..k {
+                let arow = self.row(kk);
+                let brow = other.row(kk);
+                for r in 0..rows {
+                    let a = arow[row0 + r];
                     if a == 0.0 {
                         continue;
                     }
-                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    let orow = &mut chunk[r * n..(r + 1) * n];
                     for j in 0..n {
                         orow[j] += a * brow[j];
                     }
                 }
             }
-        }
-        out
-    }
-
-    /// C = A * B^T — both operands walked row-wise (fastest layout here).
-    pub fn matmul_nt(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (m, n) = (self.rows, other.rows);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            for j in 0..n {
-                out.data[i * n + j] = dot(arow, other.row(j));
-            }
-        }
-        out
-    }
-
-    /// C = A^T * B.
-    pub fn matmul_tn(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
-        let (m, k, n) = (self.cols, self.rows, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for kk in 0..k {
-            let arow = self.row(kk);
-            let brow = other.row(kk);
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        });
         out
     }
 
@@ -292,6 +301,67 @@ impl Mat {
     }
 }
 
+/// Flops that amortize one worker spawn (~tens of µs of multiply work):
+/// below this per worker, the inline serial kernel wins.
+const FLOPS_PER_WORKER: usize = 1 << 20;
+
+/// Inner matmul kernel: fill `chunk` (output rows `row0..`) with
+/// A[row0..] · B. k-blocked (BK, reuse of the A tile) and j-tiled (BJ,
+/// keeps the streamed B row and output tile in cache) around the 2-row
+/// microkernel. Per output element the accumulation order is
+/// (kb, jb fixed, kk ascending) — independent of the row chunking, which
+/// is what makes the parallel shards bit-identical to the serial pass.
+fn matmul_block(a: &Mat, b: &Mat, row0: usize, chunk: &mut [f64]) {
+    let k = a.cols;
+    let n = b.cols;
+    let rows = chunk.len() / n;
+    const BK: usize = 64;
+    const BJ: usize = 256;
+    for kb in (0..k).step_by(BK) {
+        let kend = (kb + BK).min(k);
+        for jb in (0..n).step_by(BJ) {
+            let jend = (jb + BJ).min(n);
+            let mut i = 0;
+            while i + 1 < rows {
+                // Two mutable row views without overlap.
+                let (head, tail) = chunk.split_at_mut((i + 1) * n);
+                let orow0 = &mut head[i * n..];
+                let orow1 = &mut tail[..n];
+                let arow0 = a.row(row0 + i);
+                let arow1 = a.row(row0 + i + 1);
+                for kk in kb..kend {
+                    let a0 = arow0[kk];
+                    let a1 = arow1[kk];
+                    if a0 == 0.0 && a1 == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in jb..jend {
+                        let bv = brow[j];
+                        orow0[j] += a0 * bv;
+                        orow1[j] += a1 * bv;
+                    }
+                }
+                i += 2;
+            }
+            if i < rows {
+                let arow = a.row(row0 + i);
+                let orow = &mut chunk[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in jb..jend {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -348,6 +418,19 @@ mod tests {
         let c3 = a.transpose().matmul_tn(&b);
         assert!(c1.max_abs_diff(&c2) < 1e-12);
         assert!(c1.max_abs_diff(&c3) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_workers_bit_identical() {
+        let mut rng = Rng::new(99);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 9, 13), (32, 64, 8)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let serial = a.matmul_with_workers(&b, 1);
+            for w in [2, 3, 8] {
+                assert_eq!(serial.data, a.matmul_with_workers(&b, w).data, "workers={w}");
+            }
+        }
     }
 
     #[test]

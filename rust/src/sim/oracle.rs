@@ -4,10 +4,24 @@
 //! The sublinear approximation algorithms only see this trait — the meter
 //! for the paper's headline claim is `CountingOracle`, which counts exact
 //! similarity evaluations so benches can report O(n·s) vs Ω(n²).
+//!
+//! Similarity evaluations are the paper's cost unit and the dominant wall
+//! clock, so the block assemblers (`columns`, `submatrix`, `materialize`)
+//! shard their row ranges across the [`crate::util::pool`] workers. The
+//! trait requires `Sync` for exactly this reason. Sharding is by
+//! contiguous row range with the same per-row pair order as the serial
+//! loop, so results are bit-identical for every pool size and call counts
+//! (`CountingOracle` is atomic) stay exact.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::linalg::Mat;
+use crate::util::pool;
+
+/// Pair evaluations that amortize one worker spawn. Oracle costs range
+/// from a table lookup (dense) to a PJRT execution; this is tuned for the
+/// cheap end so expensive oracles only gain from the sharding.
+const PAIRS_PER_WORKER: usize = 4096;
 
 pub trait SimOracle: Sync {
     /// Number of data points.
@@ -21,55 +35,62 @@ pub trait SimOracle: Sync {
     }
 
     /// Materialize the full n x n matrix — Ω(n²) evaluations; used only by
-    /// baselines ("WMD-kernel", "Optimal") and error measurement.
+    /// baselines ("WMD-kernel", "Optimal") and error measurement. Row
+    /// ranges are evaluated on all pool workers.
     fn materialize(&self) -> Mat {
         let n = self.n();
-        let mut pairs = Vec::with_capacity(n * n);
-        for i in 0..n {
+        sharded_gather(self, n, n, |i, pairs| {
             for j in 0..n {
                 pairs.push((i, j));
             }
-        }
-        let vals = self.eval_batch(&pairs);
-        Mat {
-            rows: n,
-            cols: n,
-            data: vals,
-        }
+        })
     }
 
-    /// Assemble the n x |cols| column block K S (plus dedup-friendly order).
+    /// Assemble the n x |cols| column block K S — the O(n·s) bulk of every
+    /// sublinear build, sharded by row range across the pool workers.
     fn columns(&self, cols: &[usize]) -> Mat {
-        let n = self.n();
-        let mut pairs = Vec::with_capacity(n * cols.len());
-        for i in 0..n {
+        sharded_gather(self, self.n(), cols.len(), |i, pairs| {
             for &j in cols {
                 pairs.push((i, j));
             }
-        }
-        let vals = self.eval_batch(&pairs);
-        Mat {
-            rows: n,
-            cols: cols.len(),
-            data: vals,
-        }
+        })
     }
 
-    /// Principal submatrix K[idx, idx].
+    /// Principal submatrix K[idx, idx], sharded like [`Self::columns`].
     fn submatrix(&self, idx: &[usize]) -> Mat {
-        let mut pairs = Vec::with_capacity(idx.len() * idx.len());
-        for &i in idx {
+        sharded_gather(self, idx.len(), idx.len(), |r, pairs| {
+            let i = idx[r];
             for &j in idx {
                 pairs.push((i, j));
             }
-        }
-        let vals = self.eval_batch(&pairs);
-        Mat {
-            rows: idx.len(),
-            cols: idx.len(),
-            data: vals,
-        }
+        })
     }
+}
+
+/// Shared sharded-gather scaffold behind the trait's block assemblers:
+/// fill a rows x width matrix whose output row `r` holds `eval_batch` over
+/// the pairs `pairs_of(r, ..)` appends, with row ranges split across the
+/// pool workers (the serial pair order per row is preserved, so results
+/// are bit-identical for every worker count).
+fn sharded_gather<O, F>(oracle: &O, rows: usize, width: usize, pairs_of: F) -> Mat
+where
+    O: SimOracle + ?Sized,
+    F: Fn(usize, &mut Vec<(usize, usize)>) + Sync,
+{
+    let mut out = Mat::zeros(rows, width);
+    if rows == 0 || width == 0 {
+        return out;
+    }
+    let workers = pool::auto_workers(rows * width, PAIRS_PER_WORKER);
+    pool::for_row_chunks(workers, &mut out.data, width, 1, |row0, chunk| {
+        let count = chunk.len() / width;
+        let mut pairs = Vec::with_capacity(count * width);
+        for r in row0..row0 + count {
+            pairs_of(r, &mut pairs);
+        }
+        chunk.copy_from_slice(&oracle.eval_batch(&pairs));
+    });
+    out
 }
 
 /// Oracle backed by a fully materialized matrix (tests, cached baselines).

@@ -1,9 +1,11 @@
-//! Shared infrastructure: seeded RNG, statistics, JSON, CLI parsing,
-//! property-test harness, timers and report writers — all dependency-free
-//! (the offline vendor set only provides `xla` + `anyhow`).
+//! Shared infrastructure: seeded RNG, the fork-join thread pool,
+//! statistics, JSON, CLI parsing, property-test harness, timers and report
+//! writers — all dependency-free (the offline vendor set only provides
+//! `xla` + `anyhow`).
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod report;
 pub mod rng;

@@ -1,0 +1,286 @@
+//! Dependency-free scoped fork-join pool used by every parallel section in
+//! the library: oracle column/submatrix sharding (`sim::oracle`), blocked
+//! matmul (`linalg::mat`), WME feature rows (`approx::wme`) and tile
+//! rendering (`coordinator::tiles`).
+//!
+//! Design rules:
+//! * Work is split into **contiguous, aligned index ranges** so a parallel
+//!   kernel runs exactly the serial kernel per range — results are
+//!   bit-identical for every worker count (the parallel-equivalence tests
+//!   in `tests/parallel_equivalence.rs` enforce this).
+//! * Worker count comes from `SIMMAT_THREADS` (env) or
+//!   `std::thread::available_parallelism`, and can be pinned per call-tree
+//!   with [`with_workers`]; `with_workers(1, ..)` selects the serial
+//!   reference path.
+//! * `std::thread::scope` keeps everything borrow-based: no channels, no
+//!   'static bounds, no allocation beyond the join handles.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+thread_local! {
+    static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Default worker count: `SIMMAT_THREADS` if set to a positive integer,
+/// otherwise the machine's available parallelism. Resolved once.
+fn default_workers() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("SIMMAT_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Effective worker count for parallel sections started by the calling
+/// thread.
+pub fn workers() -> usize {
+    OVERRIDE.with(|c| c.get()).unwrap_or_else(default_workers)
+}
+
+/// Worker count for a parallel section over `work` units, where
+/// `per_worker` units amortize one thread spawn (~tens of µs): capped so
+/// every spawned worker gets at least that much, falling back to the
+/// serial inline path for small inputs instead of paying spawn/join on
+/// them. An explicit [`with_workers`] pin bypasses the heuristic — the
+/// equivalence tests rely on forcing real threads over tiny inputs.
+pub fn auto_workers(work: usize, per_worker: usize) -> usize {
+    if let Some(n) = OVERRIDE.with(|c| c.get()) {
+        return n;
+    }
+    default_workers().min((work / per_worker.max(1)).max(1))
+}
+
+/// Run `f` with this thread's worker count pinned to `n` (restored on
+/// exit, panic-safe). The equivalence tests compare `with_workers(1, ..)`
+/// against larger pools.
+pub fn with_workers<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|c| c.replace(Some(n.max(1))));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Split `[0, total)` into at most `workers` contiguous ranges whose
+/// starts are multiples of `align`, so chunk boundaries never cut an
+/// aligned block (e.g. the 2-row matmul microkernel's row pairs).
+pub fn split(total: usize, workers: usize, align: usize) -> Vec<Range<usize>> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let align = align.max(1);
+    let workers = workers.max(1);
+    let per = (total + workers - 1) / workers;
+    let chunk = ((per + align - 1) / align) * align;
+    let mut out = Vec::with_capacity((total + chunk - 1) / chunk);
+    let mut start = 0;
+    while start < total {
+        let end = (start + chunk).min(total);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Apply `f` to each split range on its own scoped thread, returning the
+/// results in range order. Serial (no threads spawned) when the split
+/// yields a single range. Worker panics are re-raised on the caller with
+/// their original payload so property-test messages survive.
+pub fn map_chunks<T, F>(workers: usize, total: usize, align: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let ranges = split(total, workers, align);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(f).collect();
+    }
+    // Propagate the caller's pin so nested parallel sections inside
+    // workers honor the per-call-tree override.
+    let pin = OVERRIDE.with(|c| c.get());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                let fr = &f;
+                s.spawn(move || {
+                    OVERRIDE.with(|c| c.set(pin));
+                    fr(r)
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(handles.len());
+        for h in handles {
+            match h.join() {
+                Ok(v) => out.push(v),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        out
+    })
+}
+
+/// Fork-join over disjoint mutable row-chunks of `data` (`width` elements
+/// per row): `f` receives `(first_row, rows_slice)` for each chunk. Chunk
+/// starts are aligned to `align` rows. Runs inline when a single chunk
+/// suffices.
+pub fn for_row_chunks<T, F>(workers: usize, data: &mut [T], width: usize, align: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if width == 0 || data.is_empty() {
+        return;
+    }
+    debug_assert_eq!(data.len() % width, 0, "data is not whole rows");
+    let rows = data.len() / width;
+    let ranges = split(rows, workers, align);
+    if ranges.len() <= 1 {
+        f(0, data);
+        return;
+    }
+    let pin = OVERRIDE.with(|c| c.get());
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        let mut rest = data;
+        for r in ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * width);
+            rest = tail;
+            let fr = &f;
+            handles.push(s.spawn(move || {
+                OVERRIDE.with(|c| c.set(pin));
+                fr(r.start, chunk)
+            }));
+        }
+        for h in handles {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_covers_and_aligns() {
+        for (total, workers, align) in [
+            (0, 4, 1),
+            (1, 4, 1),
+            (10, 3, 1),
+            (10, 3, 2),
+            (17, 8, 2),
+            (100, 7, 16),
+            (5, 100, 2),
+        ] {
+            let ranges = split(total, workers, align);
+            assert!(ranges.len() <= workers.max(1));
+            let mut expect = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect, "contiguous");
+                assert_eq!(r.start % align.max(1), 0, "aligned start");
+                assert!(r.end > r.start);
+                expect = r.end;
+            }
+            assert_eq!(expect, total, "full coverage");
+        }
+    }
+
+    #[test]
+    fn map_chunks_preserves_order() {
+        let out = map_chunks(4, 10, 1, |r| r.start);
+        let starts: Vec<usize> = split(10, 4, 1).iter().map(|r| r.start).collect();
+        assert_eq!(out, starts);
+    }
+
+    #[test]
+    fn for_row_chunks_writes_every_row_once() {
+        let width = 3;
+        let mut data = vec![0u32; 11 * width];
+        let calls = AtomicUsize::new(0);
+        for_row_chunks(4, &mut data, width, 2, |row0, chunk| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            for (k, row) in chunk.chunks_mut(width).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (row0 + k + 1) as u32;
+                }
+            }
+        });
+        assert!(calls.load(Ordering::Relaxed) <= 4);
+        for (i, row) in data.chunks(width).enumerate() {
+            assert!(row.iter().all(|&v| v == (i + 1) as u32), "row {i}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn pin_propagates_into_spawned_workers() {
+        // The per-call-tree contract: a nested parallel section inside a
+        // worker must see the caller's pin, not the machine default.
+        let seen: Vec<usize> = with_workers(3, || map_chunks(3, 6, 1, |_| workers()));
+        assert!(seen.len() > 1, "expected threads to spawn");
+        assert!(seen.iter().all(|&w| w == 3), "workers saw {seen:?}");
+    }
+
+    #[test]
+    fn auto_workers_scales_with_work() {
+        // No override: tiny work runs serial, huge work uses the default.
+        assert_eq!(auto_workers(0, 1000), 1);
+        assert_eq!(auto_workers(999, 1000), 1);
+        assert!(auto_workers(usize::MAX / 2, 1000) >= 1);
+        // Explicit pin bypasses the heuristic.
+        with_workers(7, || assert_eq!(auto_workers(1, 1000), 7));
+    }
+
+    #[test]
+    fn with_workers_pins_and_restores() {
+        let outer = workers();
+        let inner = with_workers(3, || {
+            assert_eq!(workers(), 3);
+            with_workers(1, workers)
+        });
+        assert_eq!(inner, 1);
+        assert_eq!(workers(), outer);
+    }
+
+    #[test]
+    fn with_workers_restores_on_panic() {
+        let outer = workers();
+        let r = std::panic::catch_unwind(|| with_workers(5, || panic!("boom")));
+        assert!(r.is_err());
+        assert_eq!(workers(), outer);
+    }
+
+    #[test]
+    fn worker_panic_payload_propagates() {
+        let r = std::panic::catch_unwind(|| {
+            map_chunks(4, 8, 1, |r| {
+                if r.start > 0 {
+                    panic!("worker failed at {}", r.start);
+                }
+                r.start
+            })
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("worker failed"), "payload: {msg}");
+    }
+}

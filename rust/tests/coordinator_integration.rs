@@ -1,9 +1,13 @@
 //! Coordinator invariants under realistic load: batch service with a slow
 //! oracle, schedule/assembly consistency, and the routing contract.
 
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Duration;
 
-use simmat::coordinator::{schedule, BatchService, Method, SampleMode, SimilarityService};
+use simmat::coordinator::{
+    schedule, BatchService, Method, Query, Response, SampleMode, SimilarityService,
+};
 use simmat::linalg::Mat;
 use simmat::sim::synthetic::NearPsdOracle;
 use simmat::sim::{DenseOracle, SimOracle};
@@ -99,4 +103,96 @@ fn service_methods_rank_quality_on_indefinite_matrix() {
     let sicur = err_of(Method::SiCur, &mut rng);
     assert!(sms < nys, "SMS {sms} !< Nystrom {nys}");
     assert!(sicur < nys, "SiCUR {sicur} !< Nystrom {nys}");
+}
+
+#[test]
+fn similarity_service_concurrent_clients_exact_responses_and_metrics() {
+    // Multi-client stress: N threads x M queries against one service.
+    // Every response must match the factored store exactly and the atomic
+    // Metrics must count every query exactly once.
+    const THREADS: usize = 8;
+    const QUERIES: usize = 60;
+    let mut rng = Rng::new(21);
+    let n = 80;
+    let o = NearPsdOracle::new(n, 8, 0.4, &mut rng);
+    let svc = Arc::new(SimilarityService::build(&o, Method::SmsNystrom, 20, 64, &mut rng).unwrap());
+    let reference = svc.factored().clone();
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let svc = Arc::clone(&svc);
+        let reference = reference.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + t as u64);
+            for q in 0..QUERIES {
+                let (i, j) = (rng.below(n), rng.below(n));
+                match svc.query(&Query::Entry(i, j)).unwrap() {
+                    Response::Scalar(v) => {
+                        assert_eq!(v, reference.entry(i, j), "thread {t} query {q}")
+                    }
+                    other => panic!("unexpected response {other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        svc.metrics.queries.load(Ordering::Relaxed),
+        (THREADS * QUERIES) as u64,
+        "every query must be counted exactly once"
+    );
+}
+
+#[test]
+fn batch_service_concurrent_clients_exact_oracle_call_metrics() {
+    // The batcher's worker owns the oracle; under concurrent submission
+    // the Metrics oracle-call counter must equal the number of requests
+    // exactly (each request lands in exactly one flushed batch), and
+    // every reply must match the dense oracle.
+    const THREADS: usize = 6;
+    const PER_THREAD: usize = 50;
+    let mut rng = Rng::new(22);
+    let n = 40;
+    let k = Mat::gaussian(n, n, &mut rng);
+    let svc = BatchService::spawn(DenseOracle::new(k.clone()), 32, Duration::from_millis(1));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = svc.client();
+        let reference = k.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(500 + t as u64);
+            for _ in 0..PER_THREAD {
+                let (i, j) = (rng.below(n), rng.below(n));
+                assert_eq!(client.eval(i, j), reference.get(i, j), "thread {t}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let calls = svc.metrics.oracle_calls.load(Ordering::Relaxed);
+    assert_eq!(calls, (THREADS * PER_THREAD) as u64);
+    let batches = svc.metrics.batches.load(Ordering::Relaxed);
+    assert!(batches <= calls, "batches {batches} > requests {calls}");
+}
+
+#[test]
+fn sublinear_build_invariant_holds_for_every_pool_size() {
+    // The coordinator's oracle budget (the paper's cost model) must be
+    // invariant to how many workers shard the gathers.
+    let mut rng = Rng::new(23);
+    let o = NearPsdOracle::new(60, 6, 0.3, &mut rng);
+    let mut counts = Vec::new();
+    for w in [1, 2, 8] {
+        let calls = simmat::util::pool::with_workers(w, || {
+            let mut rng = Rng::new(9);
+            let svc = SimilarityService::build(&o, Method::SiCur, 10, 32, &mut rng).unwrap();
+            svc.stats.oracle_calls
+        });
+        counts.push(calls);
+    }
+    assert_eq!(counts[0], counts[1]);
+    assert_eq!(counts[0], counts[2]);
+    assert!(counts[0] < 60 * 60, "must stay sublinear: {}", counts[0]);
 }

@@ -1,0 +1,157 @@
+//! Parallel/serial equivalence: the contract of the fork-join pool is that
+//! every parallel section produces **bit-identical** results for every
+//! worker count, with `with_workers(1, ..)` (or `*_with_workers(.., 1)`)
+//! as the serial reference. These property tests pin that contract for the
+//! matmul kernels, the sharded oracle gathers, and the full SMS-Nyström /
+//! CUR builds (determinism under sharding for a fixed RNG seed).
+
+use simmat::approx::{self, SmsConfig};
+use simmat::linalg::Mat;
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{CountingOracle, SimOracle};
+use simmat::util::pool;
+use simmat::util::prop::check;
+use simmat::util::rng::Rng;
+
+#[test]
+fn matmul_bit_identical_across_pool_sizes() {
+    check("matmul-pool-equivalence", 8, |rng| {
+        let m = 1 + rng.below(40);
+        let k = 1 + rng.below(30);
+        let n = 1 + rng.below(40);
+        let a = Mat::gaussian(m, k, rng);
+        let b = Mat::gaussian(k, n, rng);
+        let serial = a.matmul_with_workers(&b, 1);
+        let serial_nt = a.matmul_nt_with_workers(&b.transpose(), 1);
+        let serial_tn = a.transpose().matmul_tn_with_workers(&b, 1);
+        for w in [2, 8] {
+            assert_eq!(serial.data, a.matmul_with_workers(&b, w).data, "matmul w={w}");
+            assert_eq!(
+                serial_nt.data,
+                a.matmul_nt_with_workers(&b.transpose(), w).data,
+                "matmul_nt w={w}"
+            );
+            assert_eq!(
+                serial_tn.data,
+                a.transpose().matmul_tn_with_workers(&b, w).data,
+                "matmul_tn w={w}"
+            );
+        }
+    });
+}
+
+#[test]
+fn oracle_gathers_bit_identical_across_pool_sizes() {
+    check("oracle-gather-pool-equivalence", 6, |rng| {
+        let n = 20 + rng.below(60);
+        let o = NearPsdOracle::new(n, 6, 0.4, rng);
+        let k = 1 + rng.below(n / 2 + 1);
+        let cols = rng.sample_indices(n, k);
+        let serial = pool::with_workers(1, || {
+            (o.columns(&cols), o.submatrix(&cols), o.materialize())
+        });
+        for w in [2, 8] {
+            let par = pool::with_workers(w, || {
+                (o.columns(&cols), o.submatrix(&cols), o.materialize())
+            });
+            assert_eq!(serial.0.data, par.0.data, "columns w={w}");
+            assert_eq!(serial.1.data, par.1.data, "submatrix w={w}");
+            assert_eq!(serial.2.data, par.2.data, "materialize w={w}");
+        }
+    });
+}
+
+#[test]
+fn oracle_call_counts_exact_under_sharding() {
+    // The atomic CountingOracle must report the exact O(n·s) evaluation
+    // budget no matter how many workers shard the gather.
+    let mut rng = Rng::new(3);
+    let n = 70;
+    let o = NearPsdOracle::new(n, 6, 0.3, &mut rng);
+    let cols: Vec<usize> = (0..12).collect();
+    for w in [1, 2, 8] {
+        let counter = CountingOracle::new(&o);
+        pool::with_workers(w, || {
+            counter.columns(&cols);
+            counter.submatrix(&cols);
+        });
+        assert_eq!(
+            counter.calls(),
+            (n * cols.len() + cols.len() * cols.len()) as u64,
+            "workers={w}"
+        );
+    }
+}
+
+#[test]
+fn sms_and_cur_builds_deterministic_under_sharding() {
+    // Fixed RNG seed → identical landmark plans → the factored outputs
+    // must be bit-identical for every worker count (the whole numeric
+    // pipeline is chunking-invariant).
+    let o = {
+        let mut rng = Rng::new(7);
+        NearPsdOracle::new(90, 10, 0.5, &mut rng)
+    };
+    let run = |workers: usize| {
+        pool::with_workers(workers, || {
+            let mut rng = Rng::new(77);
+            let sms = approx::sms_nystrom(&o, 20, SmsConfig::default(), &mut rng).unwrap();
+            let sicur = approx::sicur(&o, 16, 2.0, &mut rng).unwrap();
+            let stacur = approx::stacur(&o, 16, true, &mut rng).unwrap();
+            let nys = approx::nystrom(&o, 16, &mut rng).unwrap();
+            (
+                sms.factored.left.data,
+                sms.shift.to_bits(),
+                sicur.left.data,
+                sicur.right_t.data,
+                stacur.left.data,
+                nys.left.data,
+            )
+        })
+    };
+    let serial = run(1);
+    for w in [2, 8] {
+        let par = run(w);
+        assert_eq!(serial.0, par.0, "SMS factors differ at workers={w}");
+        assert_eq!(serial.1, par.1, "SMS shift differs at workers={w}");
+        assert_eq!(serial.2, par.2, "SiCUR left differs at workers={w}");
+        assert_eq!(serial.3, par.3, "SiCUR right differs at workers={w}");
+        assert_eq!(serial.4, par.4, "StaCUR differs at workers={w}");
+        assert_eq!(serial.5, par.5, "Nystrom differs at workers={w}");
+    }
+}
+
+#[test]
+fn wme_features_deterministic_under_sharding() {
+    use simmat::approx::wme::{wme_features, WmeConfig};
+    use simmat::sim::wmd::{Doc, SinkhornCfg};
+    let docs: Vec<Doc> = {
+        let mut rng = Rng::new(5);
+        (0..10)
+            .map(|_| {
+                let words: Vec<Vec<f64>> =
+                    (0..4).map(|_| (0..6).map(|_| rng.normal()).collect()).collect();
+                Doc {
+                    weights: vec![0.25; 4],
+                    words,
+                }
+            })
+            .collect()
+    };
+    let cfg = WmeConfig {
+        features: 16,
+        d_max: 4,
+        gamma: 1.0,
+        cfg: SinkhornCfg::default(),
+    };
+    let run = |workers: usize| {
+        pool::with_workers(workers, || {
+            let mut rng = Rng::new(11);
+            wme_features(&docs, cfg, &mut rng)
+        })
+    };
+    let serial = run(1);
+    for w in [2, 8] {
+        assert_eq!(serial.data, run(w).data, "WME features differ at workers={w}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Offline shim covering the subset of the `anyhow` API this workspace
+//! uses: `Error`, `Result`, the `anyhow!` / `bail!` / `ensure!` macros and
+//! the `Context` extension trait. Behaviour matches the real crate for
+//! these entry points (message-first Display, context chain in Debug);
+//! swap the path dependency for crates.io `anyhow` when a registry is
+//! available.
+
+use std::fmt;
+
+/// Error type: a message plus the chain of contexts wrapped around it.
+/// `chain[0]` is the outermost (most recent) context, the last element the
+/// root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message (what `Context` delegates to).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Mirrors real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// (and options) whose error converts into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_in_debug() {
+        let err = io_fail().unwrap_err();
+        let debug = format!("{err:?}");
+        assert!(debug.starts_with("reading config"), "{debug}");
+        assert!(debug.contains("Caused by:"), "{debug}");
+        assert_eq!(format!("{err}"), "reading config");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 7");
+        let e = anyhow!("pair {:?}", (1, 2));
+        assert_eq!(format!("{e}"), "pair (1, 2)");
+        let msg = String::from("plain");
+        let e = anyhow!(msg);
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    fn guarded(v: i32) -> Result<i32> {
+        ensure!(v >= 0, "negative: {v}");
+        ensure!(v != 1);
+        if v == 2 {
+            bail!("two is right out");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert!(guarded(3).is_ok());
+        assert_eq!(format!("{}", guarded(-1).unwrap_err()), "negative: -1");
+        assert!(format!("{}", guarded(1).unwrap_err()).contains("v != 1"));
+        assert_eq!(format!("{}", guarded(2).unwrap_err()), "two is right out");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+}

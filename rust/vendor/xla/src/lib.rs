@@ -1,0 +1,184 @@
+//! Offline stub of the `xla` crate surface used by `simmat::runtime`.
+//!
+//! The container has no PJRT shared library and no registry access, so the
+//! real bindings cannot be built here. This stub keeps the runtime layer
+//! compiling unchanged; every entry point fails with
+//! [`Error::BackendUnavailable`] at `PjRtClient::cpu()`, which the callers
+//! already treat as "artifacts not built / runtime unavailable" and skip.
+//! Deployments with the real `xla_extension` swap the path dependency.
+
+use std::fmt;
+
+/// Stub error: the only value actually produced is `BackendUnavailable`;
+/// `Other` exists so downstream code matching on `{e:?}` strings keeps a
+/// stable shape.
+pub enum Error {
+    BackendUnavailable,
+    Other(String),
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BackendUnavailable => {
+                write!(f, "xla backend unavailable (offline stub build)")
+            }
+            Error::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::BackendUnavailable)
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy + Default + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (stub: shape-carrying container, never executed).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel != self.data.len() as i64 {
+            return Err(Error::Other(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal {
+            data: vec![v],
+            dims: Vec::new(),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: never constructed).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation ready to compile (stub: never constructed because
+/// `HloModuleProto::from_text_file` always fails first).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: `cpu()` always fails, so no instance exists).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (stub: unreachable).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (stub: unreachable).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err:?}").contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_reshape_checks_numel() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(Literal::from(1.5f32).shape(), &[] as &[i64]);
+    }
+}
