@@ -8,12 +8,13 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use simmat::approx::{self, Factored, SmsConfig};
+use simmat::approx::{self, Factored, GatherPlan, SmsConfig};
 use simmat::coordinator::{BatchService, BatchingOracle, Metrics};
 use simmat::linalg::{eigh, Mat};
 use simmat::runtime::{default_artifacts_dir, Runtime};
 use simmat::sim::synthetic::NearPsdOracle;
-use simmat::sim::{DenseOracle, SimOracle};
+use simmat::sim::wmd::{sinkhorn_cost_naive, Doc, SinkhornCfg, WmdOracle};
+use simmat::sim::{CountingOracle, DenseOracle, SimOracle};
 use simmat::util::pool;
 use simmat::util::report::Report;
 use simmat::util::rng::Rng;
@@ -70,14 +71,18 @@ fn main() {
     ));
     let o_big = NearPsdOracle::new(1500, 16, 0.4, &mut rng);
     let cols: Vec<usize> = (0..96).map(|i| i * 13).collect();
-    let s = bench(budget, 1, || {
+    // Stats are reused below for the BENCH_simeval.json gather-throughput
+    // entry — one measurement, one number.
+    let gather_serial = bench(budget, 1, || {
         pool::with_workers(1, || std::hint::black_box(o_big.columns(&cols)));
     });
-    rep.line(format!("- oracle.columns 1500x96 serial: {s}"));
-    let s = bench(budget, 1, || {
+    rep.line(format!("- oracle.columns 1500x96 serial: {gather_serial}"));
+    let gather_parallel = bench(budget, 1, || {
         pool::with_workers(hw, || std::hint::black_box(o_big.columns(&cols)));
     });
-    rep.line(format!("- oracle.columns 1500x96 parallel ({hw} workers): {s}"));
+    rep.line(format!(
+        "- oracle.columns 1500x96 parallel ({hw} workers): {gather_parallel}"
+    ));
     let s = bench(Duration::from_millis(600), 1, || {
         std::hint::black_box(c.matmul_with_workers(&m, 1));
     });
@@ -140,6 +145,135 @@ fn main() {
         std::hint::black_box(client.eval(3, 77));
     });
     rep.line(format!("- batch service single-request round trip: {s}"));
+
+    // ---- similarity-evaluation economy (machine-readable trajectory) ----
+    // WMD pairs/sec (scratch fast path vs preserved naive reference),
+    // Δ-call counts per algorithm with the dedup-planner formulas, and
+    // gather throughput serial vs parallel — persisted as
+    // BENCH_simeval.json at the repo root so subsequent PRs can regress
+    // against it.
+    rep.line("");
+    rep.line("## Similarity-evaluation economy");
+    let docs: Vec<Doc> = (0..48)
+        .map(|t| {
+            let len = 10 + t % 7;
+            let words: Vec<Vec<f64>> = (0..len)
+                .map(|_| (0..64).map(|_| rng.normal()).collect())
+                .collect();
+            let mut w: Vec<f64> = (0..len).map(|_| rng.f64() + 0.1).collect();
+            let sum: f64 = w.iter().sum();
+            w.iter_mut().for_each(|x| *x /= sum);
+            Doc::new(words, w)
+        })
+        .collect();
+    let wmd = WmdOracle::new(docs, 0.75, SinkhornCfg::default());
+    let wmd_pairs: Vec<(usize, usize)> = (0..256).map(|t| (t % 48, (t * 7) % 48)).collect();
+    let fast_stats = bench(budget, 1, || {
+        std::hint::black_box(wmd.eval_batch(&wmd_pairs));
+    });
+    let naive_stats = bench(budget, 1, || {
+        let v: Vec<f64> = wmd_pairs
+            .iter()
+            .map(|&(i, j)| {
+                (-wmd.gamma * sinkhorn_cost_naive(&wmd.docs[i], &wmd.docs[j], wmd.cfg)).exp()
+            })
+            .collect();
+        std::hint::black_box(v);
+    });
+    let pps = |mean_ns: f64| wmd_pairs.len() as f64 / (mean_ns / 1e9);
+    let (fast_pps, naive_pps) = (pps(fast_stats.mean_ns), pps(naive_stats.mean_ns));
+    let wmd_speedup = fast_pps / naive_pps;
+    rep.line(format!(
+        "- WMD eval 256 pairs: fast {fast_pps:.0} pairs/s vs naive {naive_pps:.0} pairs/s ({wmd_speedup:.2}x)"
+    ));
+
+    // Δ-call counts: measured through CountingOracle vs the documented
+    // formulas. The smoke assertions below make this bench fail (in CI
+    // too) if the dedup planner ever *increases* a count.
+    let n_cnt = 400;
+    let o_cnt = NearPsdOracle::new(n_cnt, 10, 0.4, &mut rng);
+    let (s1, s2) = (40usize, 80usize);
+    let mut delta_rows: Vec<(String, u64, u64, u64)> = Vec::new();
+    {
+        let c = CountingOracle::new(&o_cnt);
+        let mut r2 = Rng::new(7);
+        approx::sms_nystrom(&c, s1, SmsConfig::default(), &mut r2).unwrap();
+        let after = (n_cnt * s1 + s2 * (s2 - s1)) as u64;
+        let before = (n_cnt * s1 + s2 * s2) as u64;
+        assert_eq!(c.calls(), after, "SMS dedup formula violated");
+        delta_rows.push(("sms_nystrom_nested".into(), c.calls(), after, before));
+    }
+    {
+        let c = CountingOracle::new(&o_cnt);
+        let mut r2 = Rng::new(8);
+        approx::nystrom(&c, s1, &mut r2).unwrap();
+        let f = (n_cnt * s1) as u64;
+        assert_eq!(c.calls(), f, "Nystrom call count drifted");
+        delta_rows.push(("nystrom".into(), c.calls(), f, f));
+    }
+    {
+        let c = CountingOracle::new(&o_cnt);
+        let mut r2 = Rng::new(9);
+        approx::sicur(&c, s1, 2.0, &mut r2).unwrap();
+        let f = (n_cnt * s2) as u64;
+        assert_eq!(c.calls(), f, "SiCUR call count drifted");
+        delta_rows.push(("sicur_nested".into(), c.calls(), f, f));
+    }
+    {
+        let c = CountingOracle::new(&o_cnt);
+        let mut r2 = Rng::new(10);
+        approx::stacur(&c, s1, false, &mut r2).unwrap();
+        let before = (2 * n_cnt * s1) as u64;
+        assert!(c.calls() <= before, "StaCUR(d) dedup increased Δ calls");
+        delta_rows.push(("stacur_independent".into(), c.calls(), c.calls(), before));
+    }
+    // Nested-plan planner sanity independent of any algorithm.
+    {
+        let mut r2 = Rng::new(11);
+        let plan = approx::LandmarkPlan::nested(n_cnt, s1, s2, &mut r2);
+        let g = GatherPlan::new(&plan.s1, &plan.s2);
+        assert!(
+            g.predicted_calls(n_cnt) <= g.naive_calls(n_cnt),
+            "planner must never exceed the naive count"
+        );
+    }
+    for (name, measured, formula, before) in &delta_rows {
+        rep.line(format!(
+            "- Δ calls {name}: {measured} (formula {formula}, pre-dedup {before})"
+        ));
+    }
+
+    // Gather throughput in pairs/sec, derived from the oracle.columns
+    // measurements taken in the sharding section above (no re-run).
+    let gather_pairs = (1500 * 96) as f64;
+    let (gather_serial_pps, gather_parallel_pps) = (
+        gather_pairs / (gather_serial.mean_ns / 1e9),
+        gather_pairs / (gather_parallel.mean_ns / 1e9),
+    );
+    rep.line(format!(
+        "- gather 1500x96: serial {gather_serial_pps:.0} pairs/s, parallel {gather_parallel_pps:.0} pairs/s ({hw} workers)"
+    ));
+
+    let delta_json: Vec<String> = delta_rows
+        .iter()
+        .map(|(name, measured, formula, before)| {
+            format!(
+                "    {{\"algorithm\": \"{name}\", \"measured\": {measured}, \"formula\": {formula}, \"pre_dedup\": {before}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"simeval\",\n  \"workers\": {hw},\n  \"wmd_eval\": {{\n    \"pairs\": {np},\n    \"doc_len\": \"10-16\",\n    \"dim\": 64,\n    \"sinkhorn_iters\": {iters},\n    \"fast_pairs_per_sec\": {fast_pps:.1},\n    \"naive_pairs_per_sec\": {naive_pps:.1},\n    \"speedup\": {wmd_speedup:.3}\n  }},\n  \"delta_calls\": [\n{delta}\n  ],\n  \"gather\": {{\n    \"rows\": 1500,\n    \"cols\": 96,\n    \"serial_pairs_per_sec\": {gather_serial_pps:.1},\n    \"parallel_pairs_per_sec\": {gather_parallel_pps:.1}\n  }}\n}}\n",
+        np = wmd_pairs.len(),
+        iters = wmd.cfg.iters,
+        delta = delta_json.join(",\n"),
+    );
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_simeval.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_simeval.json"));
+    std::fs::write(&bench_path, json).unwrap();
+    rep.line(format!("- wrote {}", bench_path.display()));
 
     // ---- PJRT per-artifact execution latency ----
     if let Some(dir) = default_artifacts_dir() {

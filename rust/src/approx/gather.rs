@@ -1,0 +1,182 @@
+//! Block-reuse gather planner: assemble the block requests of the
+//! sublinear builds from a single deduplicated pair set.
+//!
+//! The paper counts cost in exact Δ evaluations, and the SMS/Nyström/CUR
+//! builds all request overlapping blocks: SMS needs C = K·S1 (n x s1) and
+//! W2 = S2ᵀKS2 (s2 x s2), but with nested plans (S1 ⊆ S2) every column of
+//! W2 indexed by S1 is already inside C — re-querying it wastes s2·s1
+//! Δ calls (≈ 2·s1² at the default oversampling z = 2). [`GatherPlan`]
+//! computes the overlap once and fetches only the fresh entries;
+//! [`column_blocks`] does the same for two column-block requests with
+//! shared columns (Skeleton / StaCUR(d) with colliding samples).
+//!
+//! Reused entries are *copied*, never re-evaluated, so for the
+//! deterministic oracles in this crate the assembled blocks are
+//! bit-identical to the naive `columns` + `submatrix` pair — only the
+//! `CountingOracle` budget shrinks. The planner never increases the call
+//! count: `predicted_calls <= naive_calls` by construction (asserted by
+//! `tests/eval_economy.rs` and the microbench smoke check).
+
+use crate::linalg::Mat;
+use crate::sim::SimOracle;
+
+/// Plan for the C = K·S1 / W2 = S2ᵀKS2 block pair of a two-stage build.
+pub struct GatherPlan {
+    s1: Vec<usize>,
+    s2: Vec<usize>,
+    /// For each position c in S2: `Some(p)` when s2[c] == s1[p], i.e. the
+    /// whole submatrix column c can be copied out of column p of C.
+    hits: Vec<Option<usize>>,
+    /// Positions in S2 whose submatrix column needs fresh Δ calls.
+    misses: Vec<usize>,
+}
+
+/// The two blocks every two-stage build consumes.
+pub struct GatherBlocks {
+    /// C = K·S1 (n x s1).
+    pub columns: Mat,
+    /// W2 = S2ᵀ·K·S2 (s2 x s2).
+    pub submatrix: Mat,
+}
+
+impl GatherPlan {
+    pub fn new(s1: &[usize], s2: &[usize]) -> GatherPlan {
+        let hits: Vec<Option<usize>> = s2
+            .iter()
+            .map(|j| s1.iter().position(|i| i == j))
+            .collect();
+        let misses: Vec<usize> = hits
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.is_none())
+            .map(|(c, _)| c)
+            .collect();
+        GatherPlan {
+            s1: s1.to_vec(),
+            s2: s2.to_vec(),
+            hits,
+            misses,
+        }
+    }
+
+    /// Exact Δ-call count [`Self::execute`] spends:
+    /// n·s1 + s2·(s2 − |S1 ∩ S2|); for nested plans, n·s1 + s2² − s2·s1.
+    pub fn predicted_calls(&self, n: usize) -> usize {
+        n * self.s1.len() + self.s2.len() * self.misses.len()
+    }
+
+    /// Cost of the naive `columns(S1)` + `submatrix(S2)` pair: n·s1 + s2².
+    pub fn naive_calls(&self, n: usize) -> usize {
+        n * self.s1.len() + self.s2.len() * self.s2.len()
+    }
+
+    /// Fetch C with a sharded gather, then assemble W2 from C's rows where
+    /// the plans overlap and a sharded gather of only the missing columns.
+    pub fn execute(&self, oracle: &dyn SimOracle) -> GatherBlocks {
+        let columns = oracle.columns(&self.s1);
+        let miss_cols: Vec<usize> = self.misses.iter().map(|&c| self.s2[c]).collect();
+        // s2 x |misses| block of entries C cannot provide.
+        let fresh = oracle.block(&self.s2, &miss_cols);
+        let mut submatrix = Mat::zeros(self.s2.len(), self.s2.len());
+        for (r, &i) in self.s2.iter().enumerate() {
+            let mut m = 0;
+            for (c, hit) in self.hits.iter().enumerate() {
+                let v = match hit {
+                    Some(p) => columns.get(i, *p),
+                    None => {
+                        let v = fresh.get(r, m);
+                        m += 1;
+                        v
+                    }
+                };
+                submatrix.set(r, c, v);
+            }
+        }
+        GatherBlocks { columns, submatrix }
+    }
+}
+
+/// Assemble the two column blocks K·A (n x |a|) and K·B (n x |b|) from a
+/// single sharded gather over the deduplicated union of requested columns:
+/// n·|A ∪ B| Δ calls instead of n·(|A| + |B|).
+pub fn column_blocks(oracle: &dyn SimOracle, a: &[usize], b: &[usize]) -> (Mat, Mat) {
+    let mut union: Vec<usize> = a.to_vec();
+    for &j in b {
+        if !union.contains(&j) {
+            union.push(j);
+        }
+    }
+    let block = oracle.columns(&union);
+    let positions = |idx: &[usize]| -> Vec<usize> {
+        idx.iter()
+            .map(|i| union.iter().position(|u| u == i).unwrap())
+            .collect()
+    };
+    (
+        block.select_cols(&positions(a)),
+        block.select_cols(&positions(b)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CountingOracle, DenseOracle};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nested_plan_blocks_match_naive_gathers_exactly() {
+        let mut rng = Rng::new(1);
+        let n = 24;
+        let o = DenseOracle::new(Mat::gaussian(n, n, &mut rng));
+        let s2 = rng.sample_indices(n, 10);
+        let s1 = rng.sample_from(&s2, 4);
+        let plan = GatherPlan::new(&s1, &s2);
+        let blocks = plan.execute(&o);
+        assert_eq!(blocks.columns.data, o.columns(&s1).data);
+        assert_eq!(blocks.submatrix.data, o.submatrix(&s2).data);
+    }
+
+    #[test]
+    fn nested_plan_call_count_is_formula() {
+        let mut rng = Rng::new(2);
+        let n = 30;
+        let o = DenseOracle::new(Mat::gaussian(n, n, &mut rng));
+        let s2 = rng.sample_indices(n, 12);
+        let s1 = rng.sample_from(&s2, 5);
+        let plan = GatherPlan::new(&s1, &s2);
+        let counter = CountingOracle::new(&o);
+        plan.execute(&counter);
+        let want = n * 5 + 12 * (12 - 5);
+        assert_eq!(counter.calls(), want as u64);
+        assert_eq!(plan.predicted_calls(n), want);
+        assert!(plan.predicted_calls(n) <= plan.naive_calls(n));
+    }
+
+    #[test]
+    fn disjoint_plan_degrades_to_naive_cost() {
+        let mut rng = Rng::new(3);
+        let n = 20;
+        let o = DenseOracle::new(Mat::gaussian(n, n, &mut rng));
+        let plan = GatherPlan::new(&[0, 1], &[5, 6, 7]);
+        let counter = CountingOracle::new(&o);
+        let blocks = plan.execute(&counter);
+        assert_eq!(counter.calls(), plan.naive_calls(n) as u64);
+        assert_eq!(blocks.submatrix.data, o.submatrix(&[5, 6, 7]).data);
+    }
+
+    #[test]
+    fn column_blocks_dedup_and_match() {
+        let mut rng = Rng::new(4);
+        let n = 18;
+        let o = DenseOracle::new(Mat::gaussian(n, n, &mut rng));
+        let a = vec![3, 7, 11];
+        let b = vec![7, 2, 3, 14];
+        let counter = CountingOracle::new(&o);
+        let (ka, kb) = column_blocks(&counter, &a, &b);
+        assert_eq!(ka.data, o.columns(&a).data);
+        assert_eq!(kb.data, o.columns(&b).data);
+        // Union {3,7,11,2,14} has 5 columns, not 7.
+        assert_eq!(counter.calls(), (n * 5) as u64);
+    }
+}

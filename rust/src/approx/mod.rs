@@ -5,16 +5,21 @@
 //! | method | paper | oracle calls |
 //! |---|---|---|
 //! | [`nystrom::nystrom`] | Williams & Seeger 2001, Eq. (1) | n·s |
-//! | [`sms::sms_nystrom`] | **Algorithm 1 (contribution)** | n·s1 + s2² |
-//! | [`cur::skeleton`] | Goreinov et al. 1997 | 2·n·s |
+//! | [`sms::sms_nystrom`] | **Algorithm 1 (contribution)** | n·s1 + s2² − s2·s1 (nested; [`gather::GatherPlan`] reuse) |
+//! | [`cur::skeleton`] | Goreinov et al. 1997 | n·|S1 ∪ S2| ≤ 2·n·s |
 //! | [`cur::sicur`] | Sec. 3 (SiCUR) | n·s2 |
-//! | [`cur::stacur`] | Sec. 3 (StaCUR) | n·s (s) / 2·n·s (d) |
+//! | [`cur::stacur`] | Sec. 3 (StaCUR) | n·s (s) / n·|S1 ∪ S2| (d) |
 //! | [`optimal::optimal_rank_k`] | 'Optimal' baseline | n² (cap) |
 //! | [`wme`] | Wu et al. 2018 baseline | n·R |
+//!
+//! Overlapping block requests are deduplicated by the [`gather`] planner
+//! (entries are copied, never re-evaluated), so the counts above are
+//! exact — see "Cost accounting" in rust/README.md.
 
 pub mod cur;
 pub mod error;
 pub mod factored;
+pub mod gather;
 pub mod nystrom;
 pub mod optimal;
 pub mod sampling;
@@ -24,6 +29,7 @@ pub mod wme;
 pub use cur::{cur_embeddings, sicur, skeleton, stacur};
 pub use error::{rel_fro_error, rel_fro_error_dense};
 pub use factored::Factored;
+pub use gather::{column_blocks, GatherBlocks, GatherPlan};
 pub use nystrom::{nystrom, nystrom_psd_embedding};
 pub use optimal::{optimal_embeddings, optimal_rank_k};
 pub use sampling::LandmarkPlan;

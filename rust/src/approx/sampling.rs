@@ -41,6 +41,18 @@ impl LandmarkPlan {
     pub fn is_nested(&self) -> bool {
         self.s1.iter().all(|i| self.s2.contains(i))
     }
+
+    /// |S1 ∩ S2| — the block overlap the gather planner turns into copies
+    /// instead of Δ calls (equals s1 for nested plans).
+    pub fn overlap(&self) -> usize {
+        self.s1.iter().filter(|i| self.s2.contains(i)).count()
+    }
+
+    /// |S1 ∪ S2| — the unique-column budget of a deduplicated two-block
+    /// column gather (`approx::gather::column_blocks`).
+    pub fn union_size(&self) -> usize {
+        self.s1.len() + self.s2.len() - self.overlap()
+    }
 }
 
 #[cfg(test)]
@@ -63,6 +75,24 @@ mod tests {
             sorted.dedup();
             assert_eq!(sorted.len(), s2, "S2 has duplicates");
             assert!(p.s2.iter().all(|&i| i < n));
+        });
+    }
+
+    #[test]
+    fn overlap_and_union_counts() {
+        let p = LandmarkPlan {
+            s1: vec![1, 2, 3],
+            s2: vec![3, 4, 1, 9],
+        };
+        assert_eq!(p.overlap(), 2);
+        assert_eq!(p.union_size(), 5);
+        check("landmark-nested-overlap", 10, |rng| {
+            let n = 10 + rng.below(100);
+            let s2 = 2 + rng.below(n - 2);
+            let s1 = 1 + rng.below(s2);
+            let p = LandmarkPlan::nested(n, s1, s2, rng);
+            assert_eq!(p.overlap(), s1, "nested overlap is all of S1");
+            assert_eq!(p.union_size(), s2);
         });
     }
 

@@ -26,10 +26,7 @@ pub fn random_doc(docs: &[Doc], d_max: usize, rng: &mut Rng) -> Doc {
         let d = &docs[rng.below(docs.len())];
         words.push(d.words[rng.below(d.words.len())].clone());
     }
-    Doc {
-        weights: vec![1.0 / len as f64; len],
-        words,
-    }
+    Doc::new(words, vec![1.0 / len as f64; len])
 }
 
 /// WME feature matrix (n x R). `sim` evaluates exp(-γ WMD(doc_i, ω)) — in
@@ -84,10 +81,7 @@ mod tests {
                 let words: Vec<Vec<f64>> = (0..5)
                     .map(|_| (0..8).map(|_| center + 0.3 * rng.normal()).collect())
                     .collect();
-                Doc {
-                    weights: vec![0.2; 5],
-                    words,
-                }
+                Doc::new(words, vec![0.2; 5])
             })
             .collect()
     }

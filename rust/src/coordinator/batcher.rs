@@ -52,14 +52,28 @@ impl SimOracle for BatchingOracle<'_> {
     }
 
     fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
-        let mut out = Vec::with_capacity(pairs.len());
-        for chunk in pairs.chunks(self.batch) {
+        let mut out = vec![0.0; pairs.len()];
+        self.eval_batch_into(pairs, &mut out);
+        out
+    }
+
+    /// Chunked zero-copy path: each batch-sized chunk of pairs is
+    /// evaluated straight into the matching chunk of `out`, so a
+    /// metrics-wrapped gather allocates nothing per chunk. Metrics are
+    /// recorded per chunk exactly as the allocating path did — batch
+    /// counts, padded slots, and oracle-call totals are unchanged.
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (chunk, ochunk) in pairs.chunks(self.batch).zip(out.chunks_mut(self.batch)) {
             let t0 = Instant::now();
-            out.extend(self.inner.eval_batch(chunk));
+            self.inner.eval_batch_into(chunk, ochunk);
             self.metrics.record_batch(chunk.len(), self.batch);
             self.metrics.record_latency(t0.elapsed());
         }
-        out
+    }
+
+    fn pairs_per_worker(&self) -> usize {
+        self.inner.pairs_per_worker()
     }
 }
 
@@ -220,6 +234,32 @@ mod tests {
         // 20 pairs at batch 7 -> 3 batches, 1 padded slot.
         assert_eq!(metrics.batches.load(std::sync::atomic::Ordering::Relaxed), 3);
         assert_eq!(metrics.oracle_calls.load(std::sync::atomic::Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn batching_oracle_into_path_same_values_and_metrics() {
+        // The zero-copy chunking must record exactly the metrics the
+        // allocating path recorded: same batches, calls, and padding.
+        let o = toy_oracle(20, 2);
+        let pairs: Vec<(usize, usize)> = (0..33).map(|i| (i % 20, (i * 7) % 20)).collect();
+        let m_batch = Arc::new(Metrics::new());
+        let via_batch = BatchingOracle::new(&o, 8, m_batch.clone()).eval_batch(&pairs);
+        let m_into = Arc::new(Metrics::new());
+        let mut via_into = vec![0.0; pairs.len()];
+        BatchingOracle::new(&o, 8, m_into.clone()).eval_batch_into(&pairs, &mut via_into);
+        assert_eq!(via_batch, via_into);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(m_batch.batches.load(Relaxed), m_into.batches.load(Relaxed));
+        assert_eq!(
+            m_batch.oracle_calls.load(Relaxed),
+            m_into.oracle_calls.load(Relaxed)
+        );
+        assert_eq!(
+            m_batch.padded_slots.load(Relaxed),
+            m_into.padded_slots.load(Relaxed)
+        );
+        assert_eq!(m_into.batches.load(Relaxed), 5); // ceil(33/8)
+        assert_eq!(m_into.oracle_calls.load(Relaxed), 33);
     }
 
     #[test]

@@ -116,7 +116,7 @@ pub fn generate(preset: CorpusPreset, scale: f64, table: &WordTable, rng: &mut R
             words.push(table.vectors[w].clone());
             weights.push(c / total);
         }
-        Doc { words, weights }
+        Doc::new(words, weights)
     };
 
     let mut docs = Vec::with_capacity(n_train + n_test);

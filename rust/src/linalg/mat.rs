@@ -362,6 +362,49 @@ fn matmul_block(a: &Mat, b: &Mat, row0: usize, chunk: &mut [f64]) {
     }
 }
 
+/// Cross-Gram into a row-major `a.len() x b.len()` buffer:
+/// `out[i*lb + j] = ⟨a[i], b[j]⟩`. 2x2 register tile over (row, col)
+/// pairs — each loaded vector element feeds two dot products, halving
+/// memory traffic versus `a.len()·b.len()` independent `dot` calls. This
+/// is the inner kernel of the norm-decomposed Sinkhorn ground cost
+/// (`sim::wmd`), the per-pair hot loop of every WMD evaluation.
+pub fn gram_nt_into(a: &[Vec<f64>], b: &[Vec<f64>], out: &mut [f64]) {
+    let (la, lb) = (a.len(), b.len());
+    debug_assert_eq!(out.len(), la * lb);
+    let mut i = 0;
+    while i + 1 < la {
+        let (r0, r1) = (a[i].as_slice(), a[i + 1].as_slice());
+        let mut j = 0;
+        while j + 1 < lb {
+            let (c0, c1) = (b[j].as_slice(), b[j + 1].as_slice());
+            let (mut s00, mut s01, mut s10, mut s11) = (0.0, 0.0, 0.0, 0.0);
+            for k in 0..r0.len() {
+                let (a0, a1) = (r0[k], r1[k]);
+                let (b0, b1) = (c0[k], c1[k]);
+                s00 += a0 * b0;
+                s01 += a0 * b1;
+                s10 += a1 * b0;
+                s11 += a1 * b1;
+            }
+            out[i * lb + j] = s00;
+            out[i * lb + j + 1] = s01;
+            out[(i + 1) * lb + j] = s10;
+            out[(i + 1) * lb + j + 1] = s11;
+            j += 2;
+        }
+        if j < lb {
+            out[i * lb + j] = dot(r0, &b[j]);
+            out[(i + 1) * lb + j] = dot(r1, &b[j]);
+        }
+        i += 2;
+    }
+    if i < la {
+        for (j, bj) in b.iter().enumerate() {
+            out[i * lb + j] = dot(&a[i], bj);
+        }
+    }
+}
+
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -471,6 +514,30 @@ mod tests {
         }
         let s = a.spectral_norm_est(50, &mut rng);
         assert!((s - 5.0).abs() < 1e-6, "s={s}");
+    }
+
+    #[test]
+    fn gram_nt_into_matches_per_entry_dots() {
+        let mut rng = Rng::new(5);
+        for (la, lb, dim) in [(0, 3, 4), (1, 1, 1), (3, 5, 8), (4, 4, 7), (7, 2, 16)] {
+            let a: Vec<Vec<f64>> = (0..la)
+                .map(|_| (0..dim).map(|_| rng.normal()).collect())
+                .collect();
+            let b: Vec<Vec<f64>> = (0..lb)
+                .map(|_| (0..dim).map(|_| rng.normal()).collect())
+                .collect();
+            let mut out = vec![f64::NAN; la * lb];
+            gram_nt_into(&a, &b, &mut out);
+            for i in 0..la {
+                for j in 0..lb {
+                    let naive: f64 = a[i].iter().zip(&b[j]).map(|(x, y)| x * y).sum();
+                    assert!(
+                        (out[i * lb + j] - naive).abs() < 1e-12,
+                        "({la},{lb},{dim}) entry ({i},{j})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

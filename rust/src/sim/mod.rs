@@ -7,4 +7,4 @@ pub mod synthetic;
 pub mod wmd;
 
 pub use oracle::{CountingOracle, DenseOracle, SimOracle, Symmetrized};
-pub use wmd::{Doc, SinkhornCfg, WmdOracle};
+pub use wmd::{Doc, SinkhornCfg, SinkhornScratch, WmdOracle};

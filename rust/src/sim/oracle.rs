@@ -18,9 +18,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::linalg::Mat;
 use crate::util::pool;
 
-/// Pair evaluations that amortize one worker spawn. Oracle costs range
-/// from a table lookup (dense) to a PJRT execution; this is tuned for the
-/// cheap end so expensive oracles only gain from the sharding.
+/// Default pair evaluations that amortize one worker spawn, tuned for
+/// table-lookup-cheap oracles. Expensive oracles override
+/// [`SimOracle::pairs_per_worker`] so even small gathers parallelize.
 const PAIRS_PER_WORKER: usize = 4096;
 
 pub trait SimOracle: Sync {
@@ -30,8 +30,30 @@ pub trait SimOracle: Sync {
     /// Evaluate Δ(x_i, x_j) for every pair in the batch.
     fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64>;
 
+    /// Zero-copy variant: write Δ(x_i, x_j) for every pair directly into
+    /// `out` (`out.len() == pairs.len()`). The block assemblers call this
+    /// with each pool worker's output chunk, so oracles with a native
+    /// implementation evaluate straight into the result matrix — no
+    /// per-shard `Vec` allocation. The default wraps [`Self::eval_batch`]
+    /// so existing oracles keep working unchanged.
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        out.copy_from_slice(&self.eval_batch(pairs));
+    }
+
     fn eval(&self, i: usize, j: usize) -> f64 {
         self.eval_batch(&[(i, j)])[0]
+    }
+
+    /// Pair evaluations that amortize one pool-worker spawn for *this*
+    /// oracle — the sharded gathers cap the worker count so each spawned
+    /// worker gets at least this much work. The default suits
+    /// table-lookup-cheap oracles; expensive oracles (Sinkhorn, PJRT)
+    /// return a small value so even modest gathers shard across the pool.
+    /// Wrappers forward their inner oracle's hint. Affects scheduling
+    /// only — results are bit-identical for every worker count.
+    fn pairs_per_worker(&self) -> usize {
+        PAIRS_PER_WORKER
     }
 
     /// Materialize the full n x n matrix — Ω(n²) evaluations; used only by
@@ -58,9 +80,17 @@ pub trait SimOracle: Sync {
 
     /// Principal submatrix K[idx, idx], sharded like [`Self::columns`].
     fn submatrix(&self, idx: &[usize]) -> Mat {
-        sharded_gather(self, idx.len(), idx.len(), |r, pairs| {
-            let i = idx[r];
-            for &j in idx {
+        self.block(idx, idx)
+    }
+
+    /// Rectangular block K[rows_idx, cols_idx], sharded like
+    /// [`Self::columns`]. The gather planner (`approx::gather`) uses this
+    /// to fetch exactly the entries a block request cannot reuse from an
+    /// earlier one.
+    fn block(&self, rows_idx: &[usize], cols_idx: &[usize]) -> Mat {
+        sharded_gather(self, rows_idx.len(), cols_idx.len(), |r, pairs| {
+            let i = rows_idx[r];
+            for &j in cols_idx {
                 pairs.push((i, j));
             }
         })
@@ -81,14 +111,16 @@ where
     if rows == 0 || width == 0 {
         return out;
     }
-    let workers = pool::auto_workers(rows * width, PAIRS_PER_WORKER);
+    let workers = pool::auto_workers(rows * width, oracle.pairs_per_worker());
     pool::for_row_chunks(workers, &mut out.data, width, 1, |row0, chunk| {
         let count = chunk.len() / width;
         let mut pairs = Vec::with_capacity(count * width);
         for r in row0..row0 + count {
             pairs_of(r, &mut pairs);
         }
-        chunk.copy_from_slice(&oracle.eval_batch(&pairs));
+        // Zero-copy fast path: each worker writes straight into its chunk
+        // of the output matrix (no intermediate Vec per shard).
+        oracle.eval_batch_into(&pairs, chunk);
     });
     out
 }
@@ -112,6 +144,13 @@ impl SimOracle for DenseOracle {
 
     fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
         pairs.iter().map(|&(i, j)| self.k.get(i, j)).collect()
+    }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+            *o = self.k.get(i, j);
+        }
     }
 }
 
@@ -148,6 +187,15 @@ impl SimOracle for CountingOracle<'_> {
         self.count.fetch_add(pairs.len() as u64, Ordering::Relaxed);
         self.inner.eval_batch(pairs)
     }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        self.count.fetch_add(pairs.len() as u64, Ordering::Relaxed);
+        self.inner.eval_batch_into(pairs, out);
+    }
+
+    fn pairs_per_worker(&self) -> usize {
+        self.inner.pairs_per_worker()
+    }
 }
 
 /// Symmetrizing wrapper: Δ̄(i,j) = (Δ(i,j) + Δ(j,i)) / 2 (Sec. 4.2 of the
@@ -168,13 +216,39 @@ impl SimOracle for Symmetrized<'_> {
     }
 
     fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let mut out = vec![0.0; pairs.len()];
+        self.eval_batch_into(pairs, &mut out);
+        out
+    }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        // Diagonal pairs are evaluated once: Δ̄(i,i) = (Δ(i,i)+Δ(i,i))/2 =
+        // Δ(i,i), so the mirror evaluation would be pure waste.
         let mut both = Vec::with_capacity(pairs.len() * 2);
         for &(i, j) in pairs {
             both.push((i, j));
-            both.push((j, i));
+            if i != j {
+                both.push((j, i));
+            }
         }
-        let vals = self.inner.eval_batch(&both);
-        vals.chunks(2).map(|c| 0.5 * (c[0] + c[1])).collect()
+        let mut vals = vec![0.0; both.len()];
+        self.inner.eval_batch_into(&both, &mut vals);
+        let mut k = 0;
+        for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+            if i == j {
+                *o = vals[k];
+                k += 1;
+            } else {
+                *o = 0.5 * (vals[k] + vals[k + 1]);
+                k += 2;
+            }
+        }
+    }
+
+    fn pairs_per_worker(&self) -> usize {
+        // Each requested pair costs up to two inner evaluations.
+        (self.inner.pairs_per_worker() / 2).max(1)
     }
 }
 
@@ -219,6 +293,64 @@ mod tests {
                 assert!((v - 0.5 * (k.get(i, j) + k.get(j, i))).abs() < 1e-15);
             }
         }
+    }
+
+    #[test]
+    fn symmetrized_diagonal_costs_one_call() {
+        // Regression: (i,i) used to be evaluated twice; the dedup halves
+        // the diagonal cost while leaving the values bit-identical.
+        let mut rng = Rng::new(4);
+        let k = Mat::gaussian(6, 6, &mut rng);
+        let o = DenseOracle::new(k.clone());
+        let c = CountingOracle::new(&o);
+        let s = Symmetrized::new(&c);
+        let pairs = [(0, 0), (1, 2), (3, 3), (4, 1)];
+        let vals = s.eval_batch(&pairs);
+        // 2 diagonal pairs cost 1 call each; 2 off-diagonal cost 2 each.
+        assert_eq!(c.calls(), 6);
+        for (v, &(i, j)) in vals.iter().zip(&pairs) {
+            assert_eq!(*v, 0.5 * (k.get(i, j) + k.get(j, i)));
+        }
+        // A pure-diagonal gather costs exactly n calls, not 2n.
+        c.reset();
+        let diag: Vec<(usize, usize)> = (0..6).map(|i| (i, i)).collect();
+        s.eval_batch(&diag);
+        assert_eq!(c.calls(), 6);
+    }
+
+    #[test]
+    fn eval_batch_into_matches_eval_batch() {
+        let mut rng = Rng::new(5);
+        let k = Mat::gaussian(8, 8, &mut rng);
+        let o = DenseOracle::new(k);
+        let c = CountingOracle::new(&o);
+        let s = Symmetrized::new(&o);
+        let pairs: Vec<(usize, usize)> = (0..24).map(|t| (t % 8, (t * 3) % 8)).collect();
+        for oracle in [&o as &dyn SimOracle, &c, &s] {
+            let via_batch = oracle.eval_batch(&pairs);
+            let mut via_into = vec![0.0; pairs.len()];
+            oracle.eval_batch_into(&pairs, &mut via_into);
+            assert_eq!(via_batch, via_into);
+        }
+    }
+
+    #[test]
+    fn pairs_per_worker_hints_forward_through_wrappers() {
+        let o = DenseOracle::new(Mat::eye(4));
+        let c = CountingOracle::new(&o);
+        let s = Symmetrized::new(&o);
+        assert_eq!(c.pairs_per_worker(), o.pairs_per_worker());
+        assert_eq!(s.pairs_per_worker(), o.pairs_per_worker() / 2);
+    }
+
+    #[test]
+    fn block_matches_entrywise() {
+        let k = Mat::from_fn(5, 5, |i, j| (10 * i + j) as f64);
+        let o = DenseOracle::new(k);
+        let b = o.block(&[4, 1], &[0, 3, 2]);
+        assert_eq!((b.rows, b.cols), (2, 3));
+        assert_eq!(b.row(0), &[40.0, 43.0, 42.0]);
+        assert_eq!(b.row(1), &[10.0, 13.0, 12.0]);
     }
 
     #[test]

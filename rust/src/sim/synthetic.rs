@@ -31,6 +31,13 @@ impl SimOracle for GaussianPsdOracle {
             .map(|&(i, j)| dot(self.z.row(i), self.z.row(j)))
             .collect()
     }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+            *o = dot(self.z.row(i), self.z.row(j));
+        }
+    }
 }
 
 /// RBF kernel exp(-||x_i - x_j||^2 / (2 sigma^2)) over random points — a
@@ -55,19 +62,23 @@ impl SimOracle for RbfOracle {
     }
 
     fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
-        pairs
-            .iter()
-            .map(|&(i, j)| {
-                let d2: f64 = self
-                    .x
-                    .row(i)
-                    .iter()
-                    .zip(self.x.row(j))
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum();
-                (-d2 * self.inv_two_sigma_sq).exp()
-            })
-            .collect()
+        let mut out = vec![0.0; pairs.len()];
+        self.eval_batch_into(pairs, &mut out);
+        out
+    }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+            let d2: f64 = self
+                .x
+                .row(i)
+                .iter()
+                .zip(self.x.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            *o = (-d2 * self.inv_two_sigma_sq).exp();
+        }
     }
 }
 
@@ -101,6 +112,13 @@ impl SimOracle for NearPsdOracle {
 
     fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
         pairs.iter().map(|&(i, j)| self.k.get(i, j)).collect()
+    }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+            *o = self.k.get(i, j);
+        }
     }
 }
 

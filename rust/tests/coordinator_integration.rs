@@ -196,3 +196,31 @@ fn sublinear_build_invariant_holds_for_every_pool_size() {
     assert_eq!(counts[0], counts[2]);
     assert!(counts[0] < 60 * 60, "must stay sublinear: {}", counts[0]);
 }
+
+#[test]
+fn batched_build_metrics_exact_after_gather_dedup() {
+    // The zero-copy gather path and the block-reuse planner must not
+    // change what the batching metrics see: the BatchingOracle's
+    // oracle-call counter equals the CountingOracle total exactly, and an
+    // SMS build through the batcher costs exactly n·s1 + s2·(s2 − s1)
+    // (the dedup planner's formula) for every worker count.
+    let n = 60;
+    let (s1, s2) = (10, 20);
+    let o = {
+        let mut rng = Rng::new(31);
+        NearPsdOracle::new(n, 6, 0.3, &mut rng)
+    };
+    let want = (n * s1 + s2 * (s2 - s1)) as u64;
+    for w in [1, 2, 8] {
+        let svc = simmat::util::pool::with_workers(w, || {
+            let mut rng = Rng::new(17);
+            SimilarityService::build(&o, Method::SmsNystrom, s1, 32, &mut rng).unwrap()
+        });
+        assert_eq!(svc.stats.oracle_calls, want, "workers={w}");
+        assert_eq!(
+            svc.metrics.oracle_calls.load(Ordering::Relaxed),
+            want,
+            "batcher metrics drifted from oracle count at workers={w}"
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! Similarity-evaluation economy: the fast paths must be (bit-)identical
+//! to their naive references.
+//!
+//! Three fast paths are pinned here against preserved reference
+//! implementations, across random docs, worker counts, and landmark
+//! plans:
+//! * the scratch-reuse Sinkhorn kernel vs `sinkhorn_cost_naive`
+//!   (≤ 1e-9 relative — the norm-decomposed ground cost rounds
+//!   differently),
+//! * the norm-decomposed ground cost vs `ground_cost_naive`
+//!   (≤ 1e-12 relative per entry, the documented tolerance),
+//! * `GatherPlan` / `column_blocks` assembled blocks vs the naive
+//!   `columns` + `submatrix` gathers (bit-identical — reused entries are
+//!   copied, never re-evaluated), with Δ-call counts that never exceed
+//!   the naive formula.
+
+use simmat::approx::gather::{column_blocks, GatherPlan};
+use simmat::approx::LandmarkPlan;
+use simmat::coordinator::{BatchingOracle, Metrics};
+use simmat::linalg::Mat;
+use simmat::sim::wmd::{
+    ground_cost, ground_cost_naive, sinkhorn_cost_naive, Doc, SinkhornCfg, SinkhornScratch,
+    WmdOracle,
+};
+use simmat::sim::{CountingOracle, DenseOracle, SimOracle, Symmetrized};
+use simmat::util::pool;
+use simmat::util::prop::check;
+use simmat::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_doc(len: usize, dim: usize, rng: &mut Rng) -> Doc {
+    let words = (0..len)
+        .map(|_| (0..dim).map(|_| rng.normal()).collect())
+        .collect();
+    let mut w: Vec<f64> = (0..len).map(|_| rng.f64() + 0.1).collect();
+    let s: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x /= s);
+    Doc::new(words, w)
+}
+
+#[test]
+fn ground_cost_decomposition_within_documented_tolerance() {
+    check("ground-cost-norm-decomposition", 20, |rng| {
+        let a = random_doc(1 + rng.below(12), 1 + rng.below(24), rng);
+        let b = random_doc(1 + rng.below(12), a.words[0].len(), rng);
+        let (fast, la, lb) = ground_cost(&a, &b);
+        let (naive, nla, nlb) = ground_cost_naive(&a, &b);
+        assert_eq!((la, lb), (nla, nlb));
+        for (f, n) in fast.iter().zip(&naive) {
+            assert!(
+                (f - n).abs() <= 1e-12 * n.abs().max(1.0),
+                "ground cost drifted: fast={f} naive={n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn ground_cost_exact_for_shared_vocabulary_vectors() {
+    // Docs routinely share exact word vectors (WME random docs and the
+    // corpus generator clone vocabulary entries). The decomposed form must
+    // not leave cancellation noise where the true distance is 0.
+    check("ground-cost-shared-vocab", 10, |rng| {
+        let dim = 2 + rng.below(24);
+        let a = random_doc(2 + rng.below(8), dim, rng);
+        // b reuses some of a's word vectors verbatim.
+        let mut words: Vec<Vec<f64>> = (0..3).map(|k| a.words[k % a.len()].clone()).collect();
+        words.push((0..dim).map(|_| rng.normal()).collect());
+        let lb = words.len();
+        let b = Doc::new(words, vec![1.0 / lb as f64; lb]);
+        let (fast, _, _) = ground_cost(&a, &b);
+        let (naive, _, _) = ground_cost_naive(&a, &b);
+        for (f, n) in fast.iter().zip(&naive) {
+            assert!(
+                (f - n).abs() <= 1e-12 * n.abs().max(1.0),
+                "shared-vocab entry drifted: fast={f} naive={n}"
+            );
+        }
+        let cfg = SinkhornCfg::default();
+        let cf = SinkhornScratch::new().sinkhorn(&a, &b, cfg);
+        let cn = sinkhorn_cost_naive(&a, &b, cfg);
+        assert!((cf - cn).abs() <= 1e-9 * cn.abs().max(1.0), "{cf} vs {cn}");
+    });
+}
+
+#[test]
+fn scratch_sinkhorn_matches_naive_across_random_docs() {
+    check("scratch-sinkhorn-vs-naive", 12, |rng| {
+        let dim = 2 + rng.below(16);
+        let cfg = SinkhornCfg {
+            iters: 10 + rng.below(40),
+            eps: 0.02 + rng.f64() * 0.1,
+        };
+        // One scratch reused across every pair — reuse must not leak.
+        let mut scratch = SinkhornScratch::new();
+        for _ in 0..6 {
+            let a = random_doc(1 + rng.below(10), dim, rng);
+            let b = random_doc(1 + rng.below(10), dim, rng);
+            let fast = scratch.sinkhorn(&a, &b, cfg);
+            let naive = sinkhorn_cost_naive(&a, &b, cfg);
+            assert!(
+                (fast - naive).abs() <= 1e-9 * naive.abs().max(1.0),
+                "sinkhorn drifted: fast={fast} naive={naive}"
+            );
+        }
+    });
+}
+
+#[test]
+fn wmd_oracle_batches_match_naive_reference_for_every_worker_count() {
+    let mut rng = Rng::new(3);
+    let docs: Vec<Doc> = (0..10)
+        .map(|t| random_doc(2 + t % 5, 8, &mut rng))
+        .collect();
+    let o = WmdOracle::new(docs, 0.5, SinkhornCfg::default());
+    let pairs: Vec<(usize, usize)> = (0..30).map(|t| (t % 10, (t * 3) % 10)).collect();
+    let naive: Vec<f64> = pairs
+        .iter()
+        .map(|&(i, j)| {
+            (-o.gamma * sinkhorn_cost_naive(&o.docs[i], &o.docs[j], o.cfg)).exp()
+        })
+        .collect();
+    let serial = pool::with_workers(1, || o.eval_batch(&pairs));
+    for (f, n) in serial.iter().zip(&naive) {
+        assert!((f - n).abs() <= 1e-9 * n.abs().max(1.0), "{f} vs {n}");
+    }
+    for w in [2, 4, 8] {
+        // The sharded gathers route through eval_batch_into with one
+        // scratch per worker; results must be bit-identical to serial.
+        let par = pool::with_workers(w, || o.columns(&[0, 4, 7]));
+        let ser = pool::with_workers(1, || o.columns(&[0, 4, 7]));
+        assert_eq!(ser.data, par.data, "workers={w}");
+    }
+}
+
+#[test]
+fn gather_plan_blocks_bit_identical_across_plans_and_workers() {
+    check("gather-plan-blocks", 10, |rng| {
+        let n = 20 + rng.below(40);
+        let o = DenseOracle::new(Mat::gaussian(n, n, rng));
+        let s2_size = 2 + rng.below(10);
+        let s1_size = 1 + rng.below(s2_size);
+        let plan = if rng.f64() < 0.5 {
+            LandmarkPlan::nested(n, s1_size, s2_size, rng)
+        } else {
+            LandmarkPlan::independent(n, s1_size, s2_size, rng)
+        };
+        let g = GatherPlan::new(&plan.s1, &plan.s2);
+        let naive_cols = o.columns(&plan.s1);
+        let naive_sub = o.submatrix(&plan.s2);
+        for w in [1, 2, 8] {
+            let blocks = pool::with_workers(w, || g.execute(&o));
+            assert_eq!(blocks.columns.data, naive_cols.data, "columns w={w}");
+            assert_eq!(blocks.submatrix.data, naive_sub.data, "submatrix w={w}");
+        }
+    });
+}
+
+#[test]
+fn gather_plan_call_counts_never_exceed_naive_formula() {
+    check("gather-plan-call-counts", 10, |rng| {
+        let n = 20 + rng.below(40);
+        let o = DenseOracle::new(Mat::gaussian(n, n, rng));
+        let s2_size = 2 + rng.below(10);
+        let s1_size = 1 + rng.below(s2_size);
+        let plan = if rng.f64() < 0.5 {
+            LandmarkPlan::nested(n, s1_size, s2_size, rng)
+        } else {
+            LandmarkPlan::independent(n, s1_size, s2_size, rng)
+        };
+        let g = GatherPlan::new(&plan.s1, &plan.s2);
+        let counter = CountingOracle::new(&o);
+        g.execute(&counter);
+        let measured = counter.calls() as usize;
+        assert_eq!(measured, g.predicted_calls(n), "planner count formula");
+        assert!(measured <= g.naive_calls(n), "dedup increased Δ calls");
+        // Exact overlap accounting: s2·|S1 ∩ S2| calls saved.
+        assert_eq!(
+            g.naive_calls(n) - measured,
+            plan.s2.len() * plan.overlap(),
+        );
+        // And the invariant to worker count.
+        for w in [2, 8] {
+            counter.reset();
+            pool::with_workers(w, || g.execute(&counter));
+            assert_eq!(counter.calls() as usize, measured, "w={w}");
+        }
+    });
+}
+
+#[test]
+fn column_blocks_bit_identical_and_union_priced() {
+    check("column-blocks-dedup", 10, |rng| {
+        let n = 15 + rng.below(30);
+        let o = DenseOracle::new(Mat::gaussian(n, n, rng));
+        let a = rng.sample_indices(n, 1 + rng.below(6));
+        let b = rng.sample_indices(n, 1 + rng.below(6));
+        let plan = LandmarkPlan {
+            s1: a.clone(),
+            s2: b.clone(),
+        };
+        let counter = CountingOracle::new(&o);
+        let (ka, kb) = column_blocks(&counter, &a, &b);
+        assert_eq!(ka.data, o.columns(&a).data);
+        assert_eq!(kb.data, o.columns(&b).data);
+        assert_eq!(counter.calls() as usize, n * plan.union_size());
+    });
+}
+
+#[test]
+fn symmetrized_gathers_match_with_fewer_diagonal_calls() {
+    let mut rng = Rng::new(9);
+    let k = Mat::gaussian(12, 12, &mut rng);
+    let o = DenseOracle::new(k.clone());
+    let counter = CountingOracle::new(&o);
+    let s = Symmetrized::new(&counter);
+    let idx: Vec<usize> = vec![0, 3, 5, 8];
+    let sub = s.submatrix(&idx);
+    for (r, &i) in idx.iter().enumerate() {
+        for (c, &j) in idx.iter().enumerate() {
+            assert_eq!(sub.get(r, c), 0.5 * (k.get(i, j) + k.get(j, i)));
+        }
+    }
+    // 16 requested entries: 4 diagonal (1 call each) + 12 off (2 each).
+    assert_eq!(counter.calls(), 4 + 24);
+}
+
+#[test]
+fn metrics_wrapped_gather_counts_invariant_to_eval_path() {
+    // A BatchingOracle-wrapped gather must report identical oracle-call
+    // metrics whether the caller used eval_batch or eval_batch_into.
+    let mut rng = Rng::new(10);
+    let o = DenseOracle::new(Mat::gaussian(25, 25, &mut rng));
+    let pairs: Vec<(usize, usize)> = (0..70).map(|t| (t % 25, (t * 3) % 25)).collect();
+    let m1 = Arc::new(Metrics::new());
+    let v1 = BatchingOracle::new(&o, 16, m1.clone()).eval_batch(&pairs);
+    let m2 = Arc::new(Metrics::new());
+    let mut v2 = vec![0.0; pairs.len()];
+    BatchingOracle::new(&o, 16, m2.clone()).eval_batch_into(&pairs, &mut v2);
+    assert_eq!(v1, v2);
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(m1.oracle_calls.load(Relaxed), 70);
+    assert_eq!(m1.oracle_calls.load(Relaxed), m2.oracle_calls.load(Relaxed));
+    assert_eq!(m1.batches.load(Relaxed), m2.batches.load(Relaxed));
+    assert_eq!(m1.padded_slots.load(Relaxed), m2.padded_slots.load(Relaxed));
+}

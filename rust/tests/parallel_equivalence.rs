@@ -122,6 +122,35 @@ fn sms_and_cur_builds_deterministic_under_sharding() {
 }
 
 #[test]
+fn wmd_scratch_gathers_bit_identical_across_pool_sizes() {
+    // The scratch-reuse Sinkhorn path: each pool worker reuses one
+    // SinkhornScratch across its shard, so the chunking must not leak into
+    // the numbers — columns/submatrix stay bit-identical for every worker
+    // count.
+    use simmat::sim::wmd::{Doc, SinkhornCfg, WmdOracle};
+    let docs: Vec<Doc> = {
+        let mut rng = Rng::new(13);
+        (0..14)
+            .map(|t| {
+                let len = 3 + t % 4;
+                let words: Vec<Vec<f64>> = (0..len)
+                    .map(|_| (0..6).map(|_| rng.normal()).collect())
+                    .collect();
+                Doc::new(words, vec![1.0 / len as f64; len])
+            })
+            .collect()
+    };
+    let o = WmdOracle::new(docs, 0.75, SinkhornCfg::default());
+    let cols = [0, 3, 7, 11];
+    let serial = pool::with_workers(1, || (o.columns(&cols), o.submatrix(&cols)));
+    for w in [2, 8] {
+        let par = pool::with_workers(w, || (o.columns(&cols), o.submatrix(&cols)));
+        assert_eq!(serial.0.data, par.0.data, "wmd columns w={w}");
+        assert_eq!(serial.1.data, par.1.data, "wmd submatrix w={w}");
+    }
+}
+
+#[test]
 fn wme_features_deterministic_under_sharding() {
     use simmat::approx::wme::{wme_features, WmeConfig};
     use simmat::sim::wmd::{Doc, SinkhornCfg};
@@ -131,10 +160,7 @@ fn wme_features_deterministic_under_sharding() {
             .map(|_| {
                 let words: Vec<Vec<f64>> =
                     (0..4).map(|_| (0..6).map(|_| rng.normal()).collect()).collect();
-                Doc {
-                    weights: vec![0.25; 4],
-                    words,
-                }
+                Doc::new(words, vec![0.25; 4])
             })
             .collect()
     };

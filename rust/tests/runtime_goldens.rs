@@ -90,7 +90,7 @@ fn pjrt_wmd_matches_rust_twin() {
         let mut w: Vec<f64> = (0..len).map(|_| rng.f64() + 0.1).collect();
         let s: f64 = w.iter().sum();
         w.iter_mut().for_each(|x| *x /= s);
-        docs.push(Doc { words, weights: w });
+        docs.push(Doc::new(words, w));
     }
 
     // PJRT path: one batch of (doc_i, doc_{i+1 mod n}) pairs.
