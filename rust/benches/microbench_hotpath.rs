@@ -9,16 +9,19 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use simmat::approx::{self, Factored, GatherPlan, SmsConfig};
-use simmat::coordinator::{BatchService, BatchingOracle, Metrics};
+use simmat::coordinator::{
+    BatchService, BatchingOracle, Method, Metrics, RebuildPolicy, SimilarityService, StreamConfig,
+};
 use simmat::linalg::{eigh, Mat};
 use simmat::runtime::{default_artifacts_dir, Runtime};
 use simmat::sim::synthetic::NearPsdOracle;
 use simmat::sim::wmd::{sinkhorn_cost_naive, Doc, SinkhornCfg, WmdOracle};
-use simmat::sim::{CountingOracle, DenseOracle, SimOracle};
+use simmat::sim::{CountingOracle, DenseOracle, PrefixOracle, SimOracle};
 use simmat::util::pool;
 use simmat::util::report::Report;
 use simmat::util::rng::Rng;
 use simmat::util::timer::bench;
+use simmat::workloads::streaming_workload;
 
 fn main() {
     let mut rep = Report::new("microbench_hotpath");
@@ -274,6 +277,93 @@ fn main() {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_simeval.json"));
     std::fs::write(&bench_path, json).unwrap();
     rep.line(format!("- wrote {}", bench_path.display()));
+
+    // ---- streaming growth (machine-readable trajectory) ----
+    // Insert cost in oracle calls (asserted against the per-method
+    // extension budget), end-to-end inserts/sec through the service, and
+    // the drift monitor's Δ-call overhead — persisted as
+    // BENCH_streaming.json next to BENCH_simeval.json.
+    rep.line("");
+    rep.line("## Streaming growth");
+    use std::sync::atomic::Ordering::Relaxed;
+    let sw = streaming_workload(0.5, 7);
+    let (sn, sn0) = (sw.n_total(), sw.n0);
+    let ss1 = (sn0 / 5).max(8);
+    let sprefix = PrefixOracle::new(&sw.oracle, sn0);
+    let scfg = StreamConfig {
+        probe_pairs: 4 * ss1,
+        epoch: 10,
+        policy: RebuildPolicy {
+            drift_threshold: 0.25,
+            min_inserts: 8,
+        },
+    };
+    let mut srng = Rng::new(7);
+    let svc =
+        SimilarityService::build_streaming(&sprefix, Method::SmsNystrom, ss1, 64, scfg, &mut srng)
+            .unwrap();
+    let t0 = std::time::Instant::now();
+    let mut sid = sn0;
+    while sid < sn {
+        let hi = (sid + 8).min(sn);
+        let ids: Vec<usize> = (sid..hi).collect();
+        svc.insert_batch(&sw.oracle, &ids).unwrap();
+        sid = hi;
+    }
+    let insert_secs = t0.elapsed().as_secs_f64();
+    let inserts_per_sec = (sn - sn0) as f64 / insert_secs.max(1e-9);
+    let stream_insert_calls = svc.metrics.insert_calls.load(Relaxed);
+    let stream_probe_calls = svc.metrics.probe_calls.load(Relaxed);
+    let stream_probes = svc.metrics.drift_probes.load(Relaxed);
+    let stream_rebuilds = svc.metrics.rebuilds.load(Relaxed);
+    let drift_overhead = stream_probe_calls as f64 / stream_insert_calls.max(1) as f64;
+    rep.line(format!(
+        "- replay n0={sn0} -> n={sn} (s1={ss1}): {inserts_per_sec:.0} inserts/s, \
+         {stream_insert_calls} insert Δ calls, {stream_probe_calls} probe Δ calls \
+         ({drift_overhead:.3}x overhead), {stream_rebuilds} rebuilds"
+    ));
+
+    // Per-method insert cost: 8-document insert, asserted = 8·s exactly.
+    let mut stream_rows: Vec<(String, usize)> = Vec::new();
+    for method in Method::ALL {
+        let mut r2 = Rng::new(40);
+        let plan = method.sample_plan(sn0, ss1, &mut r2);
+        let (mut f, ext) = method.build_with_plan(&sprefix, &plan, &mut r2).unwrap();
+        let scounter = CountingOracle::new(&sw.oracle);
+        let ids: Vec<usize> = (sn0..sn0 + 8).collect();
+        ext.extend(&mut f, &scounter, &ids);
+        assert_eq!(
+            scounter.calls(),
+            (8 * ext.per_insert_calls()) as u64,
+            "{} insert cost drifted from m·s",
+            method.name()
+        );
+        rep.line(format!(
+            "- Δ calls per insert {}: {}",
+            method.name(),
+            ext.per_insert_calls()
+        ));
+        stream_rows.push((method.name().to_string(), ext.per_insert_calls()));
+    }
+    let stream_json_rows: Vec<String> = stream_rows
+        .iter()
+        .map(|(name, per)| format!("    {{\"method\": \"{name}\", \"per_insert_calls\": {per}}}"))
+        .collect();
+    let stream_json = format!(
+        "{{\n  \"bench\": \"streaming\",\n  \"corpus\": {{\"n\": {sn}, \"n0\": {sn0}, \
+         \"s1\": {ss1}}},\n  \"inserts_per_sec\": {inserts_per_sec:.1},\n  \
+         \"insert_calls\": {stream_insert_calls},\n  \"drift_probes\": {stream_probes},\n  \
+         \"probe_calls\": {stream_probe_calls},\n  \
+         \"drift_overhead_ratio\": {drift_overhead:.4},\n  \"rebuilds\": {stream_rebuilds},\n  \
+         \"per_method\": [\n{rows}\n  ]\n}}\n",
+        rows = stream_json_rows.join(",\n"),
+    );
+    let stream_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_streaming.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_streaming.json"));
+    std::fs::write(&stream_path, stream_json).unwrap();
+    rep.line(format!("- wrote {}", stream_path.display()));
 
     // ---- PJRT per-artifact execution latency ----
     if let Some(dir) = default_artifacts_dir() {

@@ -94,7 +94,8 @@ fn main() {
                         per_metric[mi].push(v);
                     }
                 }
-                let metric_names: Vec<String> = score(&w, &predictions(|i, j| w.k_sym.get(i, j), &w))
+                let exact_pred = predictions(|i, j| w.k_sym.get(i, j), &w);
+                let metric_names: Vec<String> = score(&w, &exact_pred)
                     .into_iter()
                     .map(|(name, _)| name)
                     .collect();

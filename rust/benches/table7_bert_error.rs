@@ -77,7 +77,12 @@ fn main() {
             String::new(),
             String::new(),
         ]);
-        csv.push(vec![preset.name().into(), "SYM-BERT".into(), "exact".into(), format!("{sym_err:.6}")]);
+        csv.push(vec![
+            preset.name().into(),
+            "SYM-BERT".into(),
+            "exact".into(),
+            format!("{sym_err:.6}"),
+        ]);
         rep.table(&["Method", "Rank1", "Rank2", "Rank3"], &rows);
     }
     rep.csv("table7_series", &["dataset", "method", "rank", "rel_fro_err"], &csv);

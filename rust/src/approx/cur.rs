@@ -44,6 +44,16 @@ pub fn sicur(
 /// Shared core: K̃ = C U R with C = K S1 (n x s1), R = S2ᵀ K (s2 x n) and
 /// U = (S2ᵀ K S1)⁺ (s1 x s2).
 pub fn cur_with_plan(oracle: &dyn SimOracle, plan: &LandmarkPlan) -> Result<Factored, String> {
+    cur_parts(oracle, plan).map(|(f, _)| f)
+}
+
+/// Build plus the joining matrix U = (S2ᵀ K S1)⁺ — the per-row map the
+/// out-of-sample extension (`approx::extend`) applies to a new document's
+/// S1 similarities (its right-factor row is the gathered S2 similarities).
+pub(crate) fn cur_parts(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+) -> Result<(Factored, Mat), String> {
     // R as its transpose K S2 (n x s2) — row-contiguous for serving. When
     // S1 ⊆ S2 we slice C out of it instead of re-querying the oracle;
     // otherwise the union gather still dedups any colliding columns.
@@ -62,7 +72,7 @@ pub fn cur_with_plan(oracle: &dyn SimOracle, plan: &LandmarkPlan) -> Result<Fact
     let inner = c.select_rows(&plan.s2);
     let u = pinv(&inner, RCOND); // s1 x s2
     let left = c.matmul(&u); // n x s2
-    Ok(Factored::new(left, r_t))
+    Ok((Factored::new(left, r_t), u))
 }
 
 /// StaCUR: U = (n/s) · (CᵀC)⁻¹ · (S1ᵀ K S2), with the pseudo-inverse for
@@ -80,6 +90,31 @@ pub fn stacur(
     } else {
         LandmarkPlan::independent(n, s, s, rng)
     };
+    stacur_with_plan(oracle, &plan, shared)
+}
+
+/// StaCUR from a fixed landmark plan (`shared` selects the (s) variant
+/// where S1 = S2 is gathered once).
+pub fn stacur_with_plan(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+    shared: bool,
+) -> Result<Factored, String> {
+    stacur_parts(oracle, plan, shared).map(|(f, _)| f)
+}
+
+/// Build plus the effective joining map U·c* (scale calibration folded
+/// in) — the per-row map the out-of-sample extension (`approx::extend`)
+/// applies to a new document's S1 similarities. The n/s factor and the
+/// calibration scalar are frozen at build time, so extended stores drift
+/// from a from-scratch rebuild as the corpus grows (see `approx::extend`).
+pub(crate) fn stacur_parts(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+    shared: bool,
+) -> Result<(Factored, Mat), String> {
+    let n = oracle.n();
+    let s = plan.s1.len();
     let (c, r_t) = if shared {
         let c = oracle.columns(&plan.s1); // n x s
         let r_t = c.clone();
@@ -109,10 +144,12 @@ pub fn stacur(
         num += a * b;
         den += b * b;
     }
+    let mut u_eff = u;
     if den > 0.0 && num / den > 0.0 {
         left = left.scale(num / den);
+        u_eff = u_eff.scale(num / den);
     }
-    Ok(Factored::new(left, r_t))
+    Ok((Factored::new(left, r_t), u_eff))
 }
 
 /// CUR embeddings (Sec. 4.1): factor U = W Σ Vᵀ and embed documents as

@@ -1,0 +1,255 @@
+//! Out-of-sample extension: fold new documents into an already-built
+//! [`Factored`] store from only their landmark similarities — the classic
+//! Nyström extension (cf. Musco & Woodruff 2017; Schleif et al. 2016 for
+//! the indefinite eigenvalue-shifted case).
+//!
+//! Every method in this crate factors K̃ = L·Rᵀ where row i of each
+//! factor is a *fixed linear map* of K(i, S) for a build-time landmark
+//! set S. The maps are frozen when the factorization is built, so
+//! appending a document costs exactly |S| Δ evaluations — O(s) instead of
+//! the O(n·s) full rebuild:
+//!
+//! | method | per-insert Δ calls | left row | right row |
+//! |---|---|---|---|
+//! | Nyström | s | k·W⁺ | k |
+//! | SMS-Nyström (+rescaled) | s1 | k·W̄1^{-1/2} | mirror of left |
+//! | Skeleton | \|S1 ∪ S2\| | k[S1]·U | k[S2] |
+//! | SiCUR (nested) | s2 | k[S1]·U | k[S2] |
+//! | StaCUR(s) | s | k·(c*·U) | k |
+//! | StaCUR(d) | \|S1 ∪ S2\| | k[S1]·(c*·U) | k[S2] |
+//!
+//! where k = K(new, landmarks). For every method except StaCUR the
+//! extended store is *identical* (up to float accumulation order, ≤ ~1e-9
+//! relative) to a from-scratch rebuild on the grown corpus with the same
+//! landmark plan: the joining maps depend only on landmark-landmark
+//! similarities, which inserts never change. StaCUR's U carries the n/s
+//! scale and the build-time calibration scalar c*, both frozen at build,
+//! so its extended store drifts from a from-scratch rebuild as the corpus
+//! grows — the drift monitor (`coordinator::scheduler`) exists to catch
+//! exactly this kind of degradation and trigger a rebuild.
+
+use super::cur::{cur_parts, stacur_parts};
+use super::factored::Factored;
+use super::gather::union_with_positions;
+use super::nystrom::nystrom_parts;
+use super::sampling::LandmarkPlan;
+use super::sms::{sms_parts, SmsConfig, SmsResult};
+use crate::linalg::Mat;
+use crate::sim::SimOracle;
+use crate::util::rng::Rng;
+
+/// How the right-factor row of an inserted document is produced.
+enum RightRule {
+    /// Symmetric factorization (K̃ = Z Zᵀ): right row mirrors the left.
+    Mirror,
+    /// Right row is the gathered k[positions] itself (identity map).
+    Gather(Vec<usize>),
+}
+
+/// The frozen per-row maps that extend a [`Factored`] store: everything
+/// an insert needs beyond the new document's landmark similarities.
+pub struct Extension {
+    /// Documents every insert must be compared against — the insert's
+    /// whole oracle bill is `ids.len() * landmarks.len()` Δ calls.
+    pub landmarks: Vec<usize>,
+    /// Positions into `landmarks` forming the left-map input k[S_L].
+    left_pos: Vec<usize>,
+    /// |S_L| x r map: appended left row = k[left_pos] · m_left.
+    m_left: Mat,
+    right: RightRule,
+}
+
+impl Extension {
+    /// Exact Δ evaluations per inserted document.
+    pub fn per_insert_calls(&self) -> usize {
+        self.landmarks.len()
+    }
+
+    /// Rank of the factorization this extension appends to.
+    pub fn rank(&self) -> usize {
+        self.m_left.cols
+    }
+
+    /// Compute the factor rows for documents `ids` (their indices in the
+    /// grown corpus): exactly `ids.len() * per_insert_calls()` Δ calls,
+    /// no access to the existing store — callers can hold no lock here.
+    pub fn extension_rows(&self, oracle: &dyn SimOracle, ids: &[usize]) -> (Mat, Mat) {
+        let block = oracle.block(ids, &self.landmarks); // m x |landmarks|
+        let mut left = Mat::zeros(ids.len(), self.m_left.cols);
+        for r in 0..ids.len() {
+            let krow = block.row(r);
+            let out = left.row_mut(r);
+            for (p, &pos) in self.left_pos.iter().enumerate() {
+                let kv = krow[pos];
+                for (o, m) in out.iter_mut().zip(self.m_left.row(p)) {
+                    *o += kv * m;
+                }
+            }
+        }
+        let right = match &self.right {
+            RightRule::Mirror => left.clone(),
+            RightRule::Gather(pos) => {
+                let mut right = Mat::zeros(ids.len(), pos.len());
+                for r in 0..ids.len() {
+                    let krow = block.row(r);
+                    let out = right.row_mut(r);
+                    for (c, &p) in pos.iter().enumerate() {
+                        out[c] = krow[p];
+                    }
+                }
+                right
+            }
+        };
+        (left, right)
+    }
+
+    /// Append precomputed extension rows to the store (the coordinator
+    /// computes rows outside the store lock, then appends under it).
+    pub fn append_rows(&self, f: &mut Factored, left: &Mat, right: &Mat) {
+        assert_eq!(left.rows, right.rows, "extension row-count mismatch");
+        assert_eq!(left.cols, f.left.cols, "extension left-rank mismatch");
+        assert_eq!(right.cols, f.right_t.cols, "extension right-rank mismatch");
+        for r in 0..left.rows {
+            f.left.push_row(left.row(r));
+            f.right_t.push_row(right.row(r));
+        }
+    }
+
+    /// Fold documents `ids` into the store: gather their landmark
+    /// similarities and append the mapped factor rows.
+    pub fn extend(&self, f: &mut Factored, oracle: &dyn SimOracle, ids: &[usize]) {
+        let (left, right) = self.extension_rows(oracle, ids);
+        self.append_rows(f, &left, &right);
+    }
+}
+
+/// Classic Nyström build plus its extension (s Δ calls per insert).
+pub fn nystrom_extended(
+    oracle: &dyn SimOracle,
+    landmarks: &[usize],
+) -> Result<(Factored, Extension), String> {
+    let (f, w_pinv) = nystrom_parts(oracle, landmarks)?;
+    let s = landmarks.len();
+    let ext = Extension {
+        landmarks: landmarks.to_vec(),
+        left_pos: (0..s).collect(),
+        m_left: w_pinv,
+        right: RightRule::Gather((0..s).collect()),
+    };
+    Ok((f, ext))
+}
+
+/// SMS-Nyström build plus its extension (s1 Δ calls per insert). Inserted
+/// documents are never landmarks, so their K̄ rows carry no diagonal
+/// shift — the shift and the joining inverse square root are exactly the
+/// build-time ones, which is why extension matches a from-scratch rebuild
+/// on the grown corpus with the same plan.
+pub fn sms_extended(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+    cfg: SmsConfig,
+    rng: &mut Rng,
+) -> Result<(SmsResult, Extension), String> {
+    let (res, inv_sqrt) = sms_parts(oracle, plan, cfg, rng)?;
+    let s1 = plan.s1.len();
+    let ext = Extension {
+        landmarks: plan.s1.clone(),
+        left_pos: (0..s1).collect(),
+        m_left: inv_sqrt,
+        right: RightRule::Mirror,
+    };
+    Ok((res, ext))
+}
+
+/// Skeleton / SiCUR build plus its extension (|S1 ∪ S2| Δ calls per
+/// insert; s2 for nested plans).
+pub fn cur_extended(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+) -> Result<(Factored, Extension), String> {
+    let (f, u) = cur_parts(oracle, plan)?;
+    let (landmarks, s1_pos, s2_pos) = union_with_positions(&plan.s1, &plan.s2);
+    let ext = Extension {
+        landmarks,
+        left_pos: s1_pos,
+        m_left: u,
+        right: RightRule::Gather(s2_pos),
+    };
+    Ok((f, ext))
+}
+
+/// StaCUR build plus its extension (s for the shared variant, |S1 ∪ S2|
+/// for independent samples). The n/s factor and calibration scalar inside
+/// the joining map are frozen at build time — see the module docs.
+pub fn stacur_extended(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+    shared: bool,
+) -> Result<(Factored, Extension), String> {
+    let (f, u_eff) = stacur_parts(oracle, plan, shared)?;
+    let (landmarks, s1_pos, s2_pos) = union_with_positions(&plan.s1, &plan.s2);
+    let ext = Extension {
+        landmarks,
+        left_pos: s1_pos,
+        m_left: u_eff,
+        right: RightRule::Gather(s2_pos),
+    };
+    Ok((f, ext))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::error::rel_fro_error;
+    use crate::sim::{CountingOracle, DenseOracle, PrefixOracle};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nystrom_extension_matches_full_build_exactly() {
+        let mut rng = Rng::new(1);
+        let g = Mat::gaussian(40, 5, &mut rng);
+        let k = g.matmul_nt(&g);
+        let full = DenseOracle::new(k);
+        let prefix = PrefixOracle::new(&full, 32);
+        let lm = rng.sample_indices(32, 9);
+        let (mut f, ext) = nystrom_extended(&prefix, &lm).unwrap();
+        let ids: Vec<usize> = (32..40).collect();
+        ext.extend(&mut f, &full, &ids);
+        let (f_scratch, _) = nystrom_extended(&full, &lm).unwrap();
+        assert_eq!(f.n(), 40);
+        let diff = f.to_dense().max_abs_diff(&f_scratch.to_dense());
+        assert!(diff < 1e-8, "extended vs from-scratch diff {diff}");
+    }
+
+    #[test]
+    fn extension_cost_is_m_times_landmarks() {
+        let mut rng = Rng::new(2);
+        let g = Mat::gaussian(30, 4, &mut rng);
+        let full = DenseOracle::new(g.matmul_nt(&g));
+        let prefix = PrefixOracle::new(&full, 24);
+        let lm = rng.sample_indices(24, 6);
+        let (mut f, ext) = nystrom_extended(&prefix, &lm).unwrap();
+        let counter = CountingOracle::new(&full);
+        let ids: Vec<usize> = (24..30).collect();
+        ext.extend(&mut f, &counter, &ids);
+        assert_eq!(counter.calls(), (ids.len() * ext.per_insert_calls()) as u64);
+        assert_eq!(ext.per_insert_calls(), 6);
+    }
+
+    #[test]
+    fn extension_keeps_low_rank_psd_exact() {
+        // Rank-r PSD matrix, landmarks spanning the range: both the build
+        // and the extension reproduce K exactly.
+        let mut rng = Rng::new(3);
+        let g = Mat::gaussian(36, 3, &mut rng);
+        let k = g.matmul_nt(&g);
+        let full = DenseOracle::new(k.clone());
+        let prefix = PrefixOracle::new(&full, 28);
+        let lm = rng.sample_indices(28, 8);
+        let (mut f, ext) = nystrom_extended(&prefix, &lm).unwrap();
+        let ids: Vec<usize> = (28..36).collect();
+        ext.extend(&mut f, &full, &ids);
+        let err = rel_fro_error(&k, &f);
+        assert!(err < 1e-6, "rank-3 PSD extension should stay exact: {err}");
+    }
+}

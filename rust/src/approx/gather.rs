@@ -96,26 +96,36 @@ impl GatherPlan {
     }
 }
 
-/// Assemble the two column blocks K·A (n x |a|) and K·B (n x |b|) from a
-/// single sharded gather over the deduplicated union of requested columns:
-/// n·|A ∪ B| Δ calls instead of n·(|A| + |B|).
-pub fn column_blocks(oracle: &dyn SimOracle, a: &[usize], b: &[usize]) -> (Mat, Mat) {
+/// Deduplicated union of two index lists plus each list's positions
+/// inside it — the shared dedup core of [`column_blocks`] and the
+/// streaming extension's landmark set (`approx::extend`). For nested
+/// plans (A ⊆ B or B ⊆ A) the union is the larger list itself.
+pub(crate) fn union_with_positions(
+    a: &[usize],
+    b: &[usize],
+) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
     let mut union: Vec<usize> = a.to_vec();
     for &j in b {
         if !union.contains(&j) {
             union.push(j);
         }
     }
-    let block = oracle.columns(&union);
-    let positions = |idx: &[usize]| -> Vec<usize> {
+    let pos = |idx: &[usize]| -> Vec<usize> {
         idx.iter()
             .map(|i| union.iter().position(|u| u == i).unwrap())
             .collect()
     };
-    (
-        block.select_cols(&positions(a)),
-        block.select_cols(&positions(b)),
-    )
+    let (a_pos, b_pos) = (pos(a), pos(b));
+    (union, a_pos, b_pos)
+}
+
+/// Assemble the two column blocks K·A (n x |a|) and K·B (n x |b|) from a
+/// single sharded gather over the deduplicated union of requested columns:
+/// n·|A ∪ B| Δ calls instead of n·(|A| + |B|).
+pub fn column_blocks(oracle: &dyn SimOracle, a: &[usize], b: &[usize]) -> (Mat, Mat) {
+    let (union, a_pos, b_pos) = union_with_positions(a, b);
+    let block = oracle.columns(&union);
+    (block.select_cols(&a_pos), block.select_cols(&b_pos))
 }
 
 #[cfg(test)]

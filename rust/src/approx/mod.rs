@@ -2,22 +2,26 @@
 //! layer. Every method consumes a [`crate::sim::SimOracle`] and produces a
 //! [`Factored`] low-rank approximation with O(n·s) oracle calls:
 //!
-//! | method | paper | oracle calls |
-//! |---|---|---|
-//! | [`nystrom::nystrom`] | Williams & Seeger 2001, Eq. (1) | n·s |
-//! | [`sms::sms_nystrom`] | **Algorithm 1 (contribution)** | n·s1 + s2² − s2·s1 (nested; [`gather::GatherPlan`] reuse) |
-//! | [`cur::skeleton`] | Goreinov et al. 1997 | n·|S1 ∪ S2| ≤ 2·n·s |
-//! | [`cur::sicur`] | Sec. 3 (SiCUR) | n·s2 |
-//! | [`cur::stacur`] | Sec. 3 (StaCUR) | n·s (s) / n·|S1 ∪ S2| (d) |
-//! | [`optimal::optimal_rank_k`] | 'Optimal' baseline | n² (cap) |
-//! | [`wme`] | Wu et al. 2018 baseline | n·R |
+//! | method | paper | oracle calls (build) | per insert ([`extend`]) |
+//! |---|---|---|---|
+//! | [`nystrom::nystrom`] | Williams & Seeger 2001, Eq. (1) | n·s | s |
+//! | [`sms::sms_nystrom`] | **Algorithm 1 (contribution)** | n·s1 + s2² − s2·s1 (nested; [`gather::GatherPlan`] reuse) | s1 |
+//! | [`cur::skeleton`] | Goreinov et al. 1997 | n·|S1 ∪ S2| ≤ 2·n·s | \|S1 ∪ S2\| |
+//! | [`cur::sicur`] | Sec. 3 (SiCUR) | n·s2 | s2 |
+//! | [`cur::stacur`] | Sec. 3 (StaCUR) | n·s (s) / n·|S1 ∪ S2| (d) | s (s) / \|S1 ∪ S2\| (d) |
+//! | [`optimal::optimal_rank_k`] | 'Optimal' baseline | n² (cap) | — |
+//! | [`wme`] | Wu et al. 2018 baseline | n·R | — |
 //!
 //! Overlapping block requests are deduplicated by the [`gather`] planner
 //! (entries are copied, never re-evaluated), so the counts above are
-//! exact — see "Cost accounting" in rust/README.md.
+//! exact — see "Cost accounting" in rust/README.md. The per-insert column
+//! is the streaming out-of-sample extension ([`extend`]): appending a
+//! document re-uses the frozen joining maps and needs only its landmark
+//! similarities, O(s) instead of an O(n·s) rebuild.
 
 pub mod cur;
 pub mod error;
+pub mod extend;
 pub mod factored;
 pub mod gather;
 pub mod nystrom;
@@ -26,11 +30,12 @@ pub mod sampling;
 pub mod sms;
 pub mod wme;
 
-pub use cur::{cur_embeddings, sicur, skeleton, stacur};
+pub use cur::{cur_embeddings, sicur, skeleton, stacur, stacur_with_plan};
 pub use error::{rel_fro_error, rel_fro_error_dense};
+pub use extend::{cur_extended, nystrom_extended, sms_extended, stacur_extended, Extension};
 pub use factored::Factored;
 pub use gather::{column_blocks, GatherBlocks, GatherPlan};
 pub use nystrom::{nystrom, nystrom_psd_embedding};
 pub use optimal::{optimal_embeddings, optimal_rank_k};
-pub use sampling::LandmarkPlan;
+pub use sampling::{LandmarkPlan, LandmarkReservoir};
 pub use sms::{sms_nystrom, SmsConfig, SmsResult};

@@ -4,7 +4,7 @@
 
 use super::factored::Factored;
 use super::sampling::LandmarkPlan;
-use crate::linalg::eigh;
+use crate::linalg::{eigh, Mat};
 use crate::sim::SimOracle;
 use crate::util::rng::Rng;
 
@@ -22,11 +22,21 @@ pub fn nystrom(oracle: &dyn SimOracle, s: usize, rng: &mut Rng) -> Result<Factor
 }
 
 pub fn nystrom_with_plan(oracle: &dyn SimOracle, landmarks: &[usize]) -> Result<Factored, String> {
+    nystrom_parts(oracle, landmarks).map(|(f, _)| f)
+}
+
+/// Build plus the joining pseudo-inverse W⁺ — the per-row map the
+/// out-of-sample extension (`approx::extend`) applies to a new document's
+/// landmark similarities.
+pub(crate) fn nystrom_parts(
+    oracle: &dyn SimOracle,
+    landmarks: &[usize],
+) -> Result<(Factored, Mat), String> {
     let c = oracle.columns(landmarks); // n x s: C_{ik} = K(i, S[k])
     let w = c.select_rows(landmarks); // s x s: W_{kl} = K(S[k], S[l])
     let w_pinv = eigh(&w.symmetrized())?.pinv(RCOND);
     let left = c.matmul(&w_pinv);
-    Ok(Factored::new(left, c))
+    Ok((Factored::new(left, c), w_pinv))
 }
 
 /// PSD-path Nyström embedding Z = C·W^{-1/2} with K̃ = Z Zᵀ (Sec. 2.1).

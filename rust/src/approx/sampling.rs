@@ -55,6 +55,81 @@ impl LandmarkPlan {
     }
 }
 
+/// Online landmark maintenance for streaming corpus growth: a classic
+/// Algorithm-R reservoir over the whole document stream (build corpus +
+/// inserts), so late-arriving documents can become landmarks at the next
+/// rebuild. The initial reservoir is the build-time [`LandmarkPlan`] —
+/// itself a uniform sample of [0, n) — and each observed insert enters S2
+/// with probability |S2|/seen, keeping S2 uniform over the grown corpus.
+/// The refreshed plan reproduces the build plan's shape: shared plans
+/// stay S1 = S2, nested plans redraw S1 ⊆ S2, independent plans maintain
+/// a second reservoir for S1.
+pub struct LandmarkReservoir {
+    s2: Vec<usize>,
+    /// Independent-plan S1 reservoir (empty for shared/nested plans).
+    s1: Vec<usize>,
+    s1_len: usize,
+    shared: bool,
+    nested: bool,
+    /// Documents observed so far (build-corpus size + inserts).
+    pub seen: usize,
+    /// Reservoir slots taken by late-arriving documents.
+    pub replaced: usize,
+}
+
+impl LandmarkReservoir {
+    pub fn new(plan: &LandmarkPlan, n: usize) -> LandmarkReservoir {
+        let shared = plan.s1 == plan.s2;
+        let nested = !shared && plan.is_nested();
+        LandmarkReservoir {
+            s2: plan.s2.clone(),
+            s1: if shared || nested { Vec::new() } else { plan.s1.clone() },
+            s1_len: plan.s1.len(),
+            shared,
+            nested,
+            seen: n,
+            replaced: 0,
+        }
+    }
+
+    /// Observe one appended document (`id` is its index in the grown
+    /// corpus). Algorithm R: replace a uniform slot with probability
+    /// reservoir-size / documents-seen.
+    pub fn observe(&mut self, id: usize, rng: &mut Rng) {
+        self.seen += 1;
+        if rng.below(self.seen) < self.s2.len() {
+            let slot = rng.below(self.s2.len());
+            self.s2[slot] = id;
+            self.replaced += 1;
+        }
+        if !self.s1.is_empty() && rng.below(self.seen) < self.s1.len() {
+            let slot = rng.below(self.s1.len());
+            self.s1[slot] = id;
+        }
+    }
+
+    /// Landmark plan for the next rebuild over the grown corpus,
+    /// preserving the build plan's shape.
+    pub fn refreshed_plan(&self, rng: &mut Rng) -> LandmarkPlan {
+        if self.shared {
+            LandmarkPlan {
+                s1: self.s2.clone(),
+                s2: self.s2.clone(),
+            }
+        } else if self.nested {
+            LandmarkPlan {
+                s1: rng.sample_from(&self.s2, self.s1_len),
+                s2: self.s2.clone(),
+            }
+        } else {
+            LandmarkPlan {
+                s1: self.s1.clone(),
+                s2: self.s2.clone(),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +169,47 @@ mod tests {
             assert_eq!(p.overlap(), s1, "nested overlap is all of S1");
             assert_eq!(p.union_size(), s2);
         });
+    }
+
+    #[test]
+    fn reservoir_admits_late_documents_and_keeps_shape() {
+        check("landmark-reservoir", 10, |rng| {
+            let n = 30 + rng.below(40);
+            let s2 = 4 + rng.below(6);
+            let s1 = 1 + rng.below(s2);
+            let plan = LandmarkPlan::nested(n, s1, s2, rng);
+            let mut res = LandmarkReservoir::new(&plan, n);
+            // Observe a long tail (≈ 20x the build corpus) so late docs
+            // enter the reservoir with overwhelming probability.
+            let total = n + 20 * s2 * (n / s2 + 1);
+            for id in n..total {
+                res.observe(id, rng);
+            }
+            assert_eq!(res.seen, total);
+            assert!(res.replaced > 0, "no late doc ever became a landmark");
+            let refreshed = res.refreshed_plan(rng);
+            assert_eq!(refreshed.s1.len(), s1);
+            assert_eq!(refreshed.s2.len(), s2);
+            assert!(refreshed.is_nested(), "nested shape must be preserved");
+            assert!(refreshed.s2.iter().all(|&i| i < total));
+            assert!(
+                refreshed.s2.iter().any(|&i| i >= n),
+                "a uniform reservoir over {total} docs should hold a late one"
+            );
+        });
+    }
+
+    #[test]
+    fn reservoir_preserves_shared_shape() {
+        let mut rng = Rng::new(9);
+        let plan = LandmarkPlan::shared(50, 8, &mut rng);
+        let mut res = LandmarkReservoir::new(&plan, 50);
+        for id in 50..400 {
+            res.observe(id, &mut rng);
+        }
+        let refreshed = res.refreshed_plan(&mut rng);
+        assert_eq!(refreshed.s1, refreshed.s2);
+        assert_eq!(refreshed.s1.len(), 8);
     }
 
     #[test]

@@ -80,6 +80,19 @@ pub fn sms_nystrom_with_plan(
     cfg: SmsConfig,
     rng: &mut Rng,
 ) -> Result<SmsResult, String> {
+    sms_parts(oracle, plan, cfg, rng).map(|(r, _)| r)
+}
+
+/// Build plus the joining inverse square root (S1ᵀK̄S1)^{-1/2} — the map
+/// the out-of-sample extension (`approx::extend`) applies to a new
+/// document's landmark similarities. New documents are never landmarks,
+/// so their K̄ rows carry no diagonal shift: z_new = K(new, S1)·W1^{-1/2}.
+pub(crate) fn sms_parts(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+    cfg: SmsConfig,
+    rng: &mut Rng,
+) -> Result<(SmsResult, Mat), String> {
     // Lines 4-5: K S1 (n x s1, also contains S1ᵀ K S1 as rows S1) and
     // S2ᵀ K S2 from one deduplicated gather — the planner copies the
     // overlap (every W2 column indexed by S1 is already inside C), so
@@ -127,12 +140,13 @@ pub fn sms_nystrom_with_plan(
     // Line 9: Z = K̄S1 (S1ᵀK̄S1)^{-1/2}.
     let inv_sqrt = eigh(&w1)?.inv_sqrt(RCOND);
     let z = c.matmul(&inv_sqrt);
-    Ok(SmsResult {
+    let result = SmsResult {
         factored: Factored::from_z(z),
         shift: e,
         lambda_min_s2: lmin,
         beta,
-    })
+    };
+    Ok((result, inv_sqrt))
 }
 
 /// The exact-shift baseline: K̄ = K - λ_min(K)·I with the *true* minimum

@@ -16,6 +16,16 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     pub total_slots: AtomicU64,
     pub queries: AtomicU64,
+    /// Documents folded into the store after build (streaming growth).
+    pub inserts: AtomicU64,
+    /// Exact Δ evaluations spent by inserts (m · per-insert landmarks).
+    pub insert_calls: AtomicU64,
+    /// Drift probes run by the streaming monitor.
+    pub drift_probes: AtomicU64,
+    /// Exact Δ evaluations spent probing drift (the monitor's overhead).
+    pub probe_calls: AtomicU64,
+    /// Full rebuilds triggered by the drift policy.
+    pub rebuilds: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     latency_count: AtomicU64,
@@ -44,6 +54,20 @@ impl Metrics {
 
     pub fn record_query(&self) {
         self.queries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_inserts(&self, docs: u64, delta_calls: u64) {
+        self.inserts.fetch_add(docs, Ordering::Relaxed);
+        self.insert_calls.fetch_add(delta_calls, Ordering::Relaxed);
+    }
+
+    pub fn record_drift_probe(&self, delta_calls: u64) {
+        self.drift_probes.fetch_add(1, Ordering::Relaxed);
+        self.probe_calls.fetch_add(delta_calls, Ordering::Relaxed);
+    }
+
+    pub fn record_rebuild(&self) {
+        self.rebuilds.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -92,6 +116,18 @@ impl Metrics {
             self.queries.load(Ordering::Relaxed),
             self.mean_latency_us(),
             self.latency_quantile_us(0.95),
+        )
+    }
+
+    /// One-line view of the streaming-growth counters.
+    pub fn streaming_summary(&self) -> String {
+        format!(
+            "inserts={} insert_calls={} drift_probes={} probe_calls={} rebuilds={}",
+            self.inserts.load(Ordering::Relaxed),
+            self.insert_calls.load(Ordering::Relaxed),
+            self.drift_probes.load(Ordering::Relaxed),
+            self.probe_calls.load(Ordering::Relaxed),
+            self.rebuilds.load(Ordering::Relaxed),
         )
     }
 }

@@ -12,6 +12,6 @@ pub mod tiles;
 pub use batcher::{BatchClient, BatchService, BatchingOracle};
 pub use metrics::Metrics;
 pub use router::{route, Query, Response};
-pub use scheduler::{schedule, SampleMode, Schedule};
-pub use server::{BuildStats, Method, SimilarityService};
+pub use scheduler::{schedule, DriftMonitor, RebuildPolicy, SampleMode, Schedule};
+pub use server::{BuildStats, InsertReport, Method, SimilarityService, StreamConfig};
 pub use tiles::TileServer;

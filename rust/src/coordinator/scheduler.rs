@@ -2,8 +2,14 @@
 //! and in what order. Plans the two-stage sample (S1 ⊆ S2), dedupes the
 //! overlap between the column block K·S1 and the shift submatrix S2ᵀK S2,
 //! and chunks the work into artifact-batch-aligned jobs.
+//!
+//! Also the streaming control plane: the sampled error-drift monitor
+//! ([`DriftMonitor`]) and the rebuild policy ([`RebuildPolicy`]) that
+//! decides when an extended store has degraded enough to warrant a full
+//! O(n·s) rebuild on the pool.
 
-use crate::approx::LandmarkPlan;
+use crate::approx::{Factored, LandmarkPlan};
+use crate::sim::SimOracle;
 use crate::util::rng::Rng;
 
 /// A chunk of pair evaluations, aligned to the artifact batch size.
@@ -87,6 +93,93 @@ pub fn schedule(
     }
 }
 
+/// Sampled error-drift monitor for the streaming path: every `epoch`
+/// inserted documents it estimates the relative Frobenius error of the
+/// factored store from `probe_pairs` uniformly random *exactly evaluated*
+/// entries — O(s) Δ calls per probe, never a dense materialization:
+///
+///   drift ≈ sqrt( Σ (K_ij − K̃_ij)² / Σ K_ij² )  over the sampled (i, j).
+///
+/// The estimator is unbiased in both sums, so with O(s) samples it tracks
+/// the true rel-Fro error closely enough to gate rebuilds (the streaming
+/// tests pin this against the exact error on synthetic drift).
+pub struct DriftMonitor {
+    /// Exactly-evaluated probe entries per epoch.
+    pub probe_pairs: usize,
+    /// Probe cadence in inserted documents.
+    pub epoch: usize,
+    inserted_since_probe: usize,
+    /// Most recent drift estimate (0 before the first probe).
+    pub last_drift: f64,
+}
+
+impl DriftMonitor {
+    pub fn new(probe_pairs: usize, epoch: usize) -> DriftMonitor {
+        assert!(probe_pairs > 0 && epoch > 0);
+        DriftMonitor {
+            probe_pairs,
+            epoch,
+            inserted_since_probe: 0,
+            last_drift: 0.0,
+        }
+    }
+
+    /// Record `m` freshly inserted documents; true when a probe is due.
+    pub fn tick(&mut self, m: usize) -> bool {
+        self.inserted_since_probe += m;
+        if self.inserted_since_probe >= self.epoch {
+            self.inserted_since_probe = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Run one probe over the grown corpus [0, n): `probe_pairs` exact Δ
+    /// evaluations against the factored store's approximate entries.
+    pub fn probe(&mut self, oracle: &dyn SimOracle, f: &Factored, n: usize, rng: &mut Rng) -> f64 {
+        debug_assert!(n <= oracle.n() && n <= f.n());
+        let pairs: Vec<(usize, usize)> = (0..self.probe_pairs)
+            .map(|_| (rng.below(n), rng.below(n)))
+            .collect();
+        let exact = oracle.eval_batch(&pairs);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (v, &(i, j)) in exact.iter().zip(&pairs) {
+            let d = v - f.entry(i, j);
+            num += d * d;
+            den += v * v;
+        }
+        self.last_drift = (num / den.max(1e-300)).sqrt();
+        self.last_drift
+    }
+}
+
+/// When to trade O(m·s) incremental growth for an O(n·s) full rebuild.
+#[derive(Clone, Copy, Debug)]
+pub struct RebuildPolicy {
+    /// Rebuild when the sampled drift estimate exceeds this.
+    pub drift_threshold: f64,
+    /// Never rebuild before this many inserts since the last (re)build —
+    /// guards against thrashing on a noisy early estimate.
+    pub min_inserts: usize,
+}
+
+impl Default for RebuildPolicy {
+    fn default() -> Self {
+        RebuildPolicy {
+            drift_threshold: 0.25,
+            min_inserts: 8,
+        }
+    }
+}
+
+impl RebuildPolicy {
+    pub fn should_rebuild(&self, drift: f64, inserts_since_build: usize) -> bool {
+        inserts_since_build >= self.min_inserts && drift > self.drift_threshold
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +233,48 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn drift_monitor_tracks_exact_error() {
+        // On a fixed store and matrix, the sampled estimate must land
+        // near the exact rel-Fro error (same quantity, subsampled sums).
+        let mut rng = Rng::new(31);
+        let g = crate::linalg::Mat::gaussian(60, 6, &mut rng);
+        let k = g.matmul_nt(&g);
+        let oracle = crate::sim::DenseOracle::new(k.clone());
+        let lm = rng.sample_indices(60, 4); // rank 6 > 4 landmarks: real error
+        let f = crate::approx::nystrom::nystrom_with_plan(&oracle, &lm).unwrap();
+        let exact = crate::approx::rel_fro_error(&k, &f);
+        let mut mon = DriftMonitor::new(600, 4);
+        let est = mon.probe(&oracle, &f, 60, &mut rng);
+        assert!(est.is_finite() && est >= 0.0);
+        assert!(
+            (est - exact).abs() < 0.5 * exact.max(0.05),
+            "probe {est} too far from exact {exact}"
+        );
+        assert_eq!(mon.last_drift, est);
+    }
+
+    #[test]
+    fn drift_monitor_epoch_cadence() {
+        let mut mon = DriftMonitor::new(8, 10);
+        assert!(!mon.tick(4));
+        assert!(!mon.tick(5));
+        assert!(mon.tick(1)); // 10th insert
+        assert!(!mon.tick(9));
+        assert!(mon.tick(30)); // overshoot still fires once
+    }
+
+    #[test]
+    fn rebuild_policy_gates_on_threshold_and_min_inserts() {
+        let p = RebuildPolicy {
+            drift_threshold: 0.2,
+            min_inserts: 5,
+        };
+        assert!(!p.should_rebuild(0.5, 4), "min_inserts must gate");
+        assert!(!p.should_rebuild(0.1, 50), "below threshold must not fire");
+        assert!(p.should_rebuild(0.21, 5));
     }
 
     #[test]

@@ -2,17 +2,27 @@
 //! router together. `SimilarityService::build` runs the sublinear build
 //! (O(n·s) oracle calls through the dynamic batcher), after which queries
 //! are served from the factored store with zero oracle traffic.
+//!
+//! The store is *streaming*: documents appended to the corpus after
+//! `build` are folded in through [`SimilarityService::insert_batch`] at
+//! O(m·s) oracle cost (the out-of-sample extension, `approx::extend`),
+//! a sampled drift monitor estimates the store's error from O(s) exact
+//! probes per epoch, and a [`RebuildPolicy`] triggers a full rebuild —
+//! with reservoir-refreshed landmarks — when drift crosses its threshold.
+//! Queries keep flowing the whole time: they read an `Arc` snapshot under
+//! a briefly-held lock, and a rebuild swaps the store atomically.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use crate::approx::{self, Factored, SmsConfig};
-use crate::sim::{CountingOracle, SimOracle};
+use crate::approx::{self, Extension, Factored, LandmarkPlan, LandmarkReservoir, SmsConfig};
+use crate::sim::{CountingOracle, PrefixOracle, SimOracle};
 use crate::util::rng::Rng;
 
 use super::batcher::BatchingOracle;
 use super::metrics::Metrics;
 use super::router::{route, Query, Response, RouteError};
+use super::scheduler::{DriftMonitor, RebuildPolicy};
 
 /// Which approximation the service builds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,6 +59,47 @@ impl Method {
         }
     }
 
+    /// Draw the landmark plan this method's `build` uses (the nested
+    /// two-stage methods oversample by `SmsConfig::default().z`).
+    pub fn sample_plan(&self, n: usize, s1: usize, rng: &mut Rng) -> LandmarkPlan {
+        match self {
+            Method::Nystrom | Method::StaCurShared => LandmarkPlan::shared(n, s1, rng),
+            Method::SmsNystrom | Method::SmsNystromRescaled | Method::SiCur => {
+                let z = SmsConfig::default().z;
+                let s2 = ((s1 as f64 * z).ceil() as usize).clamp(s1, n);
+                LandmarkPlan::nested(n, s1, s2, rng)
+            }
+            Method::Skeleton | Method::StaCurIndependent => {
+                LandmarkPlan::independent(n, s1, s1, rng)
+            }
+        }
+    }
+
+    /// Build from a fixed landmark plan, returning the factored store
+    /// plus its out-of-sample [`Extension`] (the streaming insert path).
+    pub fn build_with_plan(
+        &self,
+        oracle: &dyn SimOracle,
+        plan: &LandmarkPlan,
+        rng: &mut Rng,
+    ) -> Result<(Factored, Extension), String> {
+        match self {
+            Method::Nystrom => approx::nystrom_extended(oracle, &plan.s1),
+            Method::SmsNystrom => approx::sms_extended(oracle, plan, SmsConfig::default(), rng)
+                .map(|(r, e)| (r.factored, e)),
+            Method::SmsNystromRescaled => {
+                let cfg = SmsConfig {
+                    rescale: true,
+                    ..SmsConfig::default()
+                };
+                approx::sms_extended(oracle, plan, cfg, rng).map(|(r, e)| (r.factored, e))
+            }
+            Method::Skeleton | Method::SiCur => approx::cur_extended(oracle, plan),
+            Method::StaCurShared => approx::stacur_extended(oracle, plan, true),
+            Method::StaCurIndependent => approx::stacur_extended(oracle, plan, false),
+        }
+    }
+
     /// Build the factored approximation with `s1` landmarks.
     pub fn build(
         &self,
@@ -56,23 +107,8 @@ impl Method {
         s1: usize,
         rng: &mut Rng,
     ) -> Result<Factored, String> {
-        match self {
-            Method::Nystrom => approx::nystrom(oracle, s1, rng),
-            Method::SmsNystrom => {
-                approx::sms_nystrom(oracle, s1, SmsConfig::default(), rng).map(|r| r.factored)
-            }
-            Method::SmsNystromRescaled => {
-                let cfg = SmsConfig {
-                    rescale: true,
-                    ..SmsConfig::default()
-                };
-                approx::sms_nystrom(oracle, s1, cfg, rng).map(|r| r.factored)
-            }
-            Method::Skeleton => approx::skeleton(oracle, s1, rng),
-            Method::SiCur => approx::sicur(oracle, s1, 2.0, rng),
-            Method::StaCurShared => approx::stacur(oracle, s1, true, rng),
-            Method::StaCurIndependent => approx::stacur(oracle, s1, false, rng),
-        }
+        let plan = self.sample_plan(oracle.n(), s1, rng);
+        self.build_with_plan(oracle, &plan, rng).map(|(f, _)| f)
     }
 }
 
@@ -94,14 +130,68 @@ impl BuildStats {
     }
 }
 
+/// Streaming-growth knobs: drift-probe budget and cadence plus the
+/// rebuild policy. `default_for(s1)` scales everything to the landmark
+/// budget so the monitor stays O(s) per epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Exactly evaluated probe entries per drift epoch.
+    pub probe_pairs: usize,
+    /// Drift-probe cadence in inserted documents.
+    pub epoch: usize,
+    pub policy: RebuildPolicy,
+}
+
+impl StreamConfig {
+    pub fn default_for(s1: usize) -> StreamConfig {
+        StreamConfig {
+            probe_pairs: (2 * s1).max(16),
+            epoch: s1.max(8),
+            policy: RebuildPolicy::default(),
+        }
+    }
+}
+
+/// Outcome of one `insert` / `insert_batch` call.
+#[derive(Clone, Debug)]
+pub struct InsertReport {
+    pub inserted: usize,
+    /// Exact Δ evaluations the insert itself spent (m · landmark count).
+    pub oracle_calls: u64,
+    /// Drift estimate, when this insert crossed an epoch boundary.
+    pub drift: Option<f64>,
+    /// Whether the drift policy triggered a full rebuild.
+    pub rebuilt: bool,
+}
+
+/// Mutable streaming state, serialized behind one lock so concurrent
+/// inserters cannot interleave contiguity checks and appends.
+struct StreamState {
+    extension: Extension,
+    reservoir: LandmarkReservoir,
+    monitor: DriftMonitor,
+    policy: RebuildPolicy,
+    rng: Rng,
+    /// Documents currently in the store (build corpus + inserts).
+    n: usize,
+    inserts_since_build: usize,
+}
+
 pub struct SimilarityService {
-    factored: Factored,
+    /// The factored store. Readers take the lock only long enough to
+    /// clone the `Arc` (or serve one routed query); a rebuild constructs
+    /// the new store outside the lock and swaps it atomically.
+    factored: RwLock<Arc<Factored>>,
+    stream: Mutex<StreamState>,
     pub stats: BuildStats,
     pub metrics: Arc<Metrics>,
+    method: Method,
+    batch: usize,
 }
 
 impl SimilarityService {
-    /// Run the sublinear build through the batching pipeline.
+    /// Run the sublinear build through the batching pipeline, with
+    /// streaming defaults scaled to `s1` (see [`StreamConfig`]).
     pub fn build(
         oracle: &dyn SimOracle,
         method: Method,
@@ -109,14 +199,27 @@ impl SimilarityService {
         batch: usize,
         rng: &mut Rng,
     ) -> Result<SimilarityService, String> {
+        Self::build_streaming(oracle, method, s1, batch, StreamConfig::default_for(s1), rng)
+    }
+
+    /// `build` with explicit streaming knobs.
+    pub fn build_streaming(
+        oracle: &dyn SimOracle,
+        method: Method,
+        s1: usize,
+        batch: usize,
+        cfg: StreamConfig,
+        rng: &mut Rng,
+    ) -> Result<SimilarityService, String> {
         let metrics = Arc::new(Metrics::new());
         let counter = CountingOracle::new(oracle);
         let t0 = Instant::now();
-        let factored = {
-            let batched = BatchingOracle::new(&counter, batch, metrics.clone());
-            method.build(&batched, s1, rng)?
-        };
         let n = oracle.n();
+        let plan = method.sample_plan(n, s1, rng);
+        let (factored, extension) = {
+            let batched = BatchingOracle::new(&counter, batch, metrics.clone());
+            method.build_with_plan(&batched, &plan, rng)?
+        };
         let stats = BuildStats {
             method,
             n,
@@ -126,19 +229,164 @@ impl SimilarityService {
             exact_calls: (n * n) as u64,
         };
         Ok(SimilarityService {
-            factored,
+            factored: RwLock::new(Arc::new(factored)),
+            stream: Mutex::new(StreamState {
+                extension,
+                reservoir: LandmarkReservoir::new(&plan, n),
+                monitor: DriftMonitor::new(cfg.probe_pairs, cfg.epoch),
+                policy: cfg.policy,
+                rng: rng.fork(),
+                n,
+                inserts_since_build: 0,
+            }),
             stats,
             metrics,
+            method,
+            batch,
+        })
+    }
+
+    /// Fold one appended document into the store (`id` must be the next
+    /// corpus index). O(s) oracle calls; see [`Self::insert_batch`].
+    pub fn insert(&self, oracle: &dyn SimOracle, id: usize) -> Result<InsertReport, String> {
+        self.insert_batch(oracle, &[id])
+    }
+
+    /// Fold `m` appended documents into the store for exactly
+    /// m · per-insert-landmarks Δ evaluations (through the batcher), then
+    /// run the drift monitor: every epoch it estimates rel-Fro drift from
+    /// O(s) random exactly-evaluated entries, and when the policy says
+    /// the store has degraded it rebuilds on the pool from
+    /// reservoir-refreshed landmarks and swaps the store atomically.
+    /// Queries on other threads keep being served throughout — from the
+    /// pre-insert store until the append, the grown store after it.
+    ///
+    /// `oracle` must cover the grown corpus: `ids` are evaluated against
+    /// the build-time landmarks, so it is the *full* oracle even when the
+    /// service was built over a [`PrefixOracle`] view.
+    pub fn insert_batch(
+        &self,
+        oracle: &dyn SimOracle,
+        ids: &[usize],
+    ) -> Result<InsertReport, String> {
+        if ids.is_empty() {
+            return Ok(InsertReport {
+                inserted: 0,
+                oracle_calls: 0,
+                drift: None,
+                rebuilt: false,
+            });
+        }
+        let mut st = self.stream.lock().unwrap();
+        let st = &mut *st;
+        for (k, &id) in ids.iter().enumerate() {
+            if id != st.n + k {
+                return Err(format!(
+                    "inserts must be contiguous: expected doc {}, got {id}",
+                    st.n + k
+                ));
+            }
+        }
+        if oracle.n() < st.n + ids.len() {
+            return Err(format!(
+                "oracle covers {} docs but the grown corpus needs {}",
+                oracle.n(),
+                st.n + ids.len()
+            ));
+        }
+        // The O(m·s) landmark gather runs through the batcher *before*
+        // the store lock is taken, so readers never wait on oracle
+        // traffic; the append itself is a short O(m·r) critical section.
+        let counter = CountingOracle::new(oracle);
+        let (left, right) = {
+            let batched = BatchingOracle::new(&counter, self.batch, self.metrics.clone());
+            st.extension.extension_rows(&batched, ids)
+        };
+        let calls = counter.calls();
+        {
+            let mut store = self.factored.write().unwrap();
+            if Arc::strong_count(&store) == 1 {
+                // Sole owner (no reader snapshot outstanding): append in
+                // place — an O(m·r) critical section. No weak refs are
+                // ever created, so get_mut cannot fail here.
+                let f = Arc::get_mut(&mut store).expect("sole owner");
+                st.extension.append_rows(f, &left, &right);
+            } else {
+                // A `factored()` snapshot is live: copy-on-write OUTSIDE
+                // the write lock (the O(n·r) clone runs under a read
+                // lock, so queries keep flowing), then swap in O(1).
+                // The stream mutex serializes mutators, so nothing can
+                // slip in between the drop and the swap.
+                drop(store);
+                let mut fresh = (**self.factored.read().unwrap()).clone();
+                st.extension.append_rows(&mut fresh, &left, &right);
+                *self.factored.write().unwrap() = Arc::new(fresh);
+            }
+        }
+        self.metrics.record_inserts(ids.len() as u64, calls);
+        st.n += ids.len();
+        st.inserts_since_build += ids.len();
+        for &id in ids {
+            st.reservoir.observe(id, &mut st.rng);
+        }
+        let mut drift = None;
+        let mut rebuilt = false;
+        if st.monitor.tick(ids.len()) {
+            let snapshot = self.factored.read().unwrap().clone();
+            let probe_counter = CountingOracle::new(oracle);
+            let d = st.monitor.probe(&probe_counter, &snapshot, st.n, &mut st.rng);
+            self.metrics.record_drift_probe(probe_counter.calls());
+            drift = Some(d);
+            if st.policy.should_rebuild(d, st.inserts_since_build) {
+                // Full rebuild over the *grown* corpus only — the oracle
+                // may already know about documents not yet inserted.
+                let grown = PrefixOracle::new(oracle, st.n);
+                let plan = st.reservoir.refreshed_plan(&mut st.rng);
+                let rebuild_counter = CountingOracle::new(&grown);
+                let (fresh, next_ext) = {
+                    let batched =
+                        BatchingOracle::new(&rebuild_counter, self.batch, self.metrics.clone());
+                    self.method.build_with_plan(&batched, &plan, &mut st.rng)?
+                };
+                st.extension = next_ext;
+                st.inserts_since_build = 0;
+                *self.factored.write().unwrap() = Arc::new(fresh);
+                self.metrics.record_rebuild();
+                rebuilt = true;
+            }
+        }
+        Ok(InsertReport {
+            inserted: ids.len(),
+            oracle_calls: calls,
+            drift,
+            rebuilt,
         })
     }
 
     pub fn query(&self, q: &Query) -> Result<Response, RouteError> {
         self.metrics.record_query();
-        route(&self.factored, q)
+        let f = self.factored.read().unwrap();
+        route(&f, q)
     }
 
-    pub fn factored(&self) -> &Factored {
-        &self.factored
+    /// Snapshot of the current factored store.
+    pub fn factored(&self) -> Arc<Factored> {
+        self.factored.read().unwrap().clone()
+    }
+
+    /// Documents currently served (build corpus + inserts).
+    pub fn n(&self) -> usize {
+        self.stream.lock().unwrap().n
+    }
+
+    /// Exact Δ evaluations one inserted document costs right now.
+    pub fn per_insert_calls(&self) -> usize {
+        self.stream.lock().unwrap().extension.per_insert_calls()
+    }
+
+    /// Most recent drift estimate (0 before the first probe).
+    pub fn last_drift(&self) -> f64 {
+        self.stream.lock().unwrap().monitor.last_drift
     }
 }
 
@@ -196,5 +444,53 @@ mod tests {
         let o = NearPsdOracle::new(100, 8, 0.3, &mut rng);
         let svc = SimilarityService::build(&o, Method::SiCur, 10, 64, &mut rng).unwrap();
         assert!(svc.stats.savings() > 0.5, "savings {}", svc.stats.savings());
+    }
+
+    #[test]
+    fn insert_rejects_non_contiguous_and_uncovered_ids() {
+        let mut rng = Rng::new(4);
+        let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
+        let prefix = crate::sim::PrefixOracle::new(&o, 40);
+        let svc = SimilarityService::build(&prefix, Method::Nystrom, 8, 32, &mut rng).unwrap();
+        assert!(svc.insert(&o, 45).is_err(), "gap must be rejected");
+        assert!(svc.insert(&o, 39).is_err(), "existing doc must be rejected");
+        let long: Vec<usize> = (40..60).collect();
+        assert!(
+            svc.insert_batch(&o, &long).is_err(),
+            "ids beyond the oracle must be rejected"
+        );
+        assert_eq!(svc.n(), 40, "failed inserts must not grow the store");
+        svc.insert(&o, 40).unwrap();
+        assert_eq!(svc.n(), 41);
+    }
+
+    #[test]
+    fn insert_grows_store_and_meters_exact_calls() {
+        let mut rng = Rng::new(5);
+        let o = NearPsdOracle::new(60, 6, 0.3, &mut rng);
+        let prefix = crate::sim::PrefixOracle::new(&o, 48);
+        let cfg = StreamConfig {
+            probe_pairs: 16,
+            epoch: usize::MAX, // no probes: pin the pure insert cost
+            policy: RebuildPolicy::default(),
+        };
+        let svc =
+            SimilarityService::build_streaming(&prefix, Method::Nystrom, 8, 32, cfg, &mut rng)
+                .unwrap();
+        let ids: Vec<usize> = (48..60).collect();
+        let report = svc.insert_batch(&o, &ids).unwrap();
+        assert_eq!(report.inserted, 12);
+        assert_eq!(report.oracle_calls, (12 * svc.per_insert_calls()) as u64);
+        assert_eq!(svc.per_insert_calls(), 8);
+        assert_eq!(svc.n(), 60);
+        assert_eq!(svc.factored().n(), 60);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(svc.metrics.inserts.load(Relaxed), 12);
+        assert_eq!(svc.metrics.insert_calls.load(Relaxed), report.oracle_calls);
+        // Queries over the grown corpus are served from the factors.
+        match svc.query(&Query::Entry(59, 2)).unwrap() {
+            Response::Scalar(v) => assert!(v.is_finite()),
+            _ => panic!(),
+        }
     }
 }

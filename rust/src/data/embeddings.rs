@@ -15,7 +15,13 @@ pub struct WordTable {
 }
 
 impl WordTable {
-    pub fn new(topics: usize, words_per_topic: usize, dim: usize, spread: f64, rng: &mut Rng) -> WordTable {
+    pub fn new(
+        topics: usize,
+        words_per_topic: usize,
+        dim: usize,
+        spread: f64,
+        rng: &mut Rng,
+    ) -> WordTable {
         let centroids: Vec<Vec<f64>> = (0..topics)
             .map(|_| (0..dim).map(|_| rng.normal()).collect())
             .collect();

@@ -109,6 +109,14 @@ impl Mat {
         Mat::from_fn(self.rows, idx.len(), |i, j| self.get(i, idx[j]))
     }
 
+    /// Append one row in place (the streaming out-of-sample extension
+    /// path: factor matrices grow by a row per inserted document).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     /// C = A * B, cache-blocked with a 2-row microkernel (two output rows
     /// accumulate against the same streamed B row, halving B traffic and
     /// doubling ILP — §Perf: ~1.4x over the plain ikj loop), sharded over

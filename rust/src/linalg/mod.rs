@@ -10,5 +10,5 @@ pub mod solve;
 pub mod svd;
 
 pub use eigh::{eigh, lambda_min, Eigh};
-pub use mat::{dot, gram_nt_into, Mat};
+pub use mat::{dot, gram_nt_into, normalize, Mat};
 pub use svd::{best_rank_k, pinv, split_factor, svd, Svd};

@@ -101,7 +101,7 @@ fn main() -> anyhow::Result<()> {
             );
             println!(
                 "rel Frobenius error: {:.4}",
-                approx::rel_fro_error(&k, svc.factored())
+                approx::rel_fro_error(&k, &svc.factored())
             );
             // SMS diagnostics when applicable.
             if matches!(method, Method::SmsNystrom) {

@@ -6,5 +6,5 @@ pub mod oracle;
 pub mod synthetic;
 pub mod wmd;
 
-pub use oracle::{CountingOracle, DenseOracle, SimOracle, Symmetrized};
+pub use oracle::{CountingOracle, DenseOracle, PrefixOracle, SimOracle, Symmetrized};
 pub use wmd::{Doc, SinkhornCfg, SinkhornScratch, WmdOracle};

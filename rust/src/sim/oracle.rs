@@ -252,6 +252,42 @@ impl SimOracle for Symmetrized<'_> {
     }
 }
 
+/// View of the first `n` documents of a larger oracle. Streaming flows
+/// build over a prefix of the eventual corpus and replay the remainder as
+/// an insert stream; the *build* sees this restricted view while inserts
+/// evaluate new-document pairs through the full inner oracle.
+pub struct PrefixOracle<'a> {
+    inner: &'a dyn SimOracle,
+    n: usize,
+}
+
+impl<'a> PrefixOracle<'a> {
+    pub fn new(inner: &'a dyn SimOracle, n: usize) -> Self {
+        assert!(n <= inner.n(), "prefix larger than the corpus");
+        PrefixOracle { inner, n }
+    }
+}
+
+impl SimOracle for PrefixOracle<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        debug_assert!(pairs.iter().all(|&(i, j)| i < self.n && j < self.n));
+        self.inner.eval_batch(pairs)
+    }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert!(pairs.iter().all(|&(i, j)| i < self.n && j < self.n));
+        self.inner.eval_batch_into(pairs, out);
+    }
+
+    fn pairs_per_worker(&self) -> usize {
+        self.inner.pairs_per_worker()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,6 +377,19 @@ mod tests {
         let s = Symmetrized::new(&o);
         assert_eq!(c.pairs_per_worker(), o.pairs_per_worker());
         assert_eq!(s.pairs_per_worker(), o.pairs_per_worker() / 2);
+    }
+
+    #[test]
+    fn prefix_oracle_restricts_n_but_serves_inner_values() {
+        let mut rng = Rng::new(6);
+        let k = Mat::gaussian(9, 9, &mut rng);
+        let o = DenseOracle::new(k.clone());
+        let p = PrefixOracle::new(&o, 6);
+        assert_eq!(p.n(), 6);
+        assert_eq!(p.eval(2, 5), k.get(2, 5));
+        let cols = p.columns(&[0, 4]);
+        assert_eq!(cols.rows, 6);
+        assert_eq!(cols.get(3, 1), k.get(3, 4));
     }
 
     #[test]

@@ -122,6 +122,65 @@ impl SimOracle for NearPsdOracle {
     }
 }
 
+/// Streaming-drift RBF matrix: documents are points whose cluster center
+/// shifts after position `n0`. The prefix [0, n0) sits at the origin, the
+/// tail [n0, n) at `shift` times a random unit direction, so a
+/// factorization whose landmarks all come from the prefix approximates
+/// tail-tail similarities by ≈ 0 while their true value is ≈ 1 — exactly
+/// the degradation the coordinator's drift monitor must detect.
+pub struct DriftingRbfOracle {
+    x: Mat,
+    inv_two_sigma_sq: f64,
+    /// First index of the shifted tail cluster.
+    pub n0: usize,
+}
+
+impl DriftingRbfOracle {
+    pub fn new(n: usize, n0: usize, d: usize, sigma: f64, shift: f64, rng: &mut Rng) -> Self {
+        assert!(n0 <= n);
+        let mut x = Mat::gaussian(n, d, rng);
+        let mut dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        crate::linalg::normalize(&mut dir);
+        for i in n0..n {
+            for (j, u) in dir.iter().enumerate() {
+                let v = x.get(i, j) + shift * u;
+                x.set(i, j, v);
+            }
+        }
+        DriftingRbfOracle {
+            x,
+            inv_two_sigma_sq: 1.0 / (2.0 * sigma * sigma),
+            n0,
+        }
+    }
+}
+
+impl SimOracle for DriftingRbfOracle {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let mut out = vec![0.0; pairs.len()];
+        self.eval_batch_into(pairs, &mut out);
+        out
+    }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+            let d2: f64 = self
+                .x
+                .row(i)
+                .iter()
+                .zip(self.x.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            *o = (-d2 * self.inv_two_sigma_sq).exp();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +205,35 @@ mod tests {
         }
         let e = eigh(&k).unwrap();
         assert!(e.vals[0] > -1e-9);
+    }
+
+    #[test]
+    fn drifting_rbf_separates_clusters() {
+        let mut rng = Rng::new(4);
+        let o = DriftingRbfOracle::new(30, 20, 6, 1.0, 10.0, &mut rng);
+        // Mean within-tail similarity dwarfs the mean cross-cluster one.
+        let mut within = 0.0;
+        let mut within_n = 0.0;
+        for i in 20..30 {
+            for j in (i + 1)..30 {
+                within += o.eval(i, j);
+                within_n += 1.0;
+            }
+        }
+        let mut cross = 0.0;
+        let mut cross_n = 0.0;
+        for i in 0..20 {
+            for j in 20..30 {
+                cross += o.eval(i, j);
+                cross_n += 1.0;
+            }
+        }
+        let (within, cross) = (within / within_n, cross / cross_n);
+        assert!(within > 1e-3, "tail docs should be similar: {within}");
+        assert!(cross < 1e-6, "cross-cluster similarity should vanish: {cross}");
+        for i in 0..30 {
+            assert!((o.eval(i, i) - 1.0).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use anyhow::Result;
 use crate::data::{self, CorefSpec, CorpusPreset, GluePreset};
 use crate::linalg::Mat;
 use crate::runtime::{self, CorefPjrtOracle, CrossEncoderPjrtOracle, SharedRuntime, WmdPjrtOracle};
+use crate::sim::synthetic::DriftingRbfOracle;
 use crate::sim::{SimOracle, Symmetrized};
 use crate::util::rng::Rng;
 
@@ -147,6 +148,37 @@ pub fn glue_workload(
     let scores: Vec<f64> = task.pairs.iter().map(|&(i, j)| k_sym.get(i, j)).collect();
     data::glue::attach_gold_scores(&mut task, &scores, 0.08, &mut rng);
     Ok(GlueWorkload { task, k_raw, k_sym })
+}
+
+/// Streaming-growth workload: a drifting RBF corpus replayed as a prefix
+/// build plus an insert stream (`examples/streaming.rs`, the
+/// `BENCH_streaming.json` microbench section, and `tests/streaming.rs`).
+/// The tail [n0, n) sits in a far-away cluster, so a store whose
+/// landmarks all come from the prefix degrades measurably as the stream
+/// is replayed — the scenario the drift monitor exists for.
+pub struct StreamingWorkload {
+    pub oracle: DriftingRbfOracle,
+    /// Documents present at build time (the stream replays the rest).
+    pub n0: usize,
+}
+
+impl StreamingWorkload {
+    pub fn n_total(&self) -> usize {
+        self.oracle.n()
+    }
+}
+
+pub fn streaming_workload(scale: f64, seed: u64) -> StreamingWorkload {
+    let mut rng = Rng::new(seed);
+    let n = ((400.0 * scale) as usize).max(80);
+    let n0 = n / 2;
+    // d = 4, sigma = 2: a smooth (low effective rank) kernel whose
+    // within-cluster similarities ≈ e^{-2d/2σ²} ≈ 0.37 stay two orders of
+    // magnitude above cross-cluster ones at shift 6 (≈ e^{-44/2σ²}), so a
+    // prefix-landmark store visibly degrades on the tail block while a
+    // refreshed rebuild recovers.
+    let oracle = DriftingRbfOracle::new(n, n0, 4, 2.0, 6.0, &mut rng);
+    StreamingWorkload { oracle, n0 }
 }
 
 /// Coreference workload: mention corpus + symmetrized exact matrix.

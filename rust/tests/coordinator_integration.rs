@@ -94,7 +94,7 @@ fn service_methods_rank_quality_on_indefinite_matrix() {
         let mut total = 0.0;
         for _ in 0..3 {
             let svc = SimilarityService::build(&o, method, 36, 64, rng).unwrap();
-            total += simmat::approx::rel_fro_error(&k, svc.factored()) / 3.0;
+            total += simmat::approx::rel_fro_error(&k, &svc.factored()) / 3.0;
         }
         total
     };

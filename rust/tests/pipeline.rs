@@ -138,7 +138,8 @@ fn glue_prediction_pipeline_dense() {
     let means: Vec<Vec<f64>> = task.sentences.iter().map(mean_vec).collect();
     let k = simmat::linalg::Mat::from_fn(n, n, |i, j| {
         let (a, b) = (&means[i], &means[j]);
-        simmat::linalg::dot(a, b) / (simmat::linalg::dot(a, a).sqrt() * simmat::linalg::dot(b, b).sqrt())
+        let norms = simmat::linalg::dot(a, a).sqrt() * simmat::linalg::dot(b, b).sqrt();
+        simmat::linalg::dot(a, b) / norms
     });
     let scores: Vec<f64> = task.pairs.iter().map(|&(i, j)| k.get(i, j)).collect();
     data::glue::attach_gold_scores(&mut task, &scores, 0.05, &mut rng);

@@ -1,0 +1,254 @@
+//! Streaming-growth invariants: exact per-insert oracle budgets (the
+//! documented O(m·s) cost, pinned by `CountingOracle`), agreement between
+//! the extended store and a from-scratch rebuild on the grown corpus,
+//! drift-triggered rebuilds actually firing, and zero-downtime serving
+//! while the corpus grows.
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+
+use simmat::approx::{rel_fro_error, LandmarkPlan};
+use simmat::coordinator::{
+    Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig,
+};
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{CountingOracle, PrefixOracle, SimOracle};
+use simmat::util::rng::Rng;
+use simmat::workloads::streaming_workload;
+
+/// The documented per-insert Δ-call budget of each method (see the cost
+/// table in `approx/mod.rs` and "Streaming growth" in rust/README.md).
+fn documented_insert_calls(method: Method, plan: &LandmarkPlan) -> usize {
+    match method {
+        // Nyström and SMS fold a new document in from its S1 similarities.
+        Method::Nystrom | Method::SmsNystrom | Method::SmsNystromRescaled => plan.s1.len(),
+        // CUR variants need the right-factor row too: K(new, S1 ∪ S2).
+        // Nested plans (SiCUR) make that s2; shared plans (StaCUR(s)) s.
+        Method::Skeleton
+        | Method::SiCur
+        | Method::StaCurShared
+        | Method::StaCurIndependent => plan.union_size(),
+    }
+}
+
+#[test]
+fn insert_cost_and_agreement_per_method() {
+    let mut rng = Rng::new(100);
+    let (n_total, n0, s1) = (72, 60, 10);
+    let full = NearPsdOracle::new(n_total, 8, 0.4, &mut rng);
+    let k = full.dense().clone();
+    for method in Method::ALL {
+        let mut build_rng = Rng::new(200);
+        let plan = method.sample_plan(n0, s1, &mut build_rng);
+        let prefix = PrefixOracle::new(&full, n0);
+        let (mut f, ext) = method.build_with_plan(&prefix, &plan, &mut build_rng).unwrap();
+        assert_eq!(
+            ext.per_insert_calls(),
+            documented_insert_calls(method, &plan),
+            "{}: per-insert budget must match the documented formula",
+            method.name()
+        );
+        // An m-document insert costs exactly m·s Δ calls.
+        let counter = CountingOracle::new(&full);
+        let ids: Vec<usize> = (n0..n_total).collect();
+        ext.extend(&mut f, &counter, &ids);
+        assert_eq!(
+            counter.calls(),
+            (ids.len() * ext.per_insert_calls()) as u64,
+            "{}: insert cost must be exactly m·s",
+            method.name()
+        );
+        assert_eq!(f.n(), n_total);
+        // Extended-then-queried must agree with a from-scratch build on
+        // the grown corpus using the same landmark plan.
+        let mut scratch_rng = Rng::new(300);
+        let (f2, _) = method.build_with_plan(&full, &plan, &mut scratch_rng).unwrap();
+        match method {
+            Method::StaCurShared | Method::StaCurIndependent => {
+                // StaCUR freezes the n/s factor and the calibration
+                // scalar at build time, so agreement is in approximation
+                // quality (documented tolerance), not in bits.
+                let e_ext = rel_fro_error(&k, &f);
+                let e_scr = rel_fro_error(&k, &f2);
+                assert!(
+                    e_ext.is_finite() && e_ext <= e_scr + 0.25,
+                    "{}: extended error {e_ext} vs from-scratch {e_scr}",
+                    method.name()
+                );
+            }
+            _ => {
+                let diff = f.to_dense().max_abs_diff(&f2.to_dense());
+                assert!(
+                    diff < 1e-8,
+                    "{}: extended vs from-scratch diff {diff}",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn service_insert_budget_is_exact_for_every_method() {
+    let mut rng = Rng::new(101);
+    let full = NearPsdOracle::new(60, 8, 0.4, &mut rng);
+    for method in Method::ALL {
+        let prefix = PrefixOracle::new(&full, 50);
+        let cfg = StreamConfig {
+            probe_pairs: 16,
+            epoch: usize::MAX, // no probes: pin the pure insert cost
+            policy: RebuildPolicy::default(),
+        };
+        let svc = SimilarityService::build_streaming(&prefix, method, 8, 32, cfg, &mut rng)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", method.name()));
+        let counter = CountingOracle::new(&full);
+        let ids: Vec<usize> = (50..60).collect();
+        let report = svc.insert_batch(&counter, &ids).unwrap();
+        let want = (ids.len() * svc.per_insert_calls()) as u64;
+        assert_eq!(report.oracle_calls, want, "{}", method.name());
+        assert_eq!(counter.calls(), want, "{}: no hidden oracle traffic", method.name());
+        assert!(report.drift.is_none() && !report.rebuilt);
+        assert_eq!(svc.n(), 60);
+        assert_eq!(svc.metrics.insert_calls.load(Relaxed), want);
+        // Grown corpus is immediately servable.
+        match svc.query(&Query::TopK(59, 3)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r.len(), 3),
+            _ => panic!(),
+        }
+    }
+}
+
+#[test]
+fn drift_rebuild_fires_and_improves_accuracy() {
+    // Drifting corpus: the tail cluster is invisible from prefix
+    // landmarks, so the extended store degrades until the monitor's
+    // sampled estimate crosses the threshold and a reservoir-refreshed
+    // rebuild recovers.
+    let w = streaming_workload(0.5, 11);
+    let full = &w.oracle;
+    let (n, n0) = (w.n_total(), w.n0);
+    let mut rng = Rng::new(11);
+    let s1 = (n0 / 5).max(8);
+    let prefix = PrefixOracle::new(full, n0);
+    let cfg = StreamConfig {
+        probe_pairs: 6 * s1,
+        epoch: 10,
+        policy: RebuildPolicy {
+            drift_threshold: 0.25,
+            min_inserts: 8,
+        },
+    };
+    let svc = SimilarityService::build_streaming(&prefix, Method::SmsNystrom, s1, 64, cfg, &mut rng)
+        .unwrap();
+    let mut peak_before_rebuild = 0.0f64;
+    let mut rebuilt = false;
+    let mut id = n0;
+    while id < n {
+        let hi = (id + 5).min(n);
+        let ids: Vec<usize> = (id..hi).collect();
+        let report = svc.insert_batch(full, &ids).unwrap();
+        if let Some(d) = report.drift {
+            if !rebuilt {
+                peak_before_rebuild = peak_before_rebuild.max(d);
+            }
+        }
+        rebuilt = rebuilt || report.rebuilt;
+        id = hi;
+    }
+    assert!(svc.metrics.rebuilds.load(Relaxed) >= 1, "drift rebuild must fire");
+    assert!(
+        peak_before_rebuild > 0.25,
+        "drift should visibly cross the threshold: peak {peak_before_rebuild}"
+    );
+    // The rebuilt store must beat a never-rebuilt pure extension on the
+    // grown corpus.
+    let k = full.materialize();
+    let err_rebuilt = rel_fro_error(&k, &svc.factored());
+    let mut rng2 = Rng::new(11);
+    let frozen_cfg = StreamConfig {
+        probe_pairs: 16,
+        epoch: usize::MAX,
+        policy: RebuildPolicy::default(),
+    };
+    let frozen = SimilarityService::build_streaming(
+        &prefix,
+        Method::SmsNystrom,
+        s1,
+        64,
+        frozen_cfg,
+        &mut rng2,
+    )
+    .unwrap();
+    let ids: Vec<usize> = (n0..n).collect();
+    frozen.insert_batch(full, &ids).unwrap();
+    let err_frozen = rel_fro_error(&k, &frozen.factored());
+    assert!(
+        err_rebuilt < err_frozen,
+        "rebuild should improve accuracy: rebuilt {err_rebuilt} vs frozen {err_frozen}"
+    );
+}
+
+#[test]
+fn queries_keep_flowing_during_inserts_and_rebuilds() {
+    // Zero-downtime invariant: reader threads hammer the service while
+    // the main thread replays the insert stream (with rebuilds enabled);
+    // every response must be finite and correctly shaped throughout.
+    let w = streaming_workload(0.4, 13);
+    let full = &w.oracle;
+    let (n, n0) = (w.n_total(), w.n0);
+    let mut rng = Rng::new(13);
+    let s1 = (n0 / 5).max(8);
+    let prefix = PrefixOracle::new(full, n0);
+    let cfg = StreamConfig {
+        probe_pairs: 4 * s1,
+        epoch: 10,
+        policy: RebuildPolicy {
+            drift_threshold: 0.25,
+            min_inserts: 8,
+        },
+    };
+    let svc = Arc::new(
+        SimilarityService::build_streaming(&prefix, Method::SiCur, s1, 64, cfg, &mut rng).unwrap(),
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for t in 0..4u64 {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + t);
+            let mut served = 0u64;
+            while !stop.load(Relaxed) {
+                let i = rng.below(n0); // build-time docs stay valid forever
+                match svc.query(&Query::Entry(i, (i * 7) % n0)).unwrap() {
+                    Response::Scalar(v) => assert!(v.is_finite()),
+                    _ => panic!("unexpected response shape"),
+                }
+                served += 1;
+            }
+            served
+        }));
+    }
+    let mut id = n0;
+    while id < n {
+        let hi = (id + 4).min(n);
+        let ids: Vec<usize> = (id..hi).collect();
+        svc.insert_batch(full, &ids).unwrap();
+        id = hi;
+    }
+    stop.store(true, Relaxed);
+    let total_served: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total_served > 0, "readers must have been served during growth");
+    assert_eq!(svc.n(), n);
+    assert_eq!(svc.factored().n(), n);
+    // The grown tail is servable too.
+    match svc.query(&Query::TopK(n - 1, 5)).unwrap() {
+        Response::Ranked(r) => assert_eq!(r.len(), 5),
+        _ => panic!(),
+    }
+    assert_eq!(
+        svc.metrics.inserts.load(Relaxed),
+        (n - n0) as u64,
+        "every inserted doc counted exactly once"
+    );
+}
