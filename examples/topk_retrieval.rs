@@ -1,0 +1,111 @@
+//! Sublinear top-k retrieval over the factored store: build a service,
+//! enable the IVF index, and compare the pruned path against the naive
+//! exact scan — queries/sec, recall@10 against the exact oracle, cells
+//! pruned, and budgeted exact re-ranking through the oracle.
+//!
+//! Run: cargo run --release --example topk_retrieval
+
+use std::time::Instant;
+
+use simmat::coordinator::{dense_rows, Method, Query, Response, SimilarityService};
+use simmat::index::{scan_batch, select_top_k, IvfConfig};
+use simmat::sim::synthetic::RbfOracle;
+use simmat::sim::SimOracle;
+use simmat::util::rng::Rng;
+use simmat::workloads::bench_scale;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let n = ((1600.0 * bench_scale()) as usize).max(300);
+    let oracle = RbfOracle::new(n, 4, 2.0, &mut rng);
+    let s1 = (n / 4).clamp(32, 160);
+    println!("corpus: {n} docs, s1 = {s1} landmarks");
+
+    let svc = SimilarityService::build(&oracle, Method::SmsNystrom, s1, 64, &mut rng).unwrap();
+    println!(
+        "built {} in {:.2}s ({} Δ calls, {:.1}% of n²)",
+        svc.stats.method.name(),
+        svc.stats.build_seconds,
+        svc.stats.oracle_calls,
+        100.0 * (1.0 - svc.stats.savings()),
+    );
+
+    svc.enable_index(IvfConfig::default()).unwrap();
+    let idx = svc.index().unwrap();
+    println!(
+        "index: {} cells over {} signed dims (gap {:.2e})",
+        idx.cells(),
+        idx.embedding().dim(),
+        idx.embedding().gap,
+    );
+
+    // --- naive exact scan vs pruned index, same queries ---
+    let queries: Vec<usize> = (0..n).step_by(3).collect();
+    let k = 10;
+    let store = svc.factored();
+    let t0 = Instant::now();
+    let naive = scan_batch(&store, &queries, k);
+    let naive_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let served = match svc.query(&Query::TopKBatch(queries.clone(), k)).unwrap() {
+        Response::RankedBatch(lists) => lists,
+        _ => unreachable!(),
+    };
+    let ivf_s = t0.elapsed().as_secs_f64();
+    let agree = queries
+        .iter()
+        .enumerate()
+        .filter(|&(t, _)| naive[t] == served[t])
+        .count();
+    println!(
+        "{} queries: naive scan {:.0}/s, IVF {:.0}/s ({:.1}x); {}/{} identical to the scan",
+        queries.len(),
+        queries.len() as f64 / naive_s.max(1e-9),
+        queries.len() as f64 / ivf_s.max(1e-9),
+        naive_s / ivf_s.max(1e-9),
+        agree,
+        queries.len(),
+    );
+    assert_eq!(agree, queries.len(), "pruned search must lose nothing");
+
+    // Bulk consumers without PJRT artifacts reconstruct dense K̃ bands
+    // in-process (`dense_rows`, pool-sharded over `row_into`); the band
+    // must carry the very scores the index served.
+    let band = dense_rows(&store, 0..1);
+    for &(j, s) in &served[0] {
+        assert_eq!(band.get(0, j), s, "dense band disagrees at column {j}");
+    }
+
+    // --- recall@10 vs the exact oracle (evaluation only — Ω(n²)) ---
+    let k_exact = oracle.materialize();
+    let mut recall = 0.0;
+    for (t, &i) in queries.iter().enumerate() {
+        let want = select_top_k(k_exact.row(i), i, k);
+        let hit = served[t]
+            .iter()
+            .filter(|&&(j, _)| want.iter().any(|&(w, _)| w == j))
+            .count();
+        recall += hit as f64 / (k as f64 * queries.len() as f64);
+    }
+    // --- budgeted exact re-rank through the oracle ---
+    svc.set_rerank(3 * k);
+    let reranked = svc.topk_rerank(&oracle, &queries, k).unwrap();
+    let mut recall_rr = 0.0;
+    for (t, &i) in queries.iter().enumerate() {
+        let want = select_top_k(k_exact.row(i), i, k);
+        let hit = reranked[t]
+            .iter()
+            .filter(|&&(j, _)| want.iter().any(|&(w, _)| w == j))
+            .count();
+        recall_rr += hit as f64 / (k as f64 * queries.len() as f64);
+    }
+    println!(
+        "recall@{k} vs exact oracle: {recall:.3} raw, {recall_rr:.3} after re-rank \
+         (budget {} Δ calls/query)",
+        3 * k
+    );
+    println!("index metrics: {}", svc.metrics.index_summary());
+    assert!(recall >= 0.6, "recall@10 {recall:.3} unexpectedly low");
+    assert!(recall_rr >= recall - 1e-9, "re-rank must not hurt recall");
+    assert_eq!(svc.index().unwrap().n(), svc.n(), "index/store in step");
+}

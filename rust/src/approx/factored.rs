@@ -51,8 +51,20 @@ impl Factored {
 
     /// Full approximate row K̃_{i,·}.
     pub fn row(&self, i: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.n()];
+        self.row_into(i, &mut out);
+        out
+    }
+
+    /// Write K̃_{i,·} into `out` (`out.len() == n`) without allocating —
+    /// the steady-state row/top-k serving path (callers reuse the buffer
+    /// across queries; mirrors the oracle `eval_batch_into` pattern).
+    pub fn row_into(&self, i: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n(), "row_into buffer length mismatch");
         let li = self.left.row(i);
-        (0..self.n()).map(|j| dot(li, self.right_t.row(j))).collect()
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(li, self.right_t.row(j));
+        }
     }
 
     /// Embedding of point i (rows of the left factor; for symmetric
@@ -68,7 +80,13 @@ impl Factored {
 
     /// Top-k most similar indices to `i` (excluding i itself). Partial
     /// selection (select_nth) instead of a full sort — O(n + k log k)
-    /// after the O(n·r) row reconstruction (§Perf).
+    /// after the O(n·r) row reconstruction (§Perf). The comparator is
+    /// total — score descending via `f64::total_cmp` (NaN scores from a
+    /// degenerate factorization sort deterministically instead of
+    /// panicking; note total_cmp places +NaN above every real), index
+    /// ascending on exact ties — so the result is a canonical ranking
+    /// every serving path (exact scan, batched scan, pruned index)
+    /// reproduces bit-for-bit, duplicates included.
     pub fn top_k(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
         let row = self.row(i);
         let mut idx: Vec<usize> = (0..self.n()).filter(|&j| j != i).collect();
@@ -78,11 +96,11 @@ impl Factored {
         }
         if k < idx.len() {
             idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                row[b].partial_cmp(&row[a]).unwrap()
+                row[b].total_cmp(&row[a]).then(a.cmp(&b))
             });
             idx.truncate(k);
         }
-        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
         idx.into_iter().map(|j| (j, row[j])).collect()
     }
 
@@ -126,6 +144,31 @@ mod tests {
                 assert!((f.entry(i, j) - f.entry(j, i)).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn row_into_matches_row_without_allocating_per_call() {
+        let mut rng = Rng::new(4);
+        let f = Factored::from_z(Mat::gaussian(12, 3, &mut rng));
+        let mut buf = vec![0.0; 12];
+        for i in 0..12 {
+            f.row_into(i, &mut buf);
+            assert_eq!(buf, f.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn top_k_survives_nan_scores() {
+        // A NaN factor entry poisons scores against that point; selection
+        // must stay total (no `partial_cmp(..).unwrap()` panic) and keep
+        // every non-NaN candidate.
+        let mut rng = Rng::new(5);
+        let mut z = Mat::gaussian(8, 3, &mut rng);
+        z.set(2, 0, f64::NAN);
+        let f = Factored::from_z(z);
+        let top = f.top_k(0, 7);
+        assert_eq!(top.len(), 7);
+        assert_eq!(top.iter().filter(|&&(_, s)| s.is_nan()).count(), 1);
     }
 
     #[test]

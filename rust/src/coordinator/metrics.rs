@@ -26,6 +26,13 @@ pub struct Metrics {
     pub probe_calls: AtomicU64,
     /// Full rebuilds triggered by the drift policy.
     pub rebuilds: AtomicU64,
+    /// Top-k queries answered through the retrieval index.
+    pub topk_queries: AtomicU64,
+    /// IVF cells scanned / pruned across indexed top-k queries.
+    pub cells_scanned: AtomicU64,
+    pub cells_pruned: AtomicU64,
+    /// Exact Δ evaluations spent re-ranking index candidates.
+    pub rerank_calls: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     latency_count: AtomicU64,
@@ -68,6 +75,18 @@ impl Metrics {
 
     pub fn record_rebuild(&self) {
         self.rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account `queries` index-served top-k queries and their pruning
+    /// work (aggregated `SearchStats` from the IVF scan).
+    pub fn record_topk(&self, queries: u64, cells_scanned: u64, cells_pruned: u64) {
+        self.topk_queries.fetch_add(queries, Ordering::Relaxed);
+        self.cells_scanned.fetch_add(cells_scanned, Ordering::Relaxed);
+        self.cells_pruned.fetch_add(cells_pruned, Ordering::Relaxed);
+    }
+
+    pub fn record_rerank(&self, delta_calls: u64) {
+        self.rerank_calls.fetch_add(delta_calls, Ordering::Relaxed);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -119,6 +138,23 @@ impl Metrics {
         )
     }
 
+    /// One-line view of the retrieval-index counters.
+    pub fn index_summary(&self) -> String {
+        let scanned = self.cells_scanned.load(Ordering::Relaxed);
+        let pruned = self.cells_pruned.load(Ordering::Relaxed);
+        let rate = if scanned + pruned == 0 {
+            0.0
+        } else {
+            pruned as f64 / (scanned + pruned) as f64
+        };
+        format!(
+            "topk_queries={} cells_scanned={scanned} cells_pruned={pruned} \
+             (prune rate {rate:.3}) rerank_calls={}",
+            self.topk_queries.load(Ordering::Relaxed),
+            self.rerank_calls.load(Ordering::Relaxed),
+        )
+    }
+
     /// One-line view of the streaming-growth counters.
     pub fn streaming_summary(&self) -> String {
         format!(
@@ -143,6 +179,19 @@ mod tests {
         m.record_batch(64, 64);
         assert_eq!(m.oracle_calls.load(Ordering::Relaxed), 112);
         assert!((m.batch_efficiency() - 112.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn index_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_topk(3, 12, 30);
+        m.record_topk(1, 2, 8);
+        m.record_rerank(40);
+        assert_eq!(m.topk_queries.load(Ordering::Relaxed), 4);
+        assert_eq!(m.cells_scanned.load(Ordering::Relaxed), 14);
+        assert_eq!(m.cells_pruned.load(Ordering::Relaxed), 38);
+        assert_eq!(m.rerank_calls.load(Ordering::Relaxed), 40);
+        assert!(m.index_summary().contains("topk_queries=4"));
     }
 
     #[test]

@@ -14,4 +14,4 @@ pub use metrics::Metrics;
 pub use router::{route, Query, Response};
 pub use scheduler::{schedule, DriftMonitor, RebuildPolicy, SampleMode, Schedule};
 pub use server::{BuildStats, InsertReport, Method, SimilarityService, StreamConfig};
-pub use tiles::TileServer;
+pub use tiles::{dense_rows, TileServer};

@@ -2,8 +2,13 @@
 //! falling back to the exact oracle only when explicitly asked. This is
 //! the read path after an approximation is built — all O(r) per entry,
 //! no Δ evaluations.
+//!
+//! Top-k queries routed here run the exact scan over the store; the
+//! coordinator's `SimilarityService` intercepts them when its retrieval
+//! index (`index::IvfIndex`) is enabled and answers sublinearly instead.
 
 use crate::approx::Factored;
+use crate::index;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Query {
@@ -13,6 +18,9 @@ pub enum Query {
     Row(usize),
     /// k nearest neighbours of i under K̃.
     TopK(usize, usize),
+    /// k nearest neighbours for a batch of query points (the throughput
+    /// path: one sharded scan / pruned index pass for all of them).
+    TopKBatch(Vec<usize>, usize),
     /// Embedding of point i (left-factor row).
     Embed(usize),
 }
@@ -22,6 +30,8 @@ pub enum Response {
     Scalar(f64),
     Vector(Vec<f64>),
     Ranked(Vec<(usize, f64)>),
+    /// One ranked list per query of a `TopKBatch`.
+    RankedBatch(Vec<Vec<(usize, f64)>>),
 }
 
 #[derive(Debug)]
@@ -50,21 +60,31 @@ pub fn route(f: &Factored, q: &Query) -> Result<Response, RouteError> {
             Err(RouteError::OutOfRange { index: i, n })
         }
     };
-    match *q {
-        Query::Entry(i, j) => {
+    match q {
+        &Query::Entry(i, j) => {
             check(i)?;
             check(j)?;
             Ok(Response::Scalar(f.entry(i, j)))
         }
-        Query::Row(i) => {
+        &Query::Row(i) => {
             check(i)?;
+            // `Factored::row` reconstructs through `row_into`; callers
+            // that serve rows in a loop can hold their own buffer and
+            // call `row_into` directly.
             Ok(Response::Vector(f.row(i)))
         }
-        Query::TopK(i, k) => {
+        &Query::TopK(i, k) => {
             check(i)?;
             Ok(Response::Ranked(f.top_k(i, k.min(n - 1))))
         }
-        Query::Embed(i) => {
+        Query::TopKBatch(ids, k) => {
+            for &i in ids {
+                check(i)?;
+            }
+            let k = (*k).min(n - 1);
+            Ok(Response::RankedBatch(index::scan_batch(f, ids, k)))
+        }
+        &Query::Embed(i) => {
             check(i)?;
             Ok(Response::Vector(f.embedding(i).to_vec()))
         }
@@ -108,6 +128,21 @@ mod tests {
         let f = toy();
         assert!(route(&f, &Query::Entry(8, 0)).is_err());
         assert!(route(&f, &Query::Row(100)).is_err());
+        assert!(route(&f, &Query::TopKBatch(vec![0, 8], 2)).is_err());
+    }
+
+    #[test]
+    fn topk_batch_matches_per_query_topk() {
+        let f = toy();
+        match route(&f, &Query::TopKBatch(vec![1, 4, 6], 3)).unwrap() {
+            Response::RankedBatch(lists) => {
+                assert_eq!(lists.len(), 3);
+                for (t, &i) in [1usize, 4, 6].iter().enumerate() {
+                    assert_eq!(lists[t], f.top_k(i, 3), "query {i}");
+                }
+            }
+            _ => panic!(),
+        }
     }
 
     #[test]

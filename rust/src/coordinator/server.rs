@@ -12,10 +12,12 @@
 //! Queries keep flowing the whole time: they read an `Arc` snapshot under
 //! a briefly-held lock, and a rebuild swaps the store atomically.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::approx::{self, Extension, Factored, LandmarkPlan, LandmarkReservoir, SmsConfig};
+use crate::index::{rerank_exact, topk_batch, IvfConfig, IvfIndex};
 use crate::sim::{CountingOracle, PrefixOracle, SimOracle};
 use crate::util::rng::Rng;
 
@@ -182,6 +184,14 @@ pub struct SimilarityService {
     /// clone the `Arc` (or serve one routed query); a rebuild constructs
     /// the new store outside the lock and swaps it atomically.
     factored: RwLock<Arc<Factored>>,
+    /// Optional sublinear top-k retrieval index ([`Self::enable_index`]).
+    /// Always a self-consistent snapshot: it answers from the store it
+    /// was built over, is extended on every insert, and is rebuilt (then
+    /// swapped, after the store) on every drift rebuild.
+    index: RwLock<Option<Arc<IvfIndex>>>,
+    /// Exact re-rank budget for [`Self::topk_rerank`] (candidates
+    /// re-scored through the oracle per query; 0 = rerank just the top-k).
+    rerank: AtomicUsize,
     stream: Mutex<StreamState>,
     pub stats: BuildStats,
     pub metrics: Arc<Metrics>,
@@ -230,6 +240,8 @@ impl SimilarityService {
         };
         Ok(SimilarityService {
             factored: RwLock::new(Arc::new(factored)),
+            index: RwLock::new(None),
+            rerank: AtomicUsize::new(0),
             stream: Mutex::new(StreamState {
                 extension,
                 reservoir: LandmarkReservoir::new(&plan, n),
@@ -308,7 +320,10 @@ impl SimilarityService {
             if Arc::strong_count(&store) == 1 {
                 // Sole owner (no reader snapshot outstanding): append in
                 // place — an O(m·r) critical section. No weak refs are
-                // ever created, so get_mut cannot fail here.
+                // ever created, so get_mut cannot fail here. Note: with
+                // the retrieval index enabled this branch never runs —
+                // the index pins its own store snapshot, so inserts
+                // always take the copy-on-write path below.
                 let f = Arc::get_mut(&mut store).expect("sole owner");
                 st.extension.append_rows(f, &left, &right);
             } else {
@@ -350,9 +365,49 @@ impl SimilarityService {
                 };
                 st.extension = next_ext;
                 st.inserts_since_build = 0;
-                *self.factored.write().unwrap() = Arc::new(fresh);
+                let fresh = Arc::new(fresh);
+                // Re-quantize the retrieval index over the fresh store
+                // *before* swapping either, so the index trails the
+                // store swap by one O(1) pointer write (readers between
+                // the two swaps still get self-consistent answers from
+                // the old index's own snapshot).
+                let fresh_index = match self.index.read().unwrap().as_ref() {
+                    Some(idx) => Some(Arc::new(IvfIndex::build(fresh.clone(), idx.config())?)),
+                    None => None,
+                };
+                *self.factored.write().unwrap() = fresh;
+                if let Some(fresh_index) = fresh_index {
+                    *self.index.write().unwrap() = Some(fresh_index);
+                }
                 self.metrics.record_rebuild();
                 rebuilt = true;
+            }
+        }
+        // Keep the retrieval index in step with the grown store (a
+        // rebuild above already re-quantized it over the fresh store, so
+        // only extend when none fired): embed the appended rows through
+        // the frozen canonical map and file them under their nearest
+        // cell. Until this swap, top-k queries for the new ids fall back
+        // to the store scan (`Self::query`). Cost note: extending clones
+        // the index's embedding (and the CoW path above clones the
+        // store), so indexed streaming inserts are O(n·(r+d)) per
+        // *batch* — amortize with larger batches. The stream mutex (held
+        // by both this method and `enable_index`) serializes index
+        // mutators, so the index can only lag the store by the rows of
+        // the in-flight insert — never mix snapshots.
+        if !rebuilt {
+            let live_index = self.index.read().unwrap().clone();
+            if let Some(idx) = live_index {
+                let snapshot = self.factored.read().unwrap().clone();
+                let fresh = if idx.n() + left.rows == snapshot.n() {
+                    idx.extended(snapshot, &left, &right)
+                } else {
+                    // Defensive only — mutators are serialized, so a
+                    // diverged index means a logic bug elsewhere; fall
+                    // back to a clean rebuild over the current snapshot.
+                    IvfIndex::build(snapshot, idx.config())?
+                };
+                *self.index.write().unwrap() = Some(Arc::new(fresh));
             }
         }
         Ok(InsertReport {
@@ -365,8 +420,80 @@ impl SimilarityService {
 
     pub fn query(&self, q: &Query) -> Result<Response, RouteError> {
         self.metrics.record_query();
+        // Top-k queries go through the retrieval index when one is
+        // enabled (sublinear pruned scan, work counters in Metrics);
+        // everything else — and top-k before `enable_index` — routes
+        // against the factored store directly.
+        if let Some(idx) = self.index() {
+            let n = idx.n();
+            // Ids beyond the index snapshot fall through to the store
+            // scan below: during an insert the index briefly lags the
+            // store by the in-flight rows, and a just-appended document
+            // must not get a transient OutOfRange while `Row` serves it.
+            match q {
+                &Query::TopK(i, k) if i < n => {
+                    let (ranked, st) = idx.top_k_stats(i, k.min(n - 1));
+                    self.metrics.record_topk(1, st.cells_scanned, st.cells_pruned);
+                    return Ok(Response::Ranked(ranked));
+                }
+                Query::TopKBatch(ids, k) if ids.iter().all(|&i| i < n) => {
+                    let (lists, st) = topk_batch(&idx, ids, (*k).min(n - 1));
+                    self.metrics
+                        .record_topk(ids.len() as u64, st.cells_scanned, st.cells_pruned);
+                    return Ok(Response::RankedBatch(lists));
+                }
+                _ => {}
+            }
+        }
         let f = self.factored.read().unwrap();
         route(&f, q)
+    }
+
+    /// Build (or rebuild) the sublinear top-k retrieval index over the
+    /// current store snapshot; `TopK` / `TopKBatch` queries are answered
+    /// through it from then on. `cfg.rerank` seeds the re-rank budget
+    /// knob ([`Self::set_rerank`]). Takes the stream lock so it
+    /// serializes with inserts/rebuilds — a racing insert can neither
+    /// clobber the new config nor leave the index astride two stores.
+    pub fn enable_index(&self, cfg: IvfConfig) -> Result<(), String> {
+        let _mutators = self.stream.lock().unwrap();
+        let idx = IvfIndex::build(self.factored(), cfg)?;
+        self.rerank.store(cfg.rerank, Ordering::Relaxed);
+        *self.index.write().unwrap() = Some(Arc::new(idx));
+        Ok(())
+    }
+
+    /// Snapshot of the retrieval index, if enabled.
+    pub fn index(&self) -> Option<Arc<IvfIndex>> {
+        self.index.read().unwrap().clone()
+    }
+
+    /// Exact re-rank budget: candidates per query re-scored through the
+    /// oracle by [`Self::topk_rerank`] (clamped up to k at use).
+    pub fn set_rerank(&self, budget: usize) {
+        self.rerank.store(budget, Ordering::Relaxed);
+    }
+
+    /// Batched top-k with budgeted exact re-ranking: candidates come
+    /// from the index (or the exact store scan before `enable_index`),
+    /// then the top `rerank` of each list are re-scored through `oracle`
+    /// — Δ calls metered in `Metrics::rerank_calls` — and re-sorted, so
+    /// approximation error at the head of the ranking is repaired at
+    /// O(budget) oracle cost per query instead of O(n).
+    pub fn topk_rerank(
+        &self,
+        oracle: &dyn SimOracle,
+        ids: &[usize],
+        k: usize,
+    ) -> Result<Vec<Vec<(usize, f64)>>, RouteError> {
+        let budget = self.rerank.load(Ordering::Relaxed).max(k);
+        let mut lists = match self.query(&Query::TopKBatch(ids.to_vec(), budget))? {
+            Response::RankedBatch(lists) => lists,
+            _ => unreachable!("TopKBatch always yields RankedBatch"),
+        };
+        let calls = rerank_exact(oracle, ids, &mut lists, k, budget);
+        self.metrics.record_rerank(calls);
+        Ok(lists)
     }
 
     /// Snapshot of the current factored store.
@@ -444,6 +571,69 @@ mod tests {
         let o = NearPsdOracle::new(100, 8, 0.3, &mut rng);
         let svc = SimilarityService::build(&o, Method::SiCur, 10, 64, &mut rng).unwrap();
         assert!(svc.stats.savings() > 0.5, "savings {}", svc.stats.savings());
+    }
+
+    #[test]
+    fn indexed_topk_matches_store_and_meters_counters() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let mut rng = Rng::new(8);
+        let o = NearPsdOracle::new(70, 6, 0.2, &mut rng);
+        let svc = SimilarityService::build(&o, Method::Nystrom, 16, 64, &mut rng).unwrap();
+        let reference = svc.factored();
+        svc.enable_index(IvfConfig::default()).unwrap();
+        match svc.query(&Query::TopK(5, 8)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r, reference.top_k(5, 8)),
+            _ => panic!(),
+        }
+        match svc.query(&Query::TopKBatch(vec![0, 9, 44], 6)).unwrap() {
+            Response::RankedBatch(lists) => {
+                assert_eq!(lists.len(), 3);
+                for (t, &i) in [0usize, 9, 44].iter().enumerate() {
+                    assert_eq!(lists[t], reference.top_k(i, 6), "query {i}");
+                }
+            }
+            _ => panic!(),
+        }
+        assert_eq!(svc.metrics.topk_queries.load(Relaxed), 4);
+        let scanned = svc.metrics.cells_scanned.load(Relaxed);
+        let pruned = svc.metrics.cells_pruned.load(Relaxed);
+        assert!(scanned > 0, "indexed queries must scan at least one cell");
+        assert!(
+            scanned + pruned <= 4 * svc.index().unwrap().cells() as u64,
+            "per query, each non-empty cell is scanned or pruned at most once"
+        );
+        assert!(svc.query(&Query::TopK(70, 3)).is_err());
+    }
+
+    #[test]
+    fn index_follows_inserts_and_rerank_meters_delta_calls() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let mut rng = Rng::new(9);
+        let o = NearPsdOracle::new(60, 6, 0.2, &mut rng);
+        let prefix = crate::sim::PrefixOracle::new(&o, 50);
+        let cfg = StreamConfig {
+            probe_pairs: 8,
+            epoch: usize::MAX,
+            policy: RebuildPolicy::default(),
+        };
+        let svc =
+            SimilarityService::build_streaming(&prefix, Method::Nystrom, 12, 32, cfg, &mut rng)
+                .unwrap();
+        svc.enable_index(IvfConfig::default()).unwrap();
+        let ids: Vec<usize> = (50..60).collect();
+        svc.insert_batch(&o, &ids).unwrap();
+        let idx = svc.index().unwrap();
+        assert_eq!(idx.n(), 60, "index must follow the grown store");
+        assert_eq!(idx.store().n(), svc.factored().n());
+        match svc.query(&Query::TopK(57, 5)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r, svc.factored().top_k(57, 5)),
+            _ => panic!(),
+        }
+        svc.set_rerank(12);
+        let lists = svc.topk_rerank(&o, &[3, 55], 4).unwrap();
+        assert_eq!(lists.len(), 2);
+        assert!(lists.iter().all(|l| l.len() == 4));
+        assert_eq!(svc.metrics.rerank_calls.load(Relaxed), 2 * 12);
     }
 
     #[test]

@@ -133,6 +133,30 @@ impl TileServer {
     }
 }
 
+/// In-process fallback band renderer: the dense K̃[rows, ·] block
+/// computed straight from the factors, no PJRT artifacts required. Rows
+/// are sharded across the pool workers and each worker reconstructs via
+/// [`Factored::row_into`] directly into its chunk of the output — zero
+/// allocation per row, bit-identical to the router's `Query::Row` path.
+/// Bulk consumers (clustering sweeps, recall evaluation) use this when
+/// the `reconstruct_tile` artifact is unavailable.
+pub fn dense_rows(f: &Factored, rows: std::ops::Range<usize>) -> Mat {
+    let n = f.n();
+    assert!(rows.end <= n, "band out of range");
+    let mut out = Mat::zeros(rows.len(), n);
+    if rows.is_empty() {
+        return out;
+    }
+    let start = rows.start;
+    let workers = pool::auto_workers(rows.len() * n * f.rank(), 1 << 20);
+    pool::for_row_chunks(workers, &mut out.data, n, 1, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            f.row_into(start + row0 + r, orow);
+        }
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +182,20 @@ mod tests {
                     (got - want).abs() < 1e-3 * want.abs().max(1.0),
                     "tile[{ti},{tj}] {got} vs {want}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_rows_matches_entries_for_every_pool_size() {
+        let mut rng = Rng::new(3);
+        let f = Factored::from_z(Mat::gaussian(40, 6, &mut rng));
+        let serial = pool::with_workers(1, || dense_rows(&f, 5..29));
+        let parallel = pool::with_workers(4, || dense_rows(&f, 5..29));
+        assert_eq!(serial.data, parallel.data, "band must be worker-invariant");
+        for (r, i) in (5..29).enumerate() {
+            for j in 0..40 {
+                assert_eq!(serial.get(r, j), f.entry(i, j), "({i},{j})");
             }
         }
     }

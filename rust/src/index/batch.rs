@@ -1,0 +1,175 @@
+//! Throughput path for top-k retrieval: batched multi-query search
+//! sharded on the pool workers, the naive batched exact scan it is
+//! benchmarked against (one `Mat::matmul_nt` over the gathered query
+//! rows — bit-identical scores to `Factored::row`), and budgeted exact
+//! re-ranking of candidates through the [`SimOracle`] (Δ calls are the
+//! caller's to meter; the coordinator accounts them in `Metrics`).
+
+use crate::approx::Factored;
+use crate::linalg::Mat;
+use crate::sim::SimOracle;
+use crate::util::pool;
+
+use super::ivf::{IvfIndex, SearchStats};
+
+/// Queries per pool-worker spawn (one pruned search is a few cells of
+/// dot products — cheap; batch a handful to amortize the spawn).
+const QUERIES_PER_WORKER: usize = 4;
+
+/// Answer many top-k queries through the index, sharded across the pool
+/// workers (queries are independent, so results are bit-identical for
+/// every worker count). Returns one ranked list per query plus the
+/// aggregated work counters.
+pub fn topk_batch(
+    index: &IvfIndex,
+    ids: &[usize],
+    k: usize,
+) -> (Vec<Vec<(usize, f64)>>, SearchStats) {
+    let workers = pool::auto_workers(ids.len(), QUERIES_PER_WORKER);
+    let chunks = pool::map_chunks(workers, ids.len(), 1, |range| {
+        let mut out = Vec::with_capacity(range.len());
+        let mut stats = SearchStats::default();
+        for t in range {
+            let (res, st) = index.top_k_stats(ids[t], k);
+            stats.merge(&st);
+            out.push(res);
+        }
+        (out, stats)
+    });
+    let mut results = Vec::with_capacity(ids.len());
+    let mut stats = SearchStats::default();
+    for (chunk, st) in chunks {
+        results.extend(chunk);
+        stats.merge(&st);
+    }
+    (results, stats)
+}
+
+/// Naive batched exact scan: gather the query rows of the left factor,
+/// compute all scores with one pool-sharded `matmul_nt`, and select per
+/// row. The throughput baseline for `BENCH_topk.json`; scores (and, off
+/// ties, rankings) match per-query `Factored::top_k` bit-for-bit because
+/// `matmul_nt` computes the very same row-dot kernel.
+pub fn scan_batch(f: &Factored, ids: &[usize], k: usize) -> Vec<Vec<(usize, f64)>> {
+    let q = f.left.select_rows(ids);
+    let scores = q.matmul_nt(&f.right_t); // |ids| x n
+    ids.iter()
+        .enumerate()
+        .map(|(t, &i)| select_top_k(scores.row(t), i, k))
+        .collect()
+}
+
+/// Top-k of a dense score row, excluding `exclude`, under the canonical
+/// total order (score descending via `total_cmp`, index ascending on
+/// exact ties — NaN-safe). The same selection `Factored::top_k` runs,
+/// so every serving path agrees bit-for-bit even on duplicates.
+pub fn select_top_k(row: &[f64], exclude: usize, k: usize) -> Vec<(usize, f64)> {
+    let mut idx: Vec<usize> = (0..row.len()).filter(|&j| j != exclude).collect();
+    let k = k.min(idx.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+        idx.truncate(k);
+    }
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+    idx.into_iter().map(|j| (j, row[j])).collect()
+}
+
+/// Budgeted exact re-ranking: re-score each query's top
+/// `max(budget, k)` candidates through the oracle (one batched Δ gather
+/// for all queries), re-sort by the exact scores, truncate to k.
+/// Returns the Δ calls spent — the caller meters them
+/// (`Metrics::record_rerank` in the coordinator).
+pub fn rerank_exact(
+    oracle: &dyn SimOracle,
+    ids: &[usize],
+    results: &mut [Vec<(usize, f64)>],
+    k: usize,
+    budget: usize,
+) -> u64 {
+    assert_eq!(ids.len(), results.len(), "one result list per query");
+    let budget = budget.max(k);
+    let mut pairs = Vec::new();
+    for (t, &i) in ids.iter().enumerate() {
+        for &(j, _) in results[t].iter().take(budget) {
+            pairs.push((i, j));
+        }
+    }
+    if pairs.is_empty() {
+        return 0;
+    }
+    let exact = oracle.eval_batch(&pairs);
+    let mut off = 0;
+    for list in results.iter_mut() {
+        let take = list.len().min(budget);
+        let mut rescored: Vec<(usize, f64)> = list[..take]
+            .iter()
+            .enumerate()
+            .map(|(x, &(j, _))| (j, exact[off + x]))
+            .collect();
+        off += take;
+        rescored.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        rescored.truncate(k);
+        *list = rescored;
+    }
+    pairs.len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::IvfConfig;
+    use crate::sim::synthetic::NearPsdOracle;
+    use crate::sim::CountingOracle;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn scan_batch_matches_per_query_top_k() {
+        let mut rng = Rng::new(1);
+        let f = Factored::from_z(Mat::gaussian(60, 5, &mut rng));
+        let ids = [0usize, 7, 33, 59];
+        let got = scan_batch(&f, &ids, 8);
+        for (t, &i) in ids.iter().enumerate() {
+            assert_eq!(got[t], f.top_k(i, 8), "query {i}");
+        }
+    }
+
+    #[test]
+    fn topk_batch_is_worker_invariant() {
+        let mut rng = Rng::new(2);
+        let store = Arc::new(Factored::from_z(Mat::gaussian(80, 4, &mut rng)));
+        let idx = IvfIndex::build(store, IvfConfig::default()).unwrap();
+        let ids: Vec<usize> = (0..80).step_by(3).collect();
+        let serial = pool::with_workers(1, || topk_batch(&idx, &ids, 6));
+        let parallel = pool::with_workers(4, || topk_batch(&idx, &ids, 6));
+        assert_eq!(serial.0, parallel.0);
+        assert_eq!(serial.1, parallel.1, "stats must aggregate identically");
+    }
+
+    #[test]
+    fn rerank_promotes_exact_order_and_meters_calls() {
+        let mut rng = Rng::new(3);
+        let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
+        let k_exact = o.dense().clone();
+        // A deliberately coarse store: rerank must fix the head ordering.
+        let f = crate::approx::nystrom(&o, 12, &mut rng).unwrap();
+        let ids = [4usize, 21];
+        let mut results = scan_batch(&f, &ids, 5);
+        let counter = CountingOracle::new(&o);
+        let calls = rerank_exact(&counter, &ids, &mut results, 3, 5);
+        assert_eq!(calls, (ids.len() * 5) as u64);
+        assert_eq!(counter.calls(), calls);
+        for (t, &i) in ids.iter().enumerate() {
+            assert_eq!(results[t].len(), 3);
+            for w in results[t].windows(2) {
+                assert!(w[0].1 >= w[1].1);
+            }
+            for &(j, s) in &results[t] {
+                assert_eq!(s, k_exact.get(i, j), "scores must be exact");
+            }
+        }
+    }
+}

@@ -1,0 +1,485 @@
+//! Inverted-file (IVF) top-k retrieval over a factored store.
+//!
+//! The serving plane's `Query::TopK` used to reconstruct a full O(n·r)
+//! row per query; this index answers the same query in sublinear
+//! *expected* time. A coarse quantizer (k-means over the signed
+//! embeddings, ~√n cells) partitions the corpus; each cell carries a
+//! Cauchy–Schwarz score cap
+//!
+//! ```text
+//! score(i, j) ≤ ⟨u_i, c⟩ + ‖u_i‖·ρ + gap      for every j in the cell
+//! ```
+//!
+//! (c = cell centroid of the database rows v_j, ρ = cell radius, gap the
+//! antisymmetric/truncation residual from `index::signed`). Cells are
+//! scanned best-bound-first against a running kth-score threshold; once
+//! the best remaining bound cannot beat the threshold, every remaining
+//! cell is pruned. Scores for scanned candidates are the *exact*
+//! factored scores — the same `dot(L_i, R_j)` the full scan computes —
+//! so pruning only ever skips work, never changes a scanned score.
+//!
+//! With `prune: false` the index degrades to the exact full scan and is
+//! bit-identical to [`Factored::top_k`] (pinned per method by
+//! `tests/topk_retrieval.rs`).
+
+use std::sync::Arc;
+
+use crate::approx::Factored;
+use crate::linalg::{dot, Mat};
+use crate::tasks::cluster::kmeans;
+use crate::util::rng::Rng;
+
+use super::signed::SignedEmbedding;
+
+/// Index knobs. `Default` is the serving configuration the coordinator
+/// uses; `cells: 0` sizes the quantizer at ~√n.
+#[derive(Clone, Copy, Debug)]
+pub struct IvfConfig {
+    /// Coarse cells; 0 = ⌈√n⌉ (clamped to [1, n]).
+    pub cells: usize,
+    /// Lloyd iterations for the quantizer build.
+    pub kmeans_iters: usize,
+    /// Best-bound-first pruned scan; `false` = exact full scan,
+    /// bit-identical to `Factored::top_k`.
+    pub prune: bool,
+    /// Exact re-rank budget per query (candidates re-scored through the
+    /// oracle by `index::batch::rerank_exact`; 0 disables).
+    pub rerank: usize,
+    /// Quantizer seed (index builds are deterministic given the store).
+    pub seed: u64,
+}
+
+impl Default for IvfConfig {
+    fn default() -> IvfConfig {
+        IvfConfig {
+            cells: 0,
+            kmeans_iters: 8,
+            prune: true,
+            rerank: 0,
+            seed: 0x1DE,
+        }
+    }
+}
+
+/// Per-search work counters (aggregated into coordinator `Metrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    pub cells_scanned: u64,
+    pub cells_pruned: u64,
+    /// Exact factored scores computed (the work pruning saves).
+    pub scored: u64,
+}
+
+impl SearchStats {
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.cells_scanned += other.cells_scanned;
+        self.cells_pruned += other.cells_pruned;
+        self.scored += other.scored;
+    }
+}
+
+/// One coarse cell: members plus the geometry backing its score cap.
+#[derive(Clone, Debug)]
+struct Cell {
+    members: Vec<u32>,
+    centroid: Vec<f64>,
+    radius: f64,
+}
+
+/// The immutable retrieval index over one store snapshot. The
+/// coordinator holds it in an `Arc` next to the store and swaps both on
+/// rebuild; readers always answer from the snapshot the index was built
+/// over (`self.store`), never a torn mix.
+pub struct IvfIndex {
+    store: Arc<Factored>,
+    emb: SignedEmbedding,
+    cells: Vec<Cell>,
+    cfg: IvfConfig,
+}
+
+/// The canonical candidate order every serving path ranks by: score
+/// descending (`total_cmp`, NaN-safe), index ascending on exact ties.
+/// `rank` returns Less when `a` is the *worse* candidate, so a min-heap
+/// over it keeps exactly the k best — the same set `select_top_k` and
+/// `Factored::top_k` select, duplicates included.
+#[inline]
+fn rank(a: &(f64, usize), b: &(f64, usize)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0).then(b.1.cmp(&a.1))
+}
+
+/// Min-heap of the k best (score, id) candidates under [`rank`].
+struct TopAcc {
+    k: usize,
+    heap: Vec<(f64, usize)>,
+}
+
+impl TopAcc {
+    fn new(k: usize) -> TopAcc {
+        TopAcc {
+            k,
+            heap: Vec::with_capacity(k),
+        }
+    }
+
+    fn threshold(&self) -> f64 {
+        if self.heap.len() < self.k {
+            f64::NEG_INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    fn push(&mut self, score: f64, id: usize) {
+        if self.heap.len() < self.k {
+            self.heap.push((score, id));
+            let mut c = self.heap.len() - 1;
+            while c > 0 {
+                let p = (c - 1) / 2;
+                if rank(&self.heap[c], &self.heap[p]).is_lt() {
+                    self.heap.swap(c, p);
+                    c = p;
+                } else {
+                    break;
+                }
+            }
+        } else if rank(&(score, id), &self.heap[0]).is_gt() {
+            self.heap[0] = (score, id);
+            let mut p = 0;
+            loop {
+                let (l, r) = (2 * p + 1, 2 * p + 2);
+                let mut m = p;
+                if l < self.heap.len() && rank(&self.heap[l], &self.heap[m]).is_lt() {
+                    m = l;
+                }
+                if r < self.heap.len() && rank(&self.heap[r], &self.heap[m]).is_lt() {
+                    m = r;
+                }
+                if m == p {
+                    break;
+                }
+                self.heap.swap(p, m);
+                p = m;
+            }
+        }
+    }
+
+    /// Candidates sorted under the canonical order (best first).
+    fn into_sorted(self) -> Vec<(usize, f64)> {
+        let mut out: Vec<(usize, f64)> = self.heap.into_iter().map(|(s, j)| (j, s)).collect();
+        out.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        out
+    }
+}
+
+impl IvfIndex {
+    /// Build the index over a store snapshot: canonicalize (O(n·r²+r³)),
+    /// quantize (O(n·cells·d) per Lloyd iteration on the pool), cap each
+    /// cell. Never touches the oracle.
+    pub fn build(store: Arc<Factored>, cfg: IvfConfig) -> Result<IvfIndex, String> {
+        let n = store.n();
+        if n == 0 {
+            return Err("cannot index an empty store".into());
+        }
+        let emb = SignedEmbedding::canonicalize(&store)?;
+        let want = if cfg.cells == 0 {
+            (n as f64).sqrt().ceil() as usize
+        } else {
+            cfg.cells
+        };
+        let k = want.clamp(1, n);
+        let mut rng = Rng::new(cfg.seed);
+        let (centroids, assign) = kmeans(emb.db(), k, cfg.kmeans_iters, &mut rng);
+        let mut cells: Vec<Cell> = (0..k)
+            .map(|c| Cell {
+                members: Vec::new(),
+                centroid: centroids.row(c).to_vec(),
+                radius: 0.0,
+            })
+            .collect();
+        for (i, &c) in assign.iter().enumerate() {
+            cells[c].members.push(i as u32);
+        }
+        for cell in &mut cells {
+            recompute_cap(cell, &emb);
+        }
+        Ok(IvfIndex {
+            store,
+            emb,
+            cells,
+            cfg,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.store.n()
+    }
+
+    pub fn cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn config(&self) -> IvfConfig {
+        self.cfg
+    }
+
+    /// The store snapshot this index answers from.
+    pub fn store(&self) -> &Arc<Factored> {
+        &self.store
+    }
+
+    /// Top-k neighbours of point `i` (excluding `i`), best-bound-first
+    /// pruned scan; scores are exact factored scores.
+    pub fn top_k(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
+        self.top_k_stats(i, k).0
+    }
+
+    /// [`Self::top_k`] plus the work counters.
+    pub fn top_k_stats(&self, i: usize, k: usize) -> (Vec<(usize, f64)>, SearchStats) {
+        let n = self.store.n();
+        assert!(i < n, "query {i} out of range for n={n}");
+        let k = k.min(n.saturating_sub(1));
+        let mut stats = SearchStats::default();
+        if !self.cfg.prune {
+            // Exact fallback: the same full scan `Factored::top_k` runs.
+            stats.cells_scanned = self.cells.len() as u64;
+            stats.scored = n.saturating_sub(1) as u64;
+            return (self.store.top_k(i, k), stats);
+        }
+        if k == 0 {
+            return (Vec::new(), stats);
+        }
+        let mut u = vec![0.0; self.emb.dim()];
+        self.emb.query_into(i, &mut u);
+        let unorm = dot(&u, &u).sqrt();
+        // Per-cell caps, scanned best-first. The relative slack (scaled
+        // to the magnitudes in play, not the possibly-cancelling cap
+        // itself) keeps the bound valid through the canonical form's
+        // floating-point reconstruction error (pinned ≤ 1e-8·‖K̃‖_F by
+        // the `index::signed` tests — up to ~1e-7 of a single score's
+        // magnitude, so 1e-6 leaves an order of headroom), so pruning
+        // skips work but never a true top-k member. It costs nothing
+        // observable: real score gaps sit orders of magnitude above it.
+        let mut order: Vec<(f64, usize)> = self
+            .cells
+            .iter()
+            .enumerate()
+            .filter(|(_, cell)| !cell.members.is_empty())
+            .map(|(c, cell)| {
+                let center = dot(&u, &cell.centroid);
+                let cnorm = dot(&cell.centroid, &cell.centroid).sqrt();
+                let raw = center + unorm * cell.radius + self.emb.gap;
+                let slack = 1e-6 * (unorm * (cnorm + cell.radius) + self.emb.gap) + 1e-12;
+                (raw + slack, c)
+            })
+            .collect();
+        order.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let li = self.store.left.row(i);
+        let mut best = TopAcc::new(k);
+        for (pos, &(bound, c)) in order.iter().enumerate() {
+            // Strictly below the kth score only: a cell whose cap *ties*
+            // the threshold may still hold an equal-scored lower-index
+            // candidate the canonical tie order prefers. With the slack-
+            // inflated caps an exact tie is measure-zero, so this costs
+            // no pruning in practice.
+            if best.heap.len() == k && bound.total_cmp(&best.threshold()).is_lt() {
+                stats.cells_pruned += (order.len() - pos) as u64;
+                break;
+            }
+            stats.cells_scanned += 1;
+            for &j in &self.cells[c].members {
+                let j = j as usize;
+                if j == i {
+                    continue;
+                }
+                stats.scored += 1;
+                best.push(dot(li, self.store.right_t.row(j)), j);
+            }
+        }
+        (best.into_sorted(), stats)
+    }
+
+    /// Extend the index with appended documents (the streaming insert
+    /// path): embed their factor rows through the frozen canonical map,
+    /// append each to its nearest cell, and widen that cell's cap.
+    /// O(m·(r·d + cells·d)) — no re-clustering; the coordinator's drift
+    /// policy triggers the full rebuild. `store` is the grown snapshot;
+    /// `left`/`right` are exactly the rows `Extension::extension_rows`
+    /// produced for it.
+    ///
+    /// Inserted rows are the *same* frozen linear function of their
+    /// landmark similarities as the build rows (`approx::extend`), so
+    /// they lie in the build rows' functional subspace and the signed
+    /// form keeps representing their symmetric scores. The residual
+    /// `gap` is recomputed from the exactly-grown factor cross-Grams
+    /// ([`SignedEmbedding::extend_gap`]) — the antisymmetric residual of
+    /// a grown asymmetric store can exceed the build-time one, and the
+    /// cap must stay valid until the drift rebuild re-canonicalizes.
+    pub fn extended(&self, store: Arc<Factored>, left: &Mat, right: &Mat) -> IvfIndex {
+        assert_eq!(
+            store.n(),
+            self.store.n() + left.rows,
+            "grown store does not match the appended rows"
+        );
+        assert_eq!(left.rows, right.rows, "appended row-count mismatch");
+        let mut emb = self.emb.clone();
+        emb.extend_gap(left, right);
+        let mut cells = self.cells.clone();
+        let new_rows = emb.embed_rows(left, right);
+        let base = self.store.n();
+        for m in 0..new_rows.rows {
+            let v = new_rows.row(m);
+            let (mut bc, mut bd) = (0usize, f64::INFINITY);
+            for (c, cell) in cells.iter().enumerate() {
+                let d = dist(v, &cell.centroid);
+                if d.total_cmp(&bd).is_lt() {
+                    (bc, bd) = (c, d);
+                }
+            }
+            cells[bc].members.push((base + m) as u32);
+            if bd > cells[bc].radius {
+                cells[bc].radius = bd;
+            }
+        }
+        emb.push_rows(&new_rows);
+        IvfIndex {
+            store,
+            emb,
+            cells,
+            cfg: self.cfg,
+        }
+    }
+
+    /// The signed embedding backing the index (tests, diagnostics).
+    pub fn embedding(&self) -> &SignedEmbedding {
+        &self.emb
+    }
+}
+
+fn dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Exact centroid (member mean) and radius of one cell.
+fn recompute_cap(cell: &mut Cell, emb: &SignedEmbedding) {
+    if cell.members.is_empty() {
+        cell.radius = 0.0;
+        return; // keep the quantizer centroid for future inserts
+    }
+    let d = emb.dim();
+    let mut c = vec![0.0; d];
+    for &j in &cell.members {
+        for (o, &x) in c.iter_mut().zip(emb.db_row(j as usize)) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / cell.members.len() as f64;
+    for o in c.iter_mut() {
+        *o *= inv;
+    }
+    cell.radius = cell
+        .members
+        .iter()
+        .map(|&j| dist(emb.db_row(j as usize), &c))
+        .fold(0.0, f64::max);
+    cell.centroid = c;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn clustered_store(n: usize, d: usize, rng: &mut Rng) -> Arc<Factored> {
+        // Four well-separated gaussian blobs: the workload IVF exists
+        // for (random centers are spread out at scale 3).
+        let centers = Mat::gaussian(4, d, rng).scale(3.0);
+        let z = Mat::from_fn(n, d, |i, t| centers.get(i % 4, t) + 0.2 * rng.normal());
+        Arc::new(Factored::from_z(z))
+    }
+
+    #[test]
+    fn pruned_matches_exact_scan_on_random_and_clustered_stores() {
+        check("ivf-pruned-exact", 8, |rng| {
+            let n = 30 + rng.below(60);
+            let store = if rng.below(2) == 0 {
+                Arc::new(Factored::from_z(Mat::gaussian(n, 5, rng)))
+            } else {
+                clustered_store(n, 5, rng)
+            };
+            let idx = IvfIndex::build(store.clone(), IvfConfig::default()).unwrap();
+            for i in (0..n).step_by(7) {
+                let (got, stats) = idx.top_k_stats(i, 10);
+                let want = store.top_k(i, 10);
+                assert_eq!(got, want, "query {i} (stats {stats:?})");
+            }
+        });
+    }
+
+    #[test]
+    fn pruning_skips_cells_on_clustered_data() {
+        let mut rng = Rng::new(3);
+        let store = clustered_store(400, 6, &mut rng);
+        let idx = IvfIndex::build(store, IvfConfig::default()).unwrap();
+        let mut total = SearchStats::default();
+        for i in (0..400).step_by(13) {
+            let (_, stats) = idx.top_k_stats(i, 5);
+            total.merge(&stats);
+        }
+        assert!(
+            total.cells_pruned > total.cells_scanned,
+            "clustered data should prune most cells: {total:?}"
+        );
+        assert!(total.scored < 31 * 399, "pruning must skip scoring work");
+    }
+
+    #[test]
+    fn prune_disabled_is_the_exact_scan() {
+        let mut rng = Rng::new(4);
+        let store = Arc::new(Factored::from_z(Mat::gaussian(50, 4, &mut rng)));
+        let cfg = IvfConfig {
+            prune: false,
+            ..IvfConfig::default()
+        };
+        let idx = IvfIndex::build(store.clone(), cfg).unwrap();
+        for i in 0..50 {
+            assert_eq!(idx.top_k(i, 7), store.top_k(i, 7));
+        }
+    }
+
+    #[test]
+    fn extension_appends_to_nearest_cell_and_stays_searchable() {
+        let mut rng = Rng::new(5);
+        let z = Mat::gaussian(40, 4, &mut rng);
+        let store = Arc::new(Factored::from_z(z.clone()));
+        let idx = IvfIndex::build(store, IvfConfig::default()).unwrap();
+        // Grow by 8 rows (symmetric store: left rows mirror right rows).
+        let extra = Mat::gaussian(8, 4, &mut rng);
+        let mut grown = z.clone();
+        for m in 0..8 {
+            grown.push_row(extra.row(m));
+        }
+        let grown = Arc::new(Factored::from_z(grown));
+        let idx2 = idx.extended(grown.clone(), &extra, &extra);
+        assert_eq!(idx2.n(), 48);
+        for i in [0, 17, 41, 47] {
+            assert_eq!(idx2.top_k(i, 6), grown.top_k(i, 6), "query {i}");
+        }
+    }
+
+    #[test]
+    fn k_clamps_and_excludes_self() {
+        let mut rng = Rng::new(6);
+        let store = Arc::new(Factored::from_z(Mat::gaussian(12, 3, &mut rng)));
+        let idx = IvfIndex::build(store, IvfConfig::default()).unwrap();
+        let top = idx.top_k(3, 99);
+        assert_eq!(top.len(), 11);
+        assert!(top.iter().all(|&(j, _)| j != 3));
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

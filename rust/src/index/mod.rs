@@ -1,0 +1,30 @@
+//! Sublinear top-k retrieval over the factored store — the serving-plane
+//! answer to "nearest neighbours under K̃" without the O(n·r) per-query
+//! row reconstruction the router's full scan pays.
+//!
+//! Layers:
+//! * [`signed`] — canonicalize any `Factored` L·Rᵀ into Kreĭn-space
+//!   signed-embedding form (K̃'s symmetric part as ⟨p,p⟩ − ⟨q,q⟩) from
+//!   one r-scale eigendecomposition; indefinite spectra (SMS shifts,
+//!   CUR) are first-class.
+//! * [`ivf`] — inverted-file index: k-means coarse quantizer (~√n
+//!   cells) over the signed embeddings, per-cell Cauchy–Schwarz score
+//!   caps, best-bound-first pruned scan against a running kth-score
+//!   threshold. `prune: false` degrades to the exact full scan,
+//!   bit-identical to `Factored::top_k`.
+//! * [`batch`] — multi-query throughput path sharded on the pool
+//!   workers, the naive `matmul_nt` scan baseline, and budgeted exact
+//!   re-ranking through the `SimOracle`.
+//!
+//! The coordinator (`coordinator::server`) owns an `Arc<IvfIndex>`
+//! snapshot next to the store: rebuilt on every store swap, extended in
+//! place on streaming inserts, and consulted for `Query::TopK` /
+//! `Query::TopKBatch` with the work counters recorded in `Metrics`.
+
+pub mod batch;
+pub mod ivf;
+pub mod signed;
+
+pub use batch::{rerank_exact, scan_batch, select_top_k, topk_batch};
+pub use ivf::{IvfConfig, IvfIndex, SearchStats};
+pub use signed::SignedEmbedding;

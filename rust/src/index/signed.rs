@@ -1,0 +1,405 @@
+//! Signed-embedding canonicalization of a [`Factored`] store.
+//!
+//! The factorizations this crate produces are *indefinite* (SMS shifts
+//! eigenvalues, CUR joins arbitrary landmark blocks), so rows of the
+//! factors are not embeddings in any inner-product space — plain
+//! metric-space indexing over them is unsound. Following the Kreĭn-space
+//! treatment of indefinite kernels (Schleif et al., PAPERS.md), every
+//! symmetric indefinite K̃ admits a canonical *signed* form
+//!
+//! ```text
+//! (K̃_ij + K̃_ji) / 2  =  ⟨p_i, p_j⟩ − ⟨q_i, q_j⟩
+//! ```
+//!
+//! computed here from one O(r³) eigendecomposition of the 2r × 2r
+//! cross-Gram of the factors (never an n × n operation — the whole
+//! canonicalization is O(n·r² + r³), within the sublinear budget):
+//! with B = [L | R] (n × 2r) and C the symmetrizing coupler, the
+//! symmetric part is S = B·C·Bᵀ; eigendecomposing H = G^{1/2}·C·G^{1/2}
+//! (G = BᵀB) yields signed directions, and Y = B·G^{−1/2}·V·|M|^{1/2}
+//! satisfies S = Y·diag(sign μ)·Yᵀ exactly on the retained spectrum.
+//!
+//! The index stores the *database view* v_j = [p_j | −q_j]; the *query
+//! view* u_i = [p_i | q_i] is the same row with the negative block
+//! flipped, so ⟨u_i, v_j⟩ recovers the symmetric score and
+//! Cauchy–Schwarz gives per-cell upper bounds (`index::ivf`). The map
+//! from factor rows to embedding rows is linear and frozen, so streaming
+//! inserts (`approx::extend`) embed in O(r·d) with no new
+//! decomposition.
+
+use crate::approx::Factored;
+use crate::linalg::{dot, eigh, Mat};
+
+/// Relative spectral cutoffs: `RCOND` for the Gram pseudo-inverse,
+/// `EIG_TOL` for discarding numerically-zero signed directions.
+const RCOND: f64 = 1e-12;
+const EIG_TOL: f64 = 1e-10;
+
+/// The canonical signed embedding of a factored store (see module docs).
+#[derive(Clone, Debug)]
+pub struct SignedEmbedding {
+    /// n x d database rows v_j = [p_j | −q_j].
+    emb: Mat,
+    /// Width of the positive block p (the first `split` columns).
+    split: usize,
+    /// r x d halves of the frozen linear map: a new document with factor
+    /// rows (l, r) embeds as l·map_left + r·map_right.
+    map_left: Mat,
+    map_right: Mat,
+    /// r x r factor cross-Grams (LᵀL, LᵀR, RᵀR) kept so streaming
+    /// extensions can recompute the antisymmetric residual of the
+    /// *grown* store exactly ([`Self::extend_gap`]) — zeros on the
+    /// symmetric fast path, where mirrored inserts keep it at 0.
+    gll: Mat,
+    glr: Mat,
+    grr: Mat,
+    /// Spectral mass dropped by the |μ| cutoff (frozen at build).
+    trunc: f64,
+    /// Entrywise upper bound on what the embedding does *not* represent:
+    /// the antisymmetric residual (L·Rᵀ − R·Lᵀ)/2 in Frobenius norm plus
+    /// the truncated spectral mass. Added to every pruning bound so
+    /// Cauchy–Schwarz stays valid for the *exact* score L_i·R_j.
+    pub gap: f64,
+}
+
+/// ‖(L·Rᵀ − R·Lᵀ)/2‖_F from the r x r cross-Grams alone:
+/// (tr(Gll·Grr) − tr(Glr·Glr)) / 2, clamped against cancellation.
+fn asym_fro(gll: &Mat, glr: &Mat, grr: &Mat) -> f64 {
+    let r = gll.rows;
+    let (mut tr_llrr, mut tr_lrlr) = (0.0, 0.0);
+    for i in 0..r {
+        for j in 0..r {
+            tr_llrr += gll.get(i, j) * grr.get(j, i);
+            tr_lrlr += glr.get(i, j) * glr.get(j, i);
+        }
+    }
+    (0.5 * (tr_llrr - tr_lrlr)).max(0.0).sqrt()
+}
+
+impl SignedEmbedding {
+    /// Canonicalize `f` into signed form. O(n·r² + r³); errors only if
+    /// the r-scale eigendecomposition fails to converge.
+    pub fn canonicalize(f: &Factored) -> Result<SignedEmbedding, String> {
+        let r = f.rank();
+        if f.symmetric || r == 0 {
+            // K̃ = Z·Zᵀ: rows of Z are already a PSD embedding (q empty).
+            return Ok(SignedEmbedding {
+                emb: f.left.clone(),
+                split: r,
+                map_left: Mat::eye(r),
+                map_right: Mat::zeros(r, r),
+                gll: Mat::zeros(r, r),
+                glr: Mat::zeros(r, r),
+                grr: Mat::zeros(r, r),
+                trunc: 0.0,
+                gap: 0.0,
+            });
+        }
+        let m2 = 2 * r;
+        // r x r cross-Grams of the factors (bitwise-symmetric products).
+        let gll = f.left.matmul_tn(&f.left);
+        let glr = f.left.matmul_tn(&f.right_t);
+        let grr = f.right_t.matmul_tn(&f.right_t);
+        // The antisymmetric part of the score the symmetric embedding
+        // cannot see, computed from the Grams alone.
+        let asym = asym_fro(&gll, &glr, &grr);
+        // G = BᵀB for B = [L | R], assembled blockwise.
+        let mut g = Mat::zeros(m2, m2);
+        for i in 0..r {
+            for j in 0..r {
+                g.set(i, j, gll.get(i, j));
+                g.set(i, r + j, glr.get(i, j));
+                g.set(r + i, j, glr.get(j, i));
+                g.set(r + i, r + j, grr.get(i, j));
+            }
+        }
+        let eg = eigh(&g)?;
+        let gmax = eg.vals.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        let cut = RCOND * gmax;
+        let g_half = eg.apply_spectral(|l| if l > cut { l.sqrt() } else { 0.0 });
+        let g_inv_half = eg.inv_sqrt(RCOND);
+        // Symmetric coupler: B·C·Bᵀ = (L·Rᵀ + R·Lᵀ)/2.
+        let mut coupler = Mat::zeros(m2, m2);
+        for t in 0..r {
+            coupler.set(t, r + t, 0.5);
+            coupler.set(r + t, t, 0.5);
+        }
+        let h = g_half.matmul(&coupler).matmul(&g_half).symmetrized();
+        let eh = eigh(&h)?;
+        let mu_max = eh.vals.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        let tol = EIG_TOL * mu_max;
+        // Retained signed directions: positives (descending |μ|) then
+        // negatives (descending |μ|); eigh returns ascending values.
+        let pos: Vec<usize> = (0..m2).rev().filter(|&c| eh.vals[c] > tol).collect();
+        let neg: Vec<usize> = (0..m2).filter(|&c| eh.vals[c] < -tol).collect();
+        let trunc_mass: f64 = eh.vals.iter().map(|&v| v.abs()).filter(|&a| a <= tol).sum();
+        let split = pos.len();
+        let d = pos.len() + neg.len();
+        // map = G^{−1/2}·V_kept·|M|^{1/2}, with the database sign (−1 on
+        // the q block) folded into the negative columns.
+        let gv = g_inv_half.matmul(&eh.vecs);
+        let mut map = Mat::zeros(m2, d);
+        for (co, &ci) in pos.iter().chain(neg.iter()).enumerate() {
+            let s = eh.vals[ci].abs().sqrt() * if co < split { 1.0 } else { -1.0 };
+            for ri in 0..m2 {
+                map.set(ri, co, gv.get(ri, ci) * s);
+            }
+        }
+        let rows_top: Vec<usize> = (0..r).collect();
+        let rows_bot: Vec<usize> = (r..m2).collect();
+        let map_left = map.select_rows(&rows_top);
+        let map_right = map.select_rows(&rows_bot);
+        let emb = f.left.matmul(&map_left).add(&f.right_t.matmul(&map_right));
+        Ok(SignedEmbedding {
+            emb,
+            split,
+            map_left,
+            map_right,
+            gll,
+            glr,
+            grr,
+            trunc: trunc_mass,
+            gap: asym + trunc_mass,
+        })
+    }
+
+    /// Points embedded.
+    pub fn n(&self) -> usize {
+        self.emb.rows
+    }
+
+    /// Embedding width d = dim(p) + dim(q).
+    pub fn dim(&self) -> usize {
+        self.emb.cols
+    }
+
+    /// Width of the positive block p.
+    pub fn pos_dim(&self) -> usize {
+        self.split
+    }
+
+    /// Width of the negative block q.
+    pub fn neg_dim(&self) -> usize {
+        self.emb.cols - self.split
+    }
+
+    /// Database rows v_j (the space the coarse quantizer clusters).
+    pub fn db(&self) -> &Mat {
+        &self.emb
+    }
+
+    /// Database row v_j = [p_j | −q_j].
+    pub fn db_row(&self, j: usize) -> &[f64] {
+        self.emb.row(j)
+    }
+
+    /// Write the query view u_i = [p_i | q_i] into `out` (length `dim`):
+    /// the database row with the negative block flipped, so
+    /// ⟨u_i, v_j⟩ = ⟨p_i,p_j⟩ − ⟨q_i,q_j⟩.
+    pub fn query_into(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim());
+        out.copy_from_slice(self.emb.row(i));
+        for o in out[self.split..].iter_mut() {
+            *o = -*o;
+        }
+    }
+
+    /// Symmetric score ⟨u_i, v_j⟩ = (K̃_ij + K̃_ji)/2 (tests, bounds).
+    pub fn sym_score(&self, i: usize, j: usize) -> f64 {
+        let (vi, vj) = (self.emb.row(i), self.emb.row(j));
+        let head = dot(&vi[..self.split], &vj[..self.split]);
+        let tail = dot(&vi[self.split..], &vj[self.split..]);
+        head - tail
+    }
+
+    /// Embed appended documents from their factor rows (the streaming
+    /// extension path): database rows, one per input row, no new
+    /// decomposition.
+    pub fn embed_rows(&self, left: &Mat, right: &Mat) -> Mat {
+        left.matmul(&self.map_left).add(&right.matmul(&self.map_right))
+    }
+
+    /// Append pre-embedded database rows (see [`Self::embed_rows`]).
+    pub fn push_rows(&mut self, rows: &Mat) {
+        assert_eq!(rows.cols, self.dim(), "embedding width mismatch");
+        for m in 0..rows.rows {
+            self.emb.push_row(rows.row(m));
+        }
+    }
+
+    /// Fold appended factor rows into the residual accounting: the
+    /// factor cross-Grams grow exactly (Gᵀ sums are additive over rows),
+    /// so the grown store's antisymmetric Frobenius residual is
+    /// recomputed, not guessed. Mirrored inserts on a symmetric store
+    /// keep all three Grams identical, so the gap stays exactly 0 there.
+    pub fn extend_gap(&mut self, left: &Mat, right: &Mat) {
+        self.gll = self.gll.add(&left.matmul_tn(left));
+        self.glr = self.glr.add(&left.matmul_tn(right));
+        self.grr = self.grr.add(&right.matmul_tn(right));
+        self.gap = asym_fro(&self.gll, &self.glr, &self.grr) + self.trunc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx;
+    use crate::sim::synthetic::NearPsdOracle;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn sym_entry(f: &Factored, i: usize, j: usize) -> f64 {
+        0.5 * (f.entry(i, j) + f.entry(j, i))
+    }
+
+    #[test]
+    fn symmetric_store_embeds_as_its_left_factor() {
+        let mut rng = Rng::new(1);
+        let f = Factored::from_z(Mat::gaussian(10, 4, &mut rng));
+        let e = SignedEmbedding::canonicalize(&f).unwrap();
+        assert_eq!(e.pos_dim(), 4);
+        assert_eq!(e.neg_dim(), 0);
+        assert_eq!(e.gap, 0.0);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((e.sym_score(i, j) - f.entry(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn signed_form_reproduces_symmetric_part_of_random_factors() {
+        check("signed-form-random", 10, |rng| {
+            let n = 8 + rng.below(20);
+            let r = 2 + rng.below(4);
+            let f = Factored::new(Mat::gaussian(n, r, rng), Mat::gaussian(n, r, rng));
+            let e = SignedEmbedding::canonicalize(&f).unwrap();
+            let scale = f.to_dense().frobenius_norm().max(1.0);
+            for i in 0..n {
+                for j in 0..n {
+                    let err = (e.sym_score(i, j) - sym_entry(&f, i, j)).abs();
+                    assert!(err < 1e-8 * scale, "({i},{j}) err {err}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gap_bounds_the_antisymmetric_residual() {
+        check("signed-gap-bound", 8, |rng| {
+            let n = 6 + rng.below(12);
+            let r = 2 + rng.below(3);
+            let f = Factored::new(Mat::gaussian(n, r, rng), Mat::gaussian(n, r, rng));
+            let e = SignedEmbedding::canonicalize(&f).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    let asym = 0.5 * (f.entry(i, j) - f.entry(j, i)).abs();
+                    assert!(
+                        asym <= e.gap + 1e-9,
+                        "({i},{j}) antisymmetric part {asym} > gap {}",
+                        e.gap
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn indefinite_store_gets_a_negative_block() {
+        // K̃ = Y·diag(1, 1, −1)·Yᵀ is symmetric indefinite: the canonical
+        // form must discover a genuinely signed embedding for it.
+        let mut rng = Rng::new(9);
+        let y = Mat::gaussian(30, 3, &mut rng);
+        let mut right = y.clone();
+        for i in 0..30 {
+            let row = right.row_mut(i);
+            row[2] = -row[2];
+        }
+        let f = Factored::new(y, right);
+        let e = SignedEmbedding::canonicalize(&f).unwrap();
+        assert!(e.neg_dim() > 0, "indefinite spectrum needs a q block");
+        assert!(e.pos_dim() > 0);
+        let scale = f.to_dense().frobenius_norm().max(1.0);
+        for i in 0..30 {
+            for j in 0..30 {
+                let err = (e.sym_score(i, j) - sym_entry(&f, i, j)).abs();
+                assert!(err < 1e-8 * scale, "({i},{j}) err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn cur_store_canonicalizes_within_gap() {
+        // A real CUR factorization (asymmetric L·Rᵀ): the signed form
+        // must reproduce the symmetric part and confine the rest to gap.
+        let mut rng = Rng::new(11);
+        let o = NearPsdOracle::new(50, 6, 0.5, &mut rng);
+        let f = approx::sicur(&o, 10, 2.0, &mut rng).unwrap();
+        let e = SignedEmbedding::canonicalize(&f).unwrap();
+        let scale = f.to_dense().frobenius_norm().max(1.0);
+        for i in 0..50 {
+            for j in 0..50 {
+                let err = (e.sym_score(i, j) - sym_entry(&f, i, j)).abs();
+                assert!(err < 1e-8 * scale, "sym ({i},{j}) err {err}");
+                let asym = 0.5 * (f.entry(i, j) - f.entry(j, i)).abs();
+                assert!(asym <= e.gap + 1e-9 * scale, "asym ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn extend_gap_tracks_grown_antisymmetric_residual() {
+        let mut rng = Rng::new(6);
+        let (n, m, r) = (20usize, 6usize, 3usize);
+        let l0 = Mat::gaussian(n, r, &mut rng);
+        let r0 = Mat::gaussian(n, r, &mut rng);
+        let mut e = SignedEmbedding::canonicalize(&Factored::new(l0.clone(), r0.clone())).unwrap();
+        let lx = Mat::gaussian(m, r, &mut rng);
+        let rx = Mat::gaussian(m, r, &mut rng);
+        e.extend_gap(&lx, &rx);
+        // The extended gap must cap every antisymmetric entry of the
+        // *grown* store (the invariant pruning relies on)...
+        let (mut lg, mut rg) = (l0, r0);
+        for t in 0..m {
+            lg.push_row(lx.row(t));
+            rg.push_row(rx.row(t));
+        }
+        let grown = Factored::new(lg, rg);
+        for i in 0..n + m {
+            for j in 0..n + m {
+                let a = 0.5 * (grown.entry(i, j) - grown.entry(j, i)).abs();
+                assert!(a <= e.gap + 1e-9, "({i},{j}) asym {a} > gap {}", e.gap);
+            }
+        }
+        // ...and match a from-scratch canonicalization's residual (same
+        // Gram formula, different accumulation order).
+        let scratch = SignedEmbedding::canonicalize(&grown).unwrap();
+        assert!(
+            (e.gap - scratch.gap).abs() <= 1e-8 * (1.0 + scratch.gap),
+            "extended gap {} vs from-scratch {}",
+            e.gap,
+            scratch.gap
+        );
+        // Mirrored growth on a symmetric store keeps the gap at exactly 0.
+        let mut rng2 = Rng::new(7);
+        let z = Mat::gaussian(10, 3, &mut rng2);
+        let mut sym = SignedEmbedding::canonicalize(&Factored::from_z(z)).unwrap();
+        let extra = Mat::gaussian(4, 3, &mut rng2);
+        sym.extend_gap(&extra, &extra);
+        assert_eq!(sym.gap, 0.0);
+    }
+
+    #[test]
+    fn embed_rows_matches_build_time_embedding() {
+        let mut rng = Rng::new(4);
+        let (n, r) = (20, 3);
+        let left = Mat::gaussian(n, r, &mut rng);
+        let right = Mat::gaussian(n, r, &mut rng);
+        let f = Factored::new(left.clone(), right.clone());
+        let e = SignedEmbedding::canonicalize(&f).unwrap();
+        // Re-embedding the build rows through the frozen map must land on
+        // the stored embeddings exactly (same linear map, same kernels).
+        let again = e.embed_rows(&left, &right);
+        assert!(again.max_abs_diff(e.db()) < 1e-10);
+    }
+}

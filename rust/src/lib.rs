@@ -16,6 +16,7 @@
 pub mod approx;
 pub mod coordinator;
 pub mod data;
+pub mod index;
 pub mod linalg;
 pub mod opt;
 pub mod runtime;

@@ -1,9 +1,17 @@
-//! Average-linkage agglomerative clustering with a similarity threshold —
-//! the clustering step of Cattan et al. 2020 used for cross-document
-//! coreference (Sec. 4.3). Lance-Williams updates on a dense similarity
-//! matrix; merging stops when the best pair falls below the threshold.
+//! Clustering for the downstream tasks and the serving index:
+//!
+//! * [`average_linkage`] — agglomerative clustering with a similarity
+//!   threshold, the coreference step of Cattan et al. 2020 (Sec. 4.3).
+//!   Lance-Williams updates on a dense similarity matrix.
+//! * [`kmeans`] — Lloyd's algorithm with k-means++ seeding over row
+//!   points, the coarse quantizer of the top-k retrieval index
+//!   (`index::ivf`). The assignment step is sharded on the pool workers
+//!   (points are independent, so results are bit-identical for every
+//!   worker count).
 
 use crate::linalg::Mat;
+use crate::util::pool;
+use crate::util::rng::Rng;
 
 /// Cluster `sim` (n x n similarity matrix, symmetric) with average
 /// linkage; stop when max inter-cluster similarity < `threshold`.
@@ -74,6 +82,90 @@ pub fn average_linkage(sim: &Mat, threshold: f64) -> Vec<usize> {
         .collect()
 }
 
+/// Squared Euclidean distance between two equal-length points.
+#[inline]
+fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Index of the centroid closest to `p` (ties broken by lowest index, so
+/// assignment is deterministic for every worker count).
+fn nearest_centroid(p: &[f64], centroids: &Mat) -> usize {
+    let mut best = (f64::INFINITY, 0usize);
+    for c in 0..centroids.rows {
+        let d = dist_sq(p, centroids.row(c));
+        if d.total_cmp(&best.0) == std::cmp::Ordering::Less {
+            best = (d, c);
+        }
+    }
+    best.1
+}
+
+/// Lloyd's k-means over the rows of `points` with k-means++ seeding.
+/// Returns (centroids k x d, assignment per point). `k` is clamped to
+/// [1, n]; empty clusters keep their previous centroid. The O(n·k·d)
+/// assignment step is sharded across the pool workers; every other step
+/// is deterministic given `rng`, so the result is bit-identical for
+/// every worker count.
+pub fn kmeans(points: &Mat, k: usize, iters: usize, rng: &mut Rng) -> (Mat, Vec<usize>) {
+    let (n, d) = (points.rows, points.cols);
+    assert!(n > 0, "kmeans needs at least one point");
+    let k = k.clamp(1, n);
+    // k-means++ seeding: first centroid uniform, the rest proportional to
+    // squared distance from the chosen set.
+    let mut centroids = Mat::zeros(k, d);
+    centroids.row_mut(0).copy_from_slice(points.row(rng.below(n)));
+    let mut d2: Vec<f64> = (0..n).map(|i| dist_sq(points.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total > 0.0 && total.is_finite() {
+            rng.weighted(&d2)
+        } else {
+            rng.below(n) // all points coincide (or degenerate): uniform
+        };
+        centroids.row_mut(c).copy_from_slice(points.row(pick));
+        for (i, dd) in d2.iter_mut().enumerate() {
+            *dd = dd.min(dist_sq(points.row(i), centroids.row(c)));
+        }
+    }
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters.max(1) {
+        // Assignment: independent per point, sharded on the pool.
+        let workers = pool::auto_workers(n * k * d, 1 << 18);
+        let chunks = pool::map_chunks(workers, n, 1, |r| {
+            r.map(|i| nearest_centroid(points.row(i), &centroids))
+                .collect::<Vec<usize>>()
+        });
+        let next: Vec<usize> = chunks.into_iter().flatten().collect();
+        let moved = next != assign;
+        assign = next;
+        // Update: mean of each cluster's members.
+        let mut sums = Mat::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for (i, &c) in assign.iter().enumerate() {
+            counts[c] += 1;
+            let row = sums.row_mut(c);
+            for (s, &x) in row.iter_mut().zip(points.row(i)) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                let dst = centroids.row_mut(c);
+                dst.copy_from_slice(sums.row(c));
+                for o in dst.iter_mut() {
+                    *o *= inv;
+                }
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    (centroids, assign)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +209,48 @@ mod tests {
         let got = average_linkage(&sim, 10.0);
         let distinct: std::collections::HashSet<usize> = got.iter().copied().collect();
         assert_eq!(distinct.len(), 12);
+    }
+
+    fn blob_points(blocks: &[usize], spread: f64, rng: &mut Rng) -> Mat {
+        let d = 4;
+        let centers: Vec<Vec<f64>> = (0..4)
+            .map(|c| (0..d).map(|t| ((c * d + t) as f64) * 3.0).collect())
+            .collect();
+        Mat::from_fn(blocks.len(), d, |i, t| {
+            centers[blocks[i]][t] + spread * rng.normal()
+        })
+    }
+
+    #[test]
+    fn kmeans_recovers_separated_blobs() {
+        let mut rng = Rng::new(4);
+        let blocks: Vec<usize> = (0..40).map(|i| i % 4).collect();
+        let pts = blob_points(&blocks, 0.05, &mut rng);
+        let (centroids, assign) = kmeans(&pts, 4, 20, &mut rng);
+        assert_eq!(centroids.rows, 4);
+        assert_eq!(assign.len(), 40);
+        for i in 0..40 {
+            for j in 0..40 {
+                assert_eq!(
+                    assign[i] == assign[j],
+                    blocks[i] == blocks[j],
+                    "pair ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_clamps_k_and_is_worker_invariant() {
+        let mut rng = Rng::new(5);
+        let pts = Mat::gaussian(6, 3, &mut rng);
+        let (c, a) = kmeans(&pts, 50, 5, &mut Rng::new(9));
+        assert_eq!(c.rows, 6, "k must clamp to n");
+        assert_eq!(a.len(), 6);
+        let serial = crate::util::pool::with_workers(1, || kmeans(&pts, 3, 8, &mut Rng::new(11)));
+        let parallel = crate::util::pool::with_workers(4, || kmeans(&pts, 3, 8, &mut Rng::new(11)));
+        assert_eq!(serial.1, parallel.1, "assignment must be worker-invariant");
+        assert_eq!(serial.0.data, parallel.0.data, "centroids must be worker-invariant");
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod coref_metrics;
 pub mod metrics;
 pub mod svm;
 
-pub use cluster::average_linkage;
+pub use cluster::{average_linkage, kmeans};
 pub use coref_metrics::{b_cubed, ceaf_e, conll_f1, muc};
 pub use metrics::{accuracy, calibrate_threshold, f1, pearson, spearman};
 pub use svm::{standardize, LinearSvm, SvmConfig};

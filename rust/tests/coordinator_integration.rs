@@ -8,6 +8,7 @@ use std::time::Duration;
 use simmat::coordinator::{
     schedule, BatchService, Method, Query, Response, SampleMode, SimilarityService,
 };
+use simmat::index::IvfConfig;
 use simmat::linalg::Mat;
 use simmat::sim::synthetic::NearPsdOracle;
 use simmat::sim::{DenseOracle, SimOracle};
@@ -141,6 +142,59 @@ fn similarity_service_concurrent_clients_exact_responses_and_metrics() {
         svc.metrics.queries.load(Ordering::Relaxed),
         (THREADS * QUERIES) as u64,
         "every query must be counted exactly once"
+    );
+}
+
+#[test]
+fn indexed_topk_under_concurrent_clients_counts_and_answers_exactly() {
+    // Multi-client stress through the retrieval index: every TopK answer
+    // must match the exact store scan, and the index counters must
+    // account for every query exactly once — topk_queries equal to the
+    // query count, and (scanned + pruned) cells within [1, cells] per
+    // query.
+    const THREADS: usize = 6;
+    const QUERIES: usize = 40;
+    let mut rng = Rng::new(31);
+    let n = 90;
+    let o = NearPsdOracle::new(n, 8, 0.3, &mut rng);
+    let svc = Arc::new(SimilarityService::build(&o, Method::Nystrom, 20, 64, &mut rng).unwrap());
+    svc.enable_index(IvfConfig::default()).unwrap();
+    let reference = svc.factored();
+    let cells = svc.index().unwrap().cells() as u64;
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let svc = Arc::clone(&svc);
+        let reference = reference.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(2000 + t as u64);
+            for q in 0..QUERIES {
+                let (i, k) = (rng.below(n), 1 + rng.below(12));
+                match svc.query(&Query::TopK(i, k)).unwrap() {
+                    Response::Ranked(r) => {
+                        assert_eq!(r, reference.top_k(i, k), "thread {t} query {q}")
+                    }
+                    other => panic!("unexpected response {other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = (THREADS * QUERIES) as u64;
+    assert_eq!(svc.metrics.topk_queries.load(Ordering::Relaxed), total);
+    assert_eq!(svc.metrics.queries.load(Ordering::Relaxed), total);
+    let scanned = svc.metrics.cells_scanned.load(Ordering::Relaxed);
+    let pruned = svc.metrics.cells_pruned.load(Ordering::Relaxed);
+    assert!(scanned >= total, "every query scans at least one cell");
+    assert!(
+        scanned + pruned <= total * cells,
+        "no query may touch a cell twice: {scanned}+{pruned} > {total}x{cells}"
+    );
+    assert_eq!(
+        svc.metrics.rerank_calls.load(Ordering::Relaxed),
+        0,
+        "no re-ranking was requested"
     );
 }
 

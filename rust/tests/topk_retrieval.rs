@@ -1,0 +1,264 @@
+//! Retrieval-index invariants: pruning-disabled IVF is bit-identical to
+//! the router's exact scan for every method, pruned search loses nothing
+//! against the factored store, recall@10 against the exact oracle scan
+//! stays high on the synthetic workloads (and re-ranking repairs the
+//! head), and the index/store pair stays self-consistent across a
+//! drift-triggered rebuild swap under concurrent readers.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use simmat::approx::Factored;
+use simmat::coordinator::{
+    Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig,
+};
+use simmat::index::{select_top_k, IvfConfig, IvfIndex};
+use simmat::linalg::Mat;
+use simmat::sim::synthetic::{NearPsdOracle, RbfOracle};
+use simmat::sim::{PrefixOracle, SimOracle};
+use simmat::util::prop::check;
+use simmat::util::rng::Rng;
+use simmat::workloads::streaming_workload;
+
+/// (a) With pruning disabled the IVF path must reproduce
+/// `Factored::top_k` bit-for-bit for every one of the seven methods.
+#[test]
+fn pruning_disabled_is_bit_identical_to_exact_scan_for_all_methods() {
+    let mut rng = Rng::new(1);
+    let o = NearPsdOracle::new(80, 8, 0.4, &mut rng);
+    let cfg = IvfConfig {
+        prune: false,
+        ..IvfConfig::default()
+    };
+    for method in Method::ALL {
+        let f = Arc::new(method.build(&o, 16, &mut rng).unwrap());
+        let idx = IvfIndex::build(f.clone(), cfg).unwrap();
+        for i in (0..80).step_by(3) {
+            for k in [1, 5, 17] {
+                assert_eq!(
+                    idx.top_k(i, k),
+                    f.top_k(i, k),
+                    "{} query {i} k {k}",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+/// Pruned search must also agree with the exact store scan — the cell
+/// caps are true upper bounds, so pruning skips work, not results.
+#[test]
+fn pruned_search_loses_nothing_for_all_methods() {
+    check("pruned-lossless", 6, |rng| {
+        let n = 50 + rng.below(50);
+        let o = NearPsdOracle::new(n, 6, 0.4, rng);
+        for method in Method::ALL {
+            let f = Arc::new(method.build(&o, 12, rng).unwrap());
+            let idx = IvfIndex::build(f.clone(), IvfConfig::default()).unwrap();
+            for i in (0..n).step_by(11) {
+                assert_eq!(idx.top_k(i, 10), f.top_k(i, 10), "{} q{i}", method.name());
+            }
+        }
+    });
+}
+
+fn recall_at_k(got: &[(usize, f64)], want: &[(usize, f64)]) -> f64 {
+    let want_ids: Vec<usize> = want.iter().map(|&(j, _)| j).collect();
+    let hit = got.iter().filter(|&&(j, _)| want_ids.contains(&j)).count();
+    hit as f64 / want.len().max(1) as f64
+}
+
+/// (b) recall@10 against the exact oracle scan on the synthetic
+/// workloads, with the serving defaults.
+#[test]
+fn recall_at_10_vs_exact_oracle_scan_on_synthetic_workloads() {
+    let mut rng = Rng::new(7);
+    let near = NearPsdOracle::new(240, 6, 0.02, &mut rng);
+    let rbf = RbfOracle::new(240, 4, 2.5, &mut rng);
+    let workloads: [(&str, &dyn SimOracle); 2] = [("near-psd", &near), ("rbf", &rbf)];
+    for (name, oracle) in workloads {
+        let n = oracle.n();
+        let k_exact = oracle.materialize();
+        let f = Arc::new(Method::SmsNystrom.build(oracle, 100, &mut rng).unwrap());
+        let idx = IvfIndex::build(f, IvfConfig::default()).unwrap();
+        let queries: Vec<usize> = (0..n).step_by(9).collect();
+        let mut recall = 0.0;
+        for &i in &queries {
+            let got = idx.top_k(i, 10);
+            let want = select_top_k(k_exact.row(i), i, 10);
+            recall += recall_at_k(&got, &want) / queries.len() as f64;
+        }
+        assert!(
+            recall >= 0.95,
+            "{name}: recall@10 {recall:.3} < 0.95 vs the exact oracle scan"
+        );
+    }
+}
+
+/// Exact re-ranking through the oracle repairs the head of the ranking:
+/// recall@10 after rerank is at least as good as the raw index ranking,
+/// and the surviving scores are exact oracle scores.
+#[test]
+fn rerank_improves_head_and_returns_exact_scores() {
+    let mut rng = Rng::new(8);
+    let o = NearPsdOracle::new(200, 6, 0.1, &mut rng);
+    let k_exact = o.dense().clone();
+    // A deliberately coarse store so the index alone makes head mistakes.
+    let svc = SimilarityService::build(&o, Method::Nystrom, 14, 64, &mut rng).unwrap();
+    svc.enable_index(IvfConfig::default()).unwrap();
+    svc.set_rerank(40);
+    let queries: Vec<usize> = (0..200).step_by(17).collect();
+    let plain = match svc.query(&Query::TopKBatch(queries.clone(), 10)).unwrap() {
+        Response::RankedBatch(lists) => lists,
+        _ => panic!(),
+    };
+    let reranked = svc.topk_rerank(&o, &queries, 10).unwrap();
+    let (mut r_plain, mut r_rerank) = (0.0, 0.0);
+    for (t, &i) in queries.iter().enumerate() {
+        let want = select_top_k(k_exact.row(i), i, 10);
+        r_plain += recall_at_k(&plain[t], &want) / queries.len() as f64;
+        r_rerank += recall_at_k(&reranked[t], &want) / queries.len() as f64;
+        for &(j, s) in &reranked[t] {
+            assert_eq!(s, k_exact.get(i, j), "reranked score must be exact");
+        }
+    }
+    assert!(
+        r_rerank >= r_plain - 1e-9,
+        "rerank must not hurt recall: {r_rerank:.3} vs {r_plain:.3}"
+    );
+    assert_eq!(
+        svc.metrics.rerank_calls.load(Relaxed),
+        (queries.len() * 40) as u64,
+        "every re-rank candidate is one metered Δ call"
+    );
+}
+
+/// (c) Index/store consistency across a streaming rebuild swap under
+/// concurrent readers: top-k responses stay well-formed through inserts
+/// and the drift-triggered re-quantization, and after the stream the
+/// index snapshot matches the store exactly.
+#[test]
+fn index_stays_consistent_across_rebuild_swap_under_concurrent_readers() {
+    let w = streaming_workload(0.5, 11);
+    let full = &w.oracle;
+    let (n, n0) = (w.n_total(), w.n0);
+    let mut rng = Rng::new(11);
+    let s1 = (n0 / 5).max(8);
+    let prefix = PrefixOracle::new(full, n0);
+    let cfg = StreamConfig {
+        probe_pairs: 6 * s1,
+        epoch: 10,
+        policy: RebuildPolicy {
+            drift_threshold: 0.25,
+            min_inserts: 8,
+        },
+    };
+    let svc = Arc::new(
+        SimilarityService::build_streaming(&prefix, Method::SmsNystrom, s1, 64, cfg, &mut rng)
+            .unwrap(),
+    );
+    svc.enable_index(IvfConfig::default()).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for t in 0..4u64 {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(700 + t);
+            let mut served = 0u64;
+            while !stop.load(Relaxed) {
+                let i = rng.below(n0); // build-time docs stay valid forever
+                match svc.query(&Query::TopK(i, 5)).unwrap() {
+                    Response::Ranked(r) => {
+                        assert_eq!(r.len(), 5);
+                        assert!(r.iter().all(|&(j, s)| j != i && s.is_finite()));
+                        for pair in r.windows(2) {
+                            assert!(pair[0].1 >= pair[1].1, "ranking must be sorted");
+                        }
+                    }
+                    _ => panic!("unexpected response shape"),
+                }
+                served += 1;
+            }
+            served
+        }));
+    }
+    let mut id = n0;
+    while id < n {
+        let hi = (id + 5).min(n);
+        let ids: Vec<usize> = (id..hi).collect();
+        svc.insert_batch(full, &ids).unwrap();
+        id = hi;
+    }
+    stop.store(true, Relaxed);
+    let total_served: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total_served > 0, "readers must be served throughout growth");
+    assert!(
+        svc.metrics.rebuilds.load(Relaxed) >= 1,
+        "the drift rebuild (and its index re-quantization) must fire"
+    );
+    // Post-stream consistency: one snapshot, bit-identical answers.
+    let idx = svc.index().unwrap();
+    assert_eq!(idx.n(), n, "index must cover the grown corpus");
+    assert_eq!(idx.store().n(), svc.factored().n());
+    let reference = svc.factored();
+    for i in [0, n0 - 1, n0, n - 1] {
+        match svc.query(&Query::TopK(i, 8)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r, reference.top_k(i, 8), "query {i}"),
+            _ => panic!(),
+        }
+    }
+    assert!(svc.metrics.topk_queries.load(Relaxed) >= total_served);
+}
+
+/// Exact score ties (duplicate documents) resolve identically on every
+/// serving path: the canonical order is score descending, index
+/// ascending, for the exact scan, the batched scan, and the pruned IVF
+/// scan alike.
+#[test]
+fn duplicate_documents_tie_break_identically_across_paths() {
+    let mut rng = Rng::new(19);
+    let base = Mat::gaussian(20, 4, &mut rng);
+    // Triplicate every document: every score appears three times.
+    let mut z = Mat::zeros(0, 4);
+    for _rep in 0..3 {
+        for i in 0..20 {
+            z.push_row(base.row(i));
+        }
+    }
+    let store = Arc::new(Factored::from_z(z));
+    let idx = IvfIndex::build(store.clone(), IvfConfig::default()).unwrap();
+    for i in [0, 7, 25, 59] {
+        let want = store.top_k(i, 12);
+        assert_eq!(idx.top_k(i, 12), want, "pruned path, query {i}");
+        let row = store.row(i);
+        assert_eq!(select_top_k(&row, i, 12), want, "batched path, query {i}");
+        // Ties must come back lowest-index-first.
+        for pair in want.windows(2) {
+            assert!(
+                pair[0].1 > pair[1].1 || (pair[0].1 == pair[1].1 && pair[0].0 < pair[1].0),
+                "canonical tie order violated at {pair:?}"
+            );
+        }
+    }
+}
+
+/// The naive batched scan and the single-query scan agree through the
+/// router — `TopKBatch` without an index is the sharded `matmul_nt`
+/// path, whose scores are the same row dots bit-for-bit.
+#[test]
+fn routed_batch_scan_matches_single_queries_without_index() {
+    let mut rng = Rng::new(14);
+    let f = Factored::from_z(Mat::gaussian(90, 7, &mut rng));
+    let ids: Vec<usize> = (0..90).step_by(4).collect();
+    match simmat::coordinator::route(&f, &Query::TopKBatch(ids.clone(), 6)).unwrap() {
+        Response::RankedBatch(lists) => {
+            for (t, &i) in ids.iter().enumerate() {
+                assert_eq!(lists[t], f.top_k(i, 6), "query {i}");
+            }
+        }
+        _ => panic!(),
+    }
+}
