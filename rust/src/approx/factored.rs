@@ -3,7 +3,7 @@
 //! keeps both entry operands row-contiguous, which is the hot layout for
 //! the coordinator's Entry/Row/TopK queries.
 
-use crate::linalg::{dot, Mat};
+use crate::linalg::{dot, kernel, Mat};
 
 #[derive(Clone, Debug)]
 pub struct Factored {
@@ -59,12 +59,12 @@ impl Factored {
     /// Write K̃_{i,·} into `out` (`out.len() == n`) without allocating —
     /// the steady-state row/top-k serving path (callers reuse the buffer
     /// across queries; mirrors the oracle `eval_batch_into` pattern).
+    /// Runs the column-paired kernel [`kernel::gemv_nt`]; every entry is
+    /// still `dot(left.row(i), right_t.row(j))` bit-for-bit, the order
+    /// every other serving path (batched scan, pruned index) shares.
     pub fn row_into(&self, i: usize, out: &mut [f64]) {
         assert_eq!(out.len(), self.n(), "row_into buffer length mismatch");
-        let li = self.left.row(i);
-        for (j, o) in out.iter_mut().enumerate() {
-            *o = dot(li, self.right_t.row(j));
-        }
+        kernel::gemv_nt(self.left.row(i), &self.right_t, out);
     }
 
     /// Embedding of point i (rows of the left factor; for symmetric

@@ -25,6 +25,7 @@
 use std::sync::Arc;
 
 use crate::approx::Factored;
+use crate::linalg::kernel::dot_f32;
 use crate::linalg::{dot, Mat};
 use crate::tasks::cluster::kmeans;
 use crate::util::rng::Rng;
@@ -47,6 +48,15 @@ pub struct IvfConfig {
     pub rerank: usize,
     /// Quantizer seed (index builds are deterministic given the store).
     pub seed: u64,
+    /// Opt-in f32 fast scan: keep a parallel f32 copy of the signed
+    /// embeddings and centroids, evaluate cell caps and candidate
+    /// rankings in f32 (with an explicit rounding-error margin widening
+    /// every Cauchy–Schwarz cap), and re-score the surviving candidates
+    /// with the exact f64 factor dot — so the returned top-k is still
+    /// bit-identical to the exact scan (pinned by
+    /// `tests/kernel_equivalence.rs`). Only affects the pruned path;
+    /// `prune: false` stays the exact full scan.
+    pub fast_scan: bool,
 }
 
 impl Default for IvfConfig {
@@ -57,6 +67,7 @@ impl Default for IvfConfig {
             prune: true,
             rerank: 0,
             seed: 0x1DE,
+            fast_scan: false,
         }
     }
 }
@@ -86,6 +97,75 @@ struct Cell {
     radius: f64,
 }
 
+/// The opt-in f32 mirror of the embedding geometry, laid out for the
+/// scan: each cell's member rows are packed contiguously so the f32
+/// scoring pass streams one block instead of gathering scattered f64
+/// rows. f32 numbers are only ever used to *skip* work — a candidate (or
+/// cell) survives unless its f32 upper bound (score + rounding margin +
+/// gap) falls strictly below the running f64 threshold, and survivors
+/// are re-scored with the exact f64 factor dot — so the returned top-k
+/// is bit-identical to the f64 scan.
+#[derive(Clone, Debug)]
+struct FastScan {
+    dim: usize,
+    /// Per cell: member embeddings (database view), packed row-major.
+    blocks: Vec<Vec<f32>>,
+    /// Per cell: per-member f64 embedding norms ‖v_j‖ (margin scale).
+    norms: Vec<Vec<f64>>,
+    /// Per cell: f32 centroid for the f32 cap inner product.
+    centroids: Vec<Vec<f32>>,
+}
+
+impl FastScan {
+    fn build(cells: &[Cell], emb: &SignedEmbedding) -> FastScan {
+        let dim = emb.dim();
+        let mut blocks = Vec::with_capacity(cells.len());
+        let mut norms = Vec::with_capacity(cells.len());
+        let mut centroids = Vec::with_capacity(cells.len());
+        for cell in cells {
+            let mut block = Vec::with_capacity(cell.members.len() * dim);
+            let mut ns = Vec::with_capacity(cell.members.len());
+            for &j in &cell.members {
+                let row = emb.db_row(j as usize);
+                block.extend(to_f32(row));
+                ns.push(dot(row, row).sqrt());
+            }
+            blocks.push(block);
+            norms.push(ns);
+            centroids.push(to_f32(&cell.centroid));
+        }
+        FastScan {
+            dim,
+            blocks,
+            norms,
+            centroids,
+        }
+    }
+
+    /// Append one freshly-embedded database row to `cell`'s block (the
+    /// streaming extension path; must mirror `Cell::members` order).
+    fn push(&mut self, cell: usize, row: &[f64]) {
+        debug_assert_eq!(row.len(), self.dim);
+        self.blocks[cell].extend(to_f32(row));
+        self.norms[cell].push(dot(row, row).sqrt());
+    }
+}
+
+/// Coefficient of the f32 rounding margin: |dot64(u,v) − dot32(û,v̂)| ≤
+/// coeff·‖u‖·‖v‖ for d-term dots over f64-cast inputs — one half-ulp per
+/// cast, one per product, d for any summation order, bounded through
+/// Cauchy–Schwarz on the absolute values, with a 4x safety factor.
+/// (Underflow-to-subnormal errors escape the relative model but are
+/// absolutely tiny; the 1e-12 absolute floor in every bound covers them.)
+fn f32_margin_coeff(dim: usize) -> f64 {
+    4.0 * (dim as f64 + 4.0) * (f32::EPSILON as f64)
+}
+
+/// f64 → f32 cast of a whole row (the fast scan's mirror builder).
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
 /// The immutable retrieval index over one store snapshot. The
 /// coordinator holds it in an `Arc` next to the store and swaps both on
 /// rebuild; readers always answer from the snapshot the index was built
@@ -94,6 +174,7 @@ pub struct IvfIndex {
     store: Arc<Factored>,
     emb: SignedEmbedding,
     cells: Vec<Cell>,
+    fast: Option<FastScan>,
     cfg: IvfConfig,
 }
 
@@ -202,10 +283,16 @@ impl IvfIndex {
         for cell in &mut cells {
             recompute_cap(cell, &emb);
         }
+        let fast = if cfg.fast_scan {
+            Some(FastScan::build(&cells, &emb))
+        } else {
+            None
+        };
         Ok(IvfIndex {
             store,
             emb,
             cells,
+            fast,
             cfg,
         })
     }
@@ -251,6 +338,10 @@ impl IvfIndex {
         let mut u = vec![0.0; self.emb.dim()];
         self.emb.query_into(i, &mut u);
         let unorm = dot(&u, &u).sqrt();
+        // The f32 fast scan keeps an f32 query view and an extra margin
+        // coefficient; both are None on the default f64 path.
+        let uq = self.fast.as_ref().map(|_| to_f32(&u));
+        let coeff = self.fast.as_ref().map(|fs| f32_margin_coeff(fs.dim));
         // Per-cell caps, scanned best-first. The relative slack (scaled
         // to the magnitudes in play, not the possibly-cancelling cap
         // itself) keeps the bound valid through the canonical form's
@@ -259,14 +350,30 @@ impl IvfIndex {
         // magnitude, so 1e-6 leaves an order of headroom), so pruning
         // skips work but never a true top-k member. It costs nothing
         // observable: real score gaps sit orders of magnitude above it.
+        // On the fast path the cap's center term is the f32 dot widened
+        // by the f32 rounding margin, so it still dominates the f64 cap.
         let mut order: Vec<(f64, usize)> = self
             .cells
             .iter()
             .enumerate()
             .filter(|(_, cell)| !cell.members.is_empty())
             .map(|(c, cell)| {
-                let center = dot(&u, &cell.centroid);
                 let cnorm = dot(&cell.centroid, &cell.centroid).sqrt();
+                // The f32 relative-error margin is only valid for finite
+                // f32 arithmetic: an overflow to −inf would turn the cap
+                // into −inf and prune a live cell. Non-finite f32
+                // centers fall back to the exact f64 dot.
+                let center = match (&self.fast, &uq) {
+                    (Some(fs), Some(uq)) => {
+                        let c32 = dot_f32(uq, &fs.centroids[c]) as f64;
+                        if c32.is_finite() {
+                            c32 + coeff.unwrap() * unorm * cnorm
+                        } else {
+                            dot(&u, &cell.centroid)
+                        }
+                    }
+                    _ => dot(&u, &cell.centroid),
+                };
                 let raw = center + unorm * cell.radius + self.emb.gap;
                 let slack = 1e-6 * (unorm * (cnorm + cell.radius) + self.emb.gap) + 1e-12;
                 (raw + slack, c)
@@ -286,13 +393,48 @@ impl IvfIndex {
                 break;
             }
             stats.cells_scanned += 1;
-            for &j in &self.cells[c].members {
-                let j = j as usize;
-                if j == i {
-                    continue;
+            match (&self.fast, &uq) {
+                (Some(fs), Some(uq)) => {
+                    // f32 candidate ranking: score every member in f32
+                    // from the packed cell block, and pay the exact f64
+                    // dot only for candidates whose f32 upper bound
+                    // (score + per-candidate rounding margin + the same
+                    // canonicalization slack the cell caps carry + gap)
+                    // could still reach the running threshold. Skipping
+                    // is strict-below only, so equal-score/lower-index
+                    // tie candidates are always re-scored, and it
+                    // requires a *finite* f32 score — the relative
+                    // margin is meaningless once f32 arithmetic
+                    // overflows (−inf would wrongly skip a live
+                    // candidate) — so ±inf/NaN scores are re-scored too.
+                    let cm = (coeff.unwrap() + 1e-6) * unorm;
+                    let extra = 1e-6 * self.emb.gap + 1e-12 + self.emb.gap;
+                    let block = &fs.blocks[c];
+                    let ns = &fs.norms[c];
+                    for (t, &j) in self.cells[c].members.iter().enumerate() {
+                        let j = j as usize;
+                        if j == i {
+                            continue;
+                        }
+                        let s32 = dot_f32(uq, &block[t * fs.dim..(t + 1) * fs.dim]) as f64;
+                        let upper = s32 + cm * ns[t] + extra;
+                        if s32.is_finite() && upper.total_cmp(&best.threshold()).is_lt() {
+                            continue;
+                        }
+                        stats.scored += 1;
+                        best.push(dot(li, self.store.right_t.row(j)), j);
+                    }
                 }
-                stats.scored += 1;
-                best.push(dot(li, self.store.right_t.row(j)), j);
+                _ => {
+                    for &j in &self.cells[c].members {
+                        let j = j as usize;
+                        if j == i {
+                            continue;
+                        }
+                        stats.scored += 1;
+                        best.push(dot(li, self.store.right_t.row(j)), j);
+                    }
+                }
             }
         }
         (best.into_sorted(), stats)
@@ -324,6 +466,7 @@ impl IvfIndex {
         let mut emb = self.emb.clone();
         emb.extend_gap(left, right);
         let mut cells = self.cells.clone();
+        let mut fast = self.fast.clone();
         let new_rows = emb.embed_rows(left, right);
         let base = self.store.n();
         for m in 0..new_rows.rows {
@@ -339,12 +482,17 @@ impl IvfIndex {
             if bd > cells[bc].radius {
                 cells[bc].radius = bd;
             }
+            // Mirror the append into the f32 blocks (same member order).
+            if let Some(fs) = fast.as_mut() {
+                fs.push(bc, v);
+            }
         }
         emb.push_rows(&new_rows);
         IvfIndex {
             store,
             emb,
             cells,
+            fast,
             cfg: self.cfg,
         }
     }
@@ -465,6 +613,71 @@ mod tests {
         let grown = Arc::new(Factored::from_z(grown));
         let idx2 = idx.extended(grown.clone(), &extra, &extra);
         assert_eq!(idx2.n(), 48);
+        for i in [0, 17, 41, 47] {
+            assert_eq!(idx2.top_k(i, 6), grown.top_k(i, 6), "query {i}");
+        }
+    }
+
+    #[test]
+    fn fast_scan_is_bit_identical_to_exact_scan() {
+        check("ivf-fast-scan-exact", 8, |rng| {
+            let n = 30 + rng.below(60);
+            // Alternate symmetric stores, clustered stores, and genuinely
+            // asymmetric factorizations (gap > 0 exercises the margin).
+            let store = match rng.below(3) {
+                0 => Arc::new(Factored::from_z(Mat::gaussian(n, 5, rng))),
+                1 => clustered_store(n, 5, rng),
+                _ => Arc::new(Factored::new(
+                    Mat::gaussian(n, 4, rng),
+                    Mat::gaussian(n, 4, rng),
+                )),
+            };
+            let cfg = IvfConfig {
+                fast_scan: true,
+                ..IvfConfig::default()
+            };
+            let idx = IvfIndex::build(store.clone(), cfg).unwrap();
+            for i in (0..n).step_by(5) {
+                assert_eq!(idx.top_k(i, 10), store.top_k(i, 10), "query {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn fast_scan_survives_f32_overflow() {
+        // Factor entries ~1e25: pairwise products (~1e50) overflow f32 to
+        // ±inf, so every f32 score and cell cap is garbage. The finite
+        // guards must route all of it back through exact f64 scoring —
+        // results still bit-identical to the exact scan.
+        let mut rng = Rng::new(23);
+        let store = Arc::new(Factored::from_z(Mat::gaussian(40, 4, &mut rng).scale(1e25)));
+        let cfg = IvfConfig {
+            fast_scan: true,
+            ..IvfConfig::default()
+        };
+        let idx = IvfIndex::build(store.clone(), cfg).unwrap();
+        for i in (0..40).step_by(3) {
+            assert_eq!(idx.top_k(i, 8), store.top_k(i, 8), "query {i}");
+        }
+    }
+
+    #[test]
+    fn fast_scan_extension_stays_bit_identical() {
+        let mut rng = Rng::new(17);
+        let z = Mat::gaussian(40, 4, &mut rng);
+        let store = Arc::new(Factored::from_z(z.clone()));
+        let cfg = IvfConfig {
+            fast_scan: true,
+            ..IvfConfig::default()
+        };
+        let idx = IvfIndex::build(store, cfg).unwrap();
+        let extra = Mat::gaussian(8, 4, &mut rng);
+        let mut grown = z.clone();
+        for m in 0..8 {
+            grown.push_row(extra.row(m));
+        }
+        let grown = Arc::new(Factored::from_z(grown));
+        let idx2 = idx.extended(grown.clone(), &extra, &extra);
         for i in [0, 17, 41, 47] {
             assert_eq!(idx2.top_k(i, 6), grown.top_k(i, 6), "query {i}");
         }

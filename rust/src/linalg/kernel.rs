@@ -1,0 +1,495 @@
+//! Packed, register-blocked GEMM microkernels — the dense-compute core
+//! every hot path routes through: factor assembly (`Mat::matmul`), the
+//! batched exact scan (`Mat::matmul_nt` via `index::batch::scan_batch`),
+//! factor cross-Grams (`Mat::matmul_tn` in `index::signed`), the
+//! Lanczos/power-iteration mat-vecs, and the Sinkhorn ground-cost Gram
+//! (`gram_nt_into`). The `*_naive` references stay here as the
+//! bit-identity anchors the property suite (`tests/kernel_equivalence`)
+//! compares against.
+//!
+//! # Bit-identity contract
+//!
+//! Every kernel fixes the per-output-element floating-point operation
+//! sequence, independent of tiling, packing, chunking, or worker count:
+//!
+//! * `gemm_nn` / `gemm_tn`: one accumulator per element, k strictly
+//!   ascending — the textbook-naive order. Register tiles only change
+//!   *which elements* are in flight, never the order within one.
+//! * `gemm_nt` / `matvec_into`: per element exactly [`dot`]'s sequence —
+//!   four stride-4 phase accumulators, left-associated reduction
+//!   `s0+s1+s2+s3`, then the sequential remainder. This is what keeps
+//!   `scan_batch` scores equal to `Factored::top_k`'s row dots
+//!   bit-for-bit.
+//!
+//! Because the lanes of a register tile are *distinct output elements*
+//! (or the phases `dot` already defines), the kernels autovectorize
+//! under strict IEEE semantics — no reassociation is ever required, so
+//! `-C target-cpu=native` widens the SIMD without changing a single bit
+//! (CI runs the equivalence suite under exactly that flag).
+//!
+//! # Packing
+//!
+//! `gemm_nn` streams B through [`PackedB`]: `NR`-column panels laid out
+//! panel-major (`panel[kk * NR + c]`), so the microkernel's B access is
+//! unit-stride regardless of B's width. Packing is O(k·n), done once per
+//! multiply on the calling thread into a thread-local scratch buffer
+//! ([`with_packed_b`], the `SinkhornScratch` pattern), and shared
+//! read-only by every pool worker.
+
+use std::cell::RefCell;
+
+use super::mat::{dot, Mat};
+
+/// Rows per NN/TN microkernel tile. `Mat::matmul` chunks worker rows to
+/// this alignment so tile boundaries never straddle workers.
+pub const MR: usize = 4;
+/// Packed-panel width (columns per NN microkernel tile).
+pub const NR: usize = 4;
+
+/// B packed into `NR`-column panels (see module docs). The panel count
+/// is `ceil(n / NR)`; the last panel is zero-padded in storage but the
+/// edge microkernel never reads the pad.
+pub struct PackedB<'a> {
+    panels: &'a [f64],
+    pub k: usize,
+    pub n: usize,
+}
+
+thread_local! {
+    /// Per-thread pack scratch: steady-state multiplies re-use one
+    /// allocation instead of packing into a fresh buffer per call.
+    static PACK_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Pack `b` into `buf` and return the panel view over it.
+fn pack_b<'a>(b: &Mat, buf: &'a mut Vec<f64>) -> PackedB<'a> {
+    let (k, n) = (b.rows, b.cols);
+    let np = (n + NR - 1) / NR;
+    buf.clear();
+    buf.resize(np * k * NR, 0.0);
+    for p in 0..np {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut buf[p * k * NR..(p + 1) * k * NR];
+        for kk in 0..k {
+            panel[kk * NR..kk * NR + w].copy_from_slice(&b.data[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+    PackedB { panels: buf, k, n }
+}
+
+/// Pack `b` (thread-local scratch, reused across calls) and run `f` on
+/// the panels. The packed view is shared read-only, so `f` may fan it
+/// out to the pool workers.
+pub fn with_packed_b<T>(b: &Mat, f: impl FnOnce(&PackedB<'_>) -> T) -> T {
+    PACK_SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut buf) => f(&pack_b(b, &mut buf)),
+        // Re-entrant call on this thread (defensive): fall back to a
+        // fresh buffer rather than corrupt the outer pack.
+        Err(_) => f(&pack_b(b, &mut Vec::new())),
+    })
+}
+
+/// C[row0.., :] = A[row0.., :] · B for the `chunk` of output rows, B in
+/// packed-panel form. Register-blocked MR x NR; per element the
+/// accumulation is k-ascending into a single register (bit-identical to
+/// [`matmul_naive`]).
+pub fn gemm_nn(a: &Mat, bp: &PackedB<'_>, row0: usize, chunk: &mut [f64]) {
+    let (k, n) = (bp.k, bp.n);
+    debug_assert_eq!(a.cols, k, "gemm_nn inner-dimension mismatch");
+    if n == 0 {
+        return;
+    }
+    let rows = chunk.len() / n;
+    let np = (n + NR - 1) / NR;
+    let mut i = 0;
+    while i < rows {
+        let mr = MR.min(rows - i);
+        for p in 0..np {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let panel = &bp.panels[p * k * NR..(p + 1) * k * NR];
+            if mr == MR && w == NR {
+                nn_tile_full(a, row0 + i, panel, &mut chunk[i * n..], n, j0);
+            } else {
+                nn_tile_edge(a, row0 + i, mr, panel, w, &mut chunk[i * n..], n, j0);
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Full MR x NR tile: 16 register accumulators, unit-stride B panel, A
+/// rows streamed in lockstep via the zipped iterators (no bounds checks
+/// in the k loop).
+#[inline]
+fn nn_tile_full(a: &Mat, arow0: usize, panel: &[f64], out: &mut [f64], n: usize, j0: usize) {
+    let mut acc = [[0.0f64; NR]; MR];
+    let (i0, i1) = (a.row(arow0).iter(), a.row(arow0 + 1).iter());
+    let (i2, i3) = (a.row(arow0 + 2).iter(), a.row(arow0 + 3).iter());
+    let panels = panel.chunks_exact(NR);
+    for ((((bb, &a0), &a1), &a2), &a3) in panels.zip(i0).zip(i1).zip(i2).zip(i3) {
+        let bb: &[f64; NR] = bb.try_into().unwrap();
+        let av = [a0, a1, a2, a3];
+        for r in 0..MR {
+            for c in 0..NR {
+                acc[r][c] += av[r] * bb[c];
+            }
+        }
+    }
+    for r in 0..MR {
+        out[r * n + j0..r * n + j0 + NR].copy_from_slice(&acc[r]);
+    }
+}
+
+/// Edge tile (mr < MR rows and/or w < NR columns): same accumulation
+/// order, scalar loops over the ragged extents.
+#[inline]
+fn nn_tile_edge(
+    a: &Mat,
+    arow0: usize,
+    mr: usize,
+    panel: &[f64],
+    w: usize,
+    out: &mut [f64],
+    n: usize,
+    j0: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (kk, bb) in panel.chunks_exact(NR).enumerate() {
+        for r in 0..mr {
+            let av = a.get(arow0 + r, kk);
+            for c in 0..w {
+                acc[r][c] += av * bb[c];
+            }
+        }
+    }
+    for r in 0..mr {
+        out[r * n + j0..r * n + j0 + w].copy_from_slice(&acc[r][..w]);
+    }
+}
+
+/// Four dot products of a 2x2 row tile, each bit-identical to
+/// [`dot`]: stride-4 phase accumulators (`p*[l]` is `dot`'s `s_l`), the
+/// same left-associated reduction, the same sequential remainder. The
+/// tile shares every loaded element across two dots, halving traffic
+/// versus four independent `dot` calls.
+#[inline]
+pub fn dot2x2(r0: &[f64], r1: &[f64], c0: &[f64], c1: &[f64]) -> [f64; 4] {
+    let k = r0.len();
+    debug_assert!(r1.len() == k && c0.len() == k && c1.len() == k);
+    let (mut p00, mut p01) = ([0.0f64; 4], [0.0f64; 4]);
+    let (mut p10, mut p11) = ([0.0f64; 4], [0.0f64; 4]);
+    let rows = r0.chunks_exact(4).zip(r1.chunks_exact(4));
+    let cols = c0.chunks_exact(4).zip(c1.chunks_exact(4));
+    for ((x0, x1), (y0, y1)) in rows.zip(cols) {
+        for l in 0..4 {
+            let (a0, a1, b0, b1) = (x0[l], x1[l], y0[l], y1[l]);
+            p00[l] += a0 * b0;
+            p01[l] += a0 * b1;
+            p10[l] += a1 * b0;
+            p11[l] += a1 * b1;
+        }
+    }
+    let mut s00 = p00[0] + p00[1] + p00[2] + p00[3];
+    let mut s01 = p01[0] + p01[1] + p01[2] + p01[3];
+    let mut s10 = p10[0] + p10[1] + p10[2] + p10[3];
+    let mut s11 = p11[0] + p11[1] + p11[2] + p11[3];
+    for i in 4 * (k / 4)..k {
+        s00 += r0[i] * c0[i];
+        s01 += r0[i] * c1[i];
+        s10 += r1[i] * c0[i];
+        s11 += r1[i] * c1[i];
+    }
+    [s00, s01, s10, s11]
+}
+
+/// Two dot products sharing one left row, each bit-identical to
+/// [`dot`] (same phase accumulators, reduction, and remainder). The
+/// single-query row kernel of [`gemv_nt`].
+#[inline]
+pub fn dot1x2(r: &[f64], c0: &[f64], c1: &[f64]) -> [f64; 2] {
+    let k = r.len();
+    debug_assert!(c0.len() == k && c1.len() == k);
+    let (mut p0, mut p1) = ([0.0f64; 4], [0.0f64; 4]);
+    let cols = c0.chunks_exact(4).zip(c1.chunks_exact(4));
+    for (x, (y0, y1)) in r.chunks_exact(4).zip(cols) {
+        for l in 0..4 {
+            p0[l] += x[l] * y0[l];
+            p1[l] += x[l] * y1[l];
+        }
+    }
+    let mut s0 = p0[0] + p0[1] + p0[2] + p0[3];
+    let mut s1 = p1[0] + p1[1] + p1[2] + p1[3];
+    for i in 4 * (k / 4)..k {
+        s0 += r[i] * c0[i];
+        s1 += r[i] * c1[i];
+    }
+    [s0, s1]
+}
+
+/// One row of A·Bᵀ: `out[j] = dot(arow, b.row(j))` bit-for-bit, with B
+/// rows paired so the query row's loads are shared. This is the
+/// entry/row serving kernel (`Factored::row_into`, tile bands).
+pub fn gemv_nt(arow: &[f64], b: &Mat, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), b.rows);
+    let mut j = 0;
+    while j + 1 < b.rows {
+        let s = dot1x2(arow, b.row(j), b.row(j + 1));
+        out[j] = s[0];
+        out[j + 1] = s[1];
+        j += 2;
+    }
+    if j < b.rows {
+        out[j] = dot(arow, b.row(j));
+    }
+}
+
+/// C[row0.., :] = A[row0.., :] · Bᵀ for the `chunk` of output rows. 2x2
+/// tiles of [`dot2x2`]; edge rows/columns fall back to [`dot`], so every
+/// element equals `dot(a.row(i), b.row(j))` bit-for-bit.
+pub fn gemm_nt(a: &Mat, b: &Mat, row0: usize, chunk: &mut [f64]) {
+    let n = b.rows;
+    debug_assert_eq!(a.cols, b.cols, "gemm_nt inner-dimension mismatch");
+    if n == 0 {
+        return;
+    }
+    let rows = chunk.len() / n;
+    let mut i = 0;
+    while i + 1 < rows {
+        let (head, tail) = chunk.split_at_mut((i + 1) * n);
+        let o0 = &mut head[i * n..];
+        let o1 = &mut tail[..n];
+        let (r0, r1) = (a.row(row0 + i), a.row(row0 + i + 1));
+        let mut j = 0;
+        while j + 1 < n {
+            let s = dot2x2(r0, r1, b.row(j), b.row(j + 1));
+            o0[j] = s[0];
+            o0[j + 1] = s[1];
+            o1[j] = s[2];
+            o1[j + 1] = s[3];
+            j += 2;
+        }
+        if j < n {
+            o0[j] = dot(r0, b.row(j));
+            o1[j] = dot(r1, b.row(j));
+        }
+        i += 2;
+    }
+    if i < rows {
+        let r = a.row(row0 + i);
+        for (j, o) in chunk[i * n..(i + 1) * n].iter_mut().enumerate() {
+            *o = dot(r, b.row(j));
+        }
+    }
+}
+
+/// C[row0.., :] = (Aᵀ · B)[row0.., :] for the `chunk` of output rows
+/// (rows of C are columns of A). MR x NR outer-product register tiles:
+/// per k step the tile loads 4+4 contiguous values and performs 16
+/// multiply-adds, with C resident in registers across the whole k sweep.
+/// Per element the accumulation is k-ascending (bit-identical to
+/// [`matmul_tn_naive`]).
+pub fn gemm_tn(a: &Mat, b: &Mat, row0: usize, chunk: &mut [f64]) {
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!(b.rows, k, "gemm_tn inner-dimension mismatch");
+    if n == 0 {
+        return;
+    }
+    let rows = chunk.len() / n;
+    let mut i = 0;
+    while i < rows {
+        let tr = MR.min(rows - i);
+        let col0 = row0 + i;
+        let mut j = 0;
+        while j < n {
+            let tc = NR.min(n - j);
+            let mut acc = [[0.0f64; NR]; MR];
+            if tr == MR && tc == NR {
+                for kk in 0..k {
+                    let av: &[f64; MR] =
+                        a.data[kk * m + col0..kk * m + col0 + MR].try_into().unwrap();
+                    let bv: &[f64; NR] = b.data[kk * n + j..kk * n + j + NR].try_into().unwrap();
+                    for r in 0..MR {
+                        for c in 0..NR {
+                            acc[r][c] += av[r] * bv[c];
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    let arow = a.row(kk);
+                    let brow = b.row(kk);
+                    for r in 0..tr {
+                        let av = arow[col0 + r];
+                        for c in 0..tc {
+                            acc[r][c] += av * brow[j + c];
+                        }
+                    }
+                }
+            }
+            for r in 0..tr {
+                chunk[(i + r) * n + j..(i + r) * n + j + tc].copy_from_slice(&acc[r][..tc]);
+            }
+            j += tc;
+        }
+        i += tr;
+    }
+}
+
+/// y = A·x into `out`, four rows per pass sharing the streamed `x`; per
+/// element bit-identical to `dot(a.row(i), x)`.
+pub fn matvec_into(a: &Mat, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.cols, x.len());
+    debug_assert_eq!(a.rows, out.len());
+    let k = x.len();
+    let mut i = 0;
+    while i + 3 < a.rows {
+        let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        let mut p = [[0.0f64; 4]; 4];
+        for (t, xs) in x.chunks_exact(4).enumerate() {
+            let base = 4 * t;
+            for r in 0..4 {
+                for l in 0..4 {
+                    p[r][l] += rows[r][base + l] * xs[l];
+                }
+            }
+        }
+        for r in 0..4 {
+            let mut s = p[r][0] + p[r][1] + p[r][2] + p[r][3];
+            for t in 4 * (k / 4)..k {
+                s += rows[r][t] * x[t];
+            }
+            out[i + r] = s;
+        }
+        i += 4;
+    }
+    while i < a.rows {
+        out[i] = dot(a.row(i), x);
+        i += 1;
+    }
+}
+
+/// Unrolled f32 dot (8 accumulators, f32 is twice as wide per SIMD
+/// lane): the scoring primitive of the IVF fast-scan path
+/// (`index::ivf`). Accuracy is the caller's concern — the fast scan
+/// wraps every use in an explicit rounding-error margin.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut p = [0.0f32; 8];
+    for (xs, ys) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+        for l in 0..8 {
+            p[l] += xs[l] * ys[l];
+        }
+    }
+    let mut s = ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]));
+    for i in 8 * (a.len() / 8)..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+// ---- naive references (the bit-identity anchors) ----
+
+/// Textbook i-j-k triple loop, single accumulator per element, k
+/// ascending. The packed NN kernel must match this bit-for-bit.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0;
+            for kk in 0..a.cols {
+                s += a.get(i, kk) * b.get(kk, j);
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+/// Per-element [`dot`] over row pairs — the reference for `gemm_nt`.
+pub fn matmul_nt_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    Mat::from_fn(a.rows, b.rows, |i, j| dot(a.row(i), b.row(j)))
+}
+
+/// Textbook AᵀB, k ascending per element — the reference for `gemm_tn`.
+pub fn matmul_tn_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let mut out = Mat::zeros(a.cols, b.cols);
+    for i in 0..a.cols {
+        for j in 0..b.cols {
+            let mut s = 0.0;
+            for kk in 0..a.rows {
+                s += a.get(kk, i) * b.get(kk, j);
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+/// Per-row [`dot`] — the reference for `matvec_into`.
+pub fn matvec_naive(a: &Mat, x: &[f64]) -> Vec<f64> {
+    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot2x2_matches_dot_bitwise() {
+        let mut rng = Rng::new(1);
+        for len in [0, 1, 3, 4, 5, 8, 17, 64, 101] {
+            let mk = |rng: &mut Rng| -> Vec<f64> { (0..len).map(|_| rng.normal()).collect() };
+            let (r0, r1, c0, c1) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let s = dot2x2(&r0, &r1, &c0, &c1);
+            assert_eq!(s[0], dot(&r0, &c0), "len {len}");
+            assert_eq!(s[1], dot(&r0, &c1), "len {len}");
+            assert_eq!(s[2], dot(&r1, &c0), "len {len}");
+            assert_eq!(s[3], dot(&r1, &c1), "len {len}");
+        }
+    }
+
+    #[test]
+    fn packed_nn_matches_naive_bitwise() {
+        let mut rng = Rng::new(2);
+        for (m, k, n) in [(0, 3, 2), (1, 1, 1), (3, 5, 2), (4, 4, 4), (7, 9, 13), (12, 16, 8)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let want = matmul_naive(&a, &b);
+            let mut got = Mat::zeros(m, n);
+            with_packed_b(&b, |bp| gemm_nn(&a, bp, 0, &mut got.data));
+            assert_eq!(got.data, want.data, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn dot1x2_and_gemv_match_dot_bitwise() {
+        let mut rng = Rng::new(4);
+        for (n, k) in [(0, 4), (1, 1), (5, 3), (8, 7), (9, 16)] {
+            let b = Mat::gaussian(n, k, &mut rng);
+            let r: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            let mut out = vec![f64::NAN; n];
+            gemv_nt(&r, &b, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], dot(&r, b.row(j)), "({n},{k}) col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_f32_matches_scalar_sum() {
+        let mut rng = Rng::new(3);
+        for len in [0, 1, 7, 8, 9, 33, 64] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_f32(&a, &b) - naive).abs() < 1e-4, "len {len}");
+        }
+    }
+}

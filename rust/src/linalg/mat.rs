@@ -1,12 +1,16 @@
 //! Dense row-major f64 matrix with the operations the approximation
-//! algorithms need. Matmul is cache-blocked (k- and j-tiled with a 2-row
-//! microkernel) and sharded over output-row ranges on the
+//! algorithms need. All three matmul variants and the mat-vec route
+//! through the packed, register-blocked microkernels in
+//! [`super::kernel`] and are sharded over output-row ranges on the
 //! [`crate::util::pool`] workers — this is the L3 hot path for factor
-//! construction (see §Perf). Chunks are aligned to the microkernel's row
-//! pairs and each output element accumulates in the same (kb, kk) order
-//! regardless of chunking, so every worker count produces bit-identical
-//! results; `matmul*_with_workers(.., 1)` is the serial reference path.
+//! construction (see §Perf and the README "Kernel architecture"
+//! section). Chunks are aligned to the microkernel tile rows and every
+//! output element accumulates in a fixed per-element order regardless of
+//! tiling or chunking, so every worker count produces results
+//! bit-identical to the `kernel::*_naive` references;
+//! `matmul*_with_workers(.., 1)` is the serial reference path.
 
+use super::kernel;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -111,16 +115,26 @@ impl Mat {
 
     /// Append one row in place (the streaming out-of-sample extension
     /// path: factor matrices grow by a row per inserted document).
+    /// Capacity grows geometrically — at least doubling on overflow — so
+    /// a stream of single-row inserts costs amortized O(cols) per insert
+    /// with O(log n) reallocations (pinned by the regression test and a
+    /// `microbench_hotpath` datapoint) rather than relying on the
+    /// allocator's per-`extend` policy.
     pub fn push_row(&mut self, row: &[f64]) {
         assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        let need = self.data.len() + row.len();
+        if self.data.capacity() < need {
+            let want = need.max(self.data.capacity() * 2);
+            self.data.reserve(want - self.data.len());
+        }
         self.data.extend_from_slice(row);
         self.rows += 1;
     }
 
-    /// C = A * B, cache-blocked with a 2-row microkernel (two output rows
-    /// accumulate against the same streamed B row, halving B traffic and
-    /// doubling ILP — §Perf: ~1.4x over the plain ikj loop), sharded over
-    /// output-row ranges on the pool workers. Small products (most s x s
+    /// C = A * B through the packed register-blocked kernel
+    /// ([`kernel::gemm_nn`]): B is packed once into cache-contiguous
+    /// panels on the calling thread and shared read-only by the pool
+    /// workers, which shard the output rows. Small products (most s x s
     /// joining-matrix work) stay on the inline serial path — spawn/join
     /// costs more than the multiply below ~1M flops per worker.
     pub fn matmul(&self, other: &Mat) -> Mat {
@@ -129,7 +143,8 @@ impl Mat {
     }
 
     /// [`Self::matmul`] with an explicit worker count; 1 is the serial
-    /// reference kernel the equivalence tests compare against.
+    /// reference path the equivalence tests compare against. Every
+    /// worker count is bit-identical to [`kernel::matmul_naive`].
     pub fn matmul_with_workers(&self, other: &Mat, workers: usize) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, n) = (self.rows, other.cols);
@@ -137,17 +152,23 @@ impl Mat {
         if m == 0 || n == 0 {
             return out;
         }
-        // Chunks aligned to 2 rows so the microkernel pairs rows the same
-        // way for every worker count (bit-identical outputs).
-        pool::for_row_chunks(workers, &mut out.data, n, 2, |row0, chunk| {
-            matmul_block(self, other, row0, chunk);
+        // Chunks aligned to the microkernel tile rows so tiles never
+        // straddle a worker boundary (bit-identical outputs either way —
+        // each element's accumulation order is fixed).
+        kernel::with_packed_b(other, |bp| {
+            pool::for_row_chunks(workers, &mut out.data, n, kernel::MR, |row0, chunk| {
+                kernel::gemm_nn(self, bp, row0, chunk);
+            });
         });
         out
     }
 
-    /// C = A * B^T — both operands walked row-wise (fastest layout here);
-    /// output rows are independent, sharded across the pool workers when
-    /// the product is large enough to amortize the spawns.
+    /// C = A * B^T — both operands walked row-wise (fastest layout here)
+    /// through the 2x2 dot-tile kernel ([`kernel::gemm_nt`]); every
+    /// element equals `dot(self.row(i), other.row(j))` bit-for-bit, the
+    /// invariant the batched exact scan relies on. Output rows are
+    /// sharded across the pool workers when the product is large enough
+    /// to amortize the spawns.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
         let flops = self.rows.saturating_mul(self.cols).saturating_mul(other.rows);
         self.matmul_nt_with_workers(other, pool::auto_workers(flops, FLOPS_PER_WORKER))
@@ -161,20 +182,16 @@ impl Mat {
         if m == 0 || n == 0 {
             return out;
         }
-        pool::for_row_chunks(workers, &mut out.data, n, 1, |row0, chunk| {
-            for (r, orow) in chunk.chunks_mut(n).enumerate() {
-                let arow = self.row(row0 + r);
-                for (j, o) in orow.iter_mut().enumerate() {
-                    *o = dot(arow, other.row(j));
-                }
-            }
+        pool::for_row_chunks(workers, &mut out.data, n, 2, |row0, chunk| {
+            kernel::gemm_nt(self, other, row0, chunk);
         });
         out
     }
 
-    /// C = A^T * B, sharded over output-row ranges; every worker streams
-    /// the k rows of A/B once for its range, accumulating in the same kk
-    /// order as the serial loop. Small products stay inline.
+    /// C = A^T * B through the outer-product register kernel
+    /// ([`kernel::gemm_tn`]), sharded over output-row ranges; each tile
+    /// keeps its C block in registers across the whole k sweep while
+    /// both factor rows stream contiguously. Small products stay inline.
     pub fn matmul_tn(&self, other: &Mat) -> Mat {
         let flops = self.cols.saturating_mul(self.rows).saturating_mul(other.cols);
         self.matmul_tn_with_workers(other, pool::auto_workers(flops, FLOPS_PER_WORKER))
@@ -183,35 +200,25 @@ impl Mat {
     /// [`Self::matmul_tn`] with an explicit worker count.
     pub fn matmul_tn_with_workers(&self, other: &Mat, workers: usize) -> Mat {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
-        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let (m, n) = (self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
         if m == 0 || n == 0 {
             return out;
         }
-        pool::for_row_chunks(workers, &mut out.data, n, 1, |row0, chunk| {
-            let rows = chunk.len() / n;
-            for kk in 0..k {
-                let arow = self.row(kk);
-                let brow = other.row(kk);
-                for r in 0..rows {
-                    let a = arow[row0 + r];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let orow = &mut chunk[r * n..(r + 1) * n];
-                    for j in 0..n {
-                        orow[j] += a * brow[j];
-                    }
-                }
-            }
+        pool::for_row_chunks(workers, &mut out.data, n, kernel::MR, |row0, chunk| {
+            kernel::gemm_tn(self, other, row0, chunk);
         });
         out
     }
 
-    /// y = A * x.
+    /// y = A * x through the 4-row blocked kernel; per element
+    /// bit-identical to `dot(self.row(i), x)` (the Lanczos and
+    /// power-iteration mat-vec path).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+        let mut out = vec![0.0; self.rows];
+        kernel::matvec_into(self, x, &mut out);
+        out
     }
 
     pub fn scale(&self, a: f64) -> Mat {
@@ -313,69 +320,14 @@ impl Mat {
 /// below this per worker, the inline serial kernel wins.
 const FLOPS_PER_WORKER: usize = 1 << 20;
 
-/// Inner matmul kernel: fill `chunk` (output rows `row0..`) with
-/// A[row0..] · B. k-blocked (BK, reuse of the A tile) and j-tiled (BJ,
-/// keeps the streamed B row and output tile in cache) around the 2-row
-/// microkernel. Per output element the accumulation order is
-/// (kb, jb fixed, kk ascending) — independent of the row chunking, which
-/// is what makes the parallel shards bit-identical to the serial pass.
-fn matmul_block(a: &Mat, b: &Mat, row0: usize, chunk: &mut [f64]) {
-    let k = a.cols;
-    let n = b.cols;
-    let rows = chunk.len() / n;
-    const BK: usize = 64;
-    const BJ: usize = 256;
-    for kb in (0..k).step_by(BK) {
-        let kend = (kb + BK).min(k);
-        for jb in (0..n).step_by(BJ) {
-            let jend = (jb + BJ).min(n);
-            let mut i = 0;
-            while i + 1 < rows {
-                // Two mutable row views without overlap.
-                let (head, tail) = chunk.split_at_mut((i + 1) * n);
-                let orow0 = &mut head[i * n..];
-                let orow1 = &mut tail[..n];
-                let arow0 = a.row(row0 + i);
-                let arow1 = a.row(row0 + i + 1);
-                for kk in kb..kend {
-                    let a0 = arow0[kk];
-                    let a1 = arow1[kk];
-                    if a0 == 0.0 && a1 == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    for j in jb..jend {
-                        let bv = brow[j];
-                        orow0[j] += a0 * bv;
-                        orow1[j] += a1 * bv;
-                    }
-                }
-                i += 2;
-            }
-            if i < rows {
-                let arow = a.row(row0 + i);
-                let orow = &mut chunk[i * n..(i + 1) * n];
-                for kk in kb..kend {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    for j in jb..jend {
-                        orow[j] += av * brow[j];
-                    }
-                }
-            }
-        }
-    }
-}
-
 /// Cross-Gram into a row-major `a.len() x b.len()` buffer:
 /// `out[i*lb + j] = ⟨a[i], b[j]⟩`. 2x2 register tile over (row, col)
-/// pairs — each loaded vector element feeds two dot products, halving
-/// memory traffic versus `a.len()·b.len()` independent `dot` calls. This
-/// is the inner kernel of the norm-decomposed Sinkhorn ground cost
-/// (`sim::wmd`), the per-pair hot loop of every WMD evaluation.
+/// pairs ([`kernel::dot2x2`]) — each loaded vector element feeds two dot
+/// products, halving memory traffic versus `a.len()·b.len()` independent
+/// `dot` calls; every entry equals `dot(&a[i], &b[j])` bit-for-bit (tile
+/// and edge paths share `dot`'s accumulation order). This is the inner
+/// kernel of the norm-decomposed Sinkhorn ground cost (`sim::wmd`), the
+/// per-pair hot loop of every WMD evaluation.
 pub fn gram_nt_into(a: &[Vec<f64>], b: &[Vec<f64>], out: &mut [f64]) {
     let (la, lb) = (a.len(), b.len());
     debug_assert_eq!(out.len(), la * lb);
@@ -384,20 +336,11 @@ pub fn gram_nt_into(a: &[Vec<f64>], b: &[Vec<f64>], out: &mut [f64]) {
         let (r0, r1) = (a[i].as_slice(), a[i + 1].as_slice());
         let mut j = 0;
         while j + 1 < lb {
-            let (c0, c1) = (b[j].as_slice(), b[j + 1].as_slice());
-            let (mut s00, mut s01, mut s10, mut s11) = (0.0, 0.0, 0.0, 0.0);
-            for k in 0..r0.len() {
-                let (a0, a1) = (r0[k], r1[k]);
-                let (b0, b1) = (c0[k], c1[k]);
-                s00 += a0 * b0;
-                s01 += a0 * b1;
-                s10 += a1 * b0;
-                s11 += a1 * b1;
-            }
-            out[i * lb + j] = s00;
-            out[i * lb + j + 1] = s01;
-            out[(i + 1) * lb + j] = s10;
-            out[(i + 1) * lb + j + 1] = s11;
+            let s = kernel::dot2x2(r0, r1, &b[j], &b[j + 1]);
+            out[i * lb + j] = s[0];
+            out[i * lb + j + 1] = s[1];
+            out[(i + 1) * lb + j] = s[2];
+            out[(i + 1) * lb + j + 1] = s[3];
             j += 2;
         }
         if j < lb {
@@ -438,11 +381,32 @@ pub fn norm(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
+/// Scale `a` to unit Euclidean norm, guarding every degenerate norm: a
+/// zero, denormal, or NaN norm leaves the vector untouched (dividing by
+/// a denormal overflows to ±inf, and a poisoned vector turns Lanczos and
+/// k-means output into NaNs); an *infinite* norm (entries so large that
+/// `dot(a,a)` overflows) is handled by pre-scaling with the max
+/// magnitude so the vector still comes out unit-norm.
 pub fn normalize(a: &mut [f64]) {
     let n = norm(a);
-    if n > 0.0 {
+    if n.is_normal() {
         for x in a.iter_mut() {
             *x /= n;
+        }
+        return;
+    }
+    if n.is_infinite() {
+        let m = a.iter().fold(0.0f64, |acc, &x| acc.max(x.abs()));
+        if m.is_finite() && m > 0.0 {
+            for x in a.iter_mut() {
+                *x /= m;
+            }
+            let n2 = norm(a);
+            if n2.is_normal() {
+                for x in a.iter_mut() {
+                    *x /= n2;
+                }
+            }
         }
     }
 }
@@ -546,6 +510,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn normalize_guards_degenerate_norms() {
+        // Zero vector: untouched, no NaNs.
+        let mut z = vec![0.0; 4];
+        normalize(&mut z);
+        assert!(z.iter().all(|&x| x == 0.0));
+        // Denormal entries whose squared sum underflows to zero: the
+        // old unguarded division would emit NaN/inf and poison Lanczos
+        // and k-means; the vector must come through untouched.
+        let mut tiny = vec![5e-324, -5e-324, 5e-324];
+        normalize(&mut tiny);
+        assert!(tiny.iter().all(|x| x.is_finite()), "tiny: {tiny:?}");
+        assert_eq!(tiny, vec![5e-324, -5e-324, 5e-324]);
+        // Entries so large that dot(a,a) overflows: pre-scaling still
+        // produces a unit vector instead of zeros.
+        let mut huge = vec![1e200, -1e200, 1e200];
+        normalize(&mut huge);
+        assert!((norm(&huge) - 1.0).abs() < 1e-12, "huge: {huge:?}");
+        // NaN norm: untouched.
+        let mut bad = vec![f64::NAN, 1.0];
+        normalize(&mut bad);
+        assert_eq!(bad[1], 1.0);
+        // Ordinary vector: unit norm.
+        let mut v = vec![3.0, 4.0];
+        normalize(&mut v);
+        assert!((norm(&v) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn push_row_reserves_geometrically() {
+        let mut m = Mat::zeros(0, 8);
+        let row = [1.0; 8];
+        let mut reallocs = 0;
+        let mut cap = m.data.capacity();
+        for _ in 0..10_000 {
+            m.push_row(&row);
+            if m.data.capacity() != cap {
+                reallocs += 1;
+                cap = m.data.capacity();
+            }
+        }
+        assert_eq!(m.rows, 10_000);
+        // Geometric growth: O(log n) reallocations, not one per insert.
+        assert!(reallocs <= 32, "push_row reallocated {reallocs} times");
     }
 
     #[test]

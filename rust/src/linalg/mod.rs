@@ -1,9 +1,12 @@
 //! From-scratch dense linear algebra (no LAPACK/BLAS in the offline
 //! environment): matrices, symmetric eigendecomposition, SVD, Cholesky,
-//! LU, and Lanczos extreme-eigenvalue estimation.
+//! LU, and Lanczos extreme-eigenvalue estimation. The dense-compute hot
+//! paths route through the packed register-blocked microkernels in
+//! [`kernel`] (see the README "Kernel architecture" section).
 
 pub mod cholesky;
 pub mod eigh;
+pub mod kernel;
 pub mod lanczos;
 pub mod mat;
 pub mod solve;

@@ -11,8 +11,10 @@
 //! bottleneck, so the hot path is allocation-free in steady state:
 //! * [`Doc`] caches per-word squared norms at construction, so the ground
 //!   cost is assembled as ‖a‖² + ‖b‖² − 2⟨a,b⟩ around the tiled cross-Gram
-//!   kernel [`crate::linalg::gram_nt_into`] instead of re-walking every
-//!   (word, word) coordinate pair.
+//!   kernel [`crate::linalg::gram_nt_into`] (backed by the register
+//!   microkernel layer `linalg::kernel`; every Gram entry is bit-identical
+//!   to a plain `dot`) instead of re-walking every (word, word)
+//!   coordinate pair.
 //! * [`SinkhornScratch`] owns the cost matrix, Gibbs kernel, a transposed
 //!   Gibbs copy (row-contiguous v-update instead of a column-strided
 //!   walk), and the u/v vectors; one scratch per pool worker is reused

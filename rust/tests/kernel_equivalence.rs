@@ -1,0 +1,167 @@
+//! Kernel-layer property suite: the packed register-blocked GEMM
+//! microkernels and the f32 IVF fast-scan must be *numerically
+//! invisible* — bit-identical to their naive references — across worker
+//! counts (SIMMAT_THREADS ∈ {1,4} in CI's thread matrix and pinned here
+//! via `pool::with_workers`), odd shapes where m, n, k are not multiples
+//! of the register tile, and empty/one-row edge cases.
+
+use std::sync::Arc;
+
+use simmat::approx::Factored;
+use simmat::coordinator::Method;
+use simmat::index::{scan_batch, topk_batch, IvfConfig, IvfIndex};
+use simmat::linalg::kernel::{matmul_naive, matmul_nt_naive, matmul_tn_naive, matvec_naive};
+use simmat::linalg::{dot, gram_nt_into, Mat};
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::util::pool;
+use simmat::util::rng::Rng;
+
+/// Shapes chosen to straddle the MR=4 / NR=4 tile and the dot kernel's
+/// stride-4 phases: empty, single-row/column, sub-tile, exact-tile, and
+/// every remainder class of the tile sizes.
+const SHAPES: [(usize, usize, usize); 12] = [
+    (0, 3, 2),
+    (3, 0, 2),
+    (3, 4, 0),
+    (1, 1, 1),
+    (2, 3, 1),
+    (3, 5, 2),
+    (4, 4, 4),
+    (5, 7, 9),
+    (7, 9, 13),
+    (8, 8, 8),
+    (13, 17, 11),
+    (16, 32, 24),
+];
+
+#[test]
+fn packed_matmul_is_bit_identical_to_naive_across_workers() {
+    let mut rng = Rng::new(1);
+    for (m, k, n) in SHAPES {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        let want = matmul_naive(&a, &b);
+        for w in [1, 4] {
+            let got = pool::with_workers(w, || a.matmul(&b));
+            assert_eq!(got.data, want.data, "matmul ({m},{k},{n}) workers={w}");
+            let got = a.matmul_with_workers(&b, w);
+            assert_eq!(got.data, want.data, "matmul_with_workers ({m},{k},{n}) w={w}");
+        }
+    }
+}
+
+#[test]
+fn packed_matmul_nt_is_bit_identical_to_per_element_dot() {
+    let mut rng = Rng::new(2);
+    for (m, k, n) in SHAPES {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let b = Mat::gaussian(n, k, &mut rng);
+        let want = matmul_nt_naive(&a, &b);
+        for w in [1, 4] {
+            let got = pool::with_workers(w, || a.matmul_nt(&b));
+            assert_eq!(got.data, want.data, "matmul_nt ({m},{k},{n}) workers={w}");
+        }
+        // The invariant the batched scan relies on, stated directly:
+        // every element is dot(a.row(i), b.row(j)) bit-for-bit.
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(want.get(i, j), dot(a.row(i), b.row(j)));
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_matmul_tn_is_bit_identical_to_naive() {
+    let mut rng = Rng::new(3);
+    for (m, k, n) in SHAPES {
+        let a = Mat::gaussian(k, m, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        let want = matmul_tn_naive(&a, &b);
+        for w in [1, 4] {
+            let got = pool::with_workers(w, || a.matmul_tn(&b));
+            assert_eq!(got.data, want.data, "matmul_tn ({m},{k},{n}) workers={w}");
+        }
+    }
+}
+
+#[test]
+fn blocked_matvec_is_bit_identical_to_row_dots() {
+    let mut rng = Rng::new(4);
+    for (m, k, _) in SHAPES {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        assert_eq!(a.matvec(&x), matvec_naive(&a, &x), "matvec ({m},{k})");
+    }
+}
+
+#[test]
+fn gram_nt_into_is_bit_identical_to_dot_per_entry() {
+    let mut rng = Rng::new(5);
+    for (la, lb, dim) in [(0, 3, 4), (1, 1, 1), (3, 5, 8), (4, 4, 7), (7, 2, 16), (6, 6, 5)] {
+        let a: Vec<Vec<f64>> = (0..la)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let b: Vec<Vec<f64>> = (0..lb)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let mut out = vec![f64::NAN; la * lb];
+        gram_nt_into(&a, &b, &mut out);
+        for i in 0..la {
+            for j in 0..lb {
+                assert_eq!(out[i * lb + j], dot(&a[i], &b[j]), "({la},{lb},{dim})@({i},{j})");
+            }
+        }
+    }
+}
+
+/// The f32 fast scan must return the same ranked lists — scores, order,
+/// tie-breaks, everything — as the exact f64 scan for every one of the
+/// seven approximation methods, at every pool size.
+#[test]
+fn fast_scan_top_k_is_bit_identical_for_all_methods() {
+    let mut rng = Rng::new(6);
+    let o = NearPsdOracle::new(120, 8, 0.4, &mut rng);
+    let cfg = IvfConfig {
+        fast_scan: true,
+        ..IvfConfig::default()
+    };
+    for method in Method::ALL {
+        let f = Arc::new(method.build(&o, 24, &mut rng).unwrap());
+        let fast = IvfIndex::build(f.clone(), cfg).unwrap();
+        for w in [1, 4] {
+            pool::with_workers(w, || {
+                for i in (0..120).step_by(11) {
+                    for k in [1, 7, 12] {
+                        assert_eq!(
+                            fast.top_k(i, k),
+                            f.top_k(i, k),
+                            "{} query {i} k={k} workers={w}",
+                            method.name()
+                        );
+                    }
+                }
+            });
+        }
+    }
+}
+
+/// Batched serving paths agree bit-for-bit with the per-query exact scan
+/// when the f32 fast scan is on (`topk_batch` shards queries on the
+/// pool, `scan_batch` runs one packed `matmul_nt`).
+#[test]
+fn fast_scan_batched_paths_match_exact_scan() {
+    let mut rng = Rng::new(7);
+    let store = Arc::new(Factored::from_z(Mat::gaussian(90, 6, &mut rng)));
+    let cfg = IvfConfig {
+        fast_scan: true,
+        ..IvfConfig::default()
+    };
+    let fast = IvfIndex::build(store.clone(), cfg).unwrap();
+    let ids: Vec<usize> = (0..90).step_by(4).collect();
+    let want = scan_batch(&store, &ids, 8);
+    for w in [1, 4] {
+        let (got, _) = pool::with_workers(w, || topk_batch(&fast, &ids, 8));
+        assert_eq!(got, want, "workers={w}");
+    }
+}

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Compare fresh BENCH_*.json files against the checked-in baseline.
+
+Usage: python3 tools/compare_bench.py BENCH_baseline [fresh_dir]
+
+Tracks *relative* metrics only (speedups, recall, prune rate, overhead
+ratios) — both sides of each ratio are measured in the same process on
+the same machine, so they are stable across hardware, unlike absolute
+queries/sec. Fails (exit 1) when any tracked metric regresses by more
+than TOLERANCE versus the baseline.
+
+A baseline file carrying "provisional": true records the *expected*
+trajectory before any CI run has frozen real numbers; provisional
+entries warn instead of failing. To freeze the current numbers as the
+baseline, run the benches and copy the fresh JSONs over
+BENCH_baseline/ (dropping the provisional flag):
+
+    cargo bench --bench microbench_hotpath
+    python3 tools/compare_bench.py BENCH_baseline . --freeze
+"""
+
+import json
+import os
+import sys
+
+TOLERANCE = 0.20
+
+# (file, dotted metric path, direction). "higher" fails when
+# fresh < baseline * (1 - TOLERANCE); "lower" fails when
+# fresh > baseline * (1 + TOLERANCE). gemm[] entries are matched by
+# their "shape" key.
+TRACKED = [
+    ("BENCH_kernels.json", "gemm[gather_n_x_s].speedup", "higher"),
+    ("BENCH_kernels.json", "gemm[core_s_x_s].speedup", "higher"),
+    ("BENCH_kernels.json", "gemm[scan_r_wide].speedup", "higher"),
+    ("BENCH_kernels.json", "ivf_fast_scan.speedup", "higher"),
+    ("BENCH_simeval.json", "wmd_eval.speedup", "higher"),
+    ("BENCH_topk.json", "speedup", "higher"),
+    ("BENCH_topk.json", "recall_at_k", "higher"),
+    ("BENCH_topk.json", "prune_rate", "higher"),
+    ("BENCH_streaming.json", "drift_overhead_ratio", "lower"),
+]
+
+
+def lookup(doc, path):
+    cur = doc
+    for part in path.split("."):
+        if "[" in part:
+            key, sel = part[:-1].split("[")
+            cur = cur[key]
+            matches = [e for e in cur if e.get("shape") == sel]
+            if not matches:
+                raise KeyError(f"no entry with shape={sel!r} under {key}")
+            cur = matches[0]
+        else:
+            cur = cur[part]
+    return float(cur)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    freeze = "--freeze" in sys.argv
+    if not args:
+        print(__doc__)
+        return 2
+    base_dir = args[0]
+    fresh_dir = args[1] if len(args) > 1 else "."
+
+    if freeze:
+        os.makedirs(base_dir, exist_ok=True)
+        frozen = 0
+        for fname in sorted({f for f, _, _ in TRACKED}):
+            src = os.path.join(fresh_dir, fname)
+            if not os.path.exists(src):
+                print(f"  skip  {fname}: not found in {fresh_dir}")
+                continue
+            with open(src) as f:
+                doc = json.load(f)
+            doc.pop("provisional", None)
+            with open(os.path.join(base_dir, fname), "w") as f:
+                json.dump(doc, f, indent=2)
+                f.write("\n")
+            frozen += 1
+        print(f"froze {frozen} baseline file(s) into {base_dir}")
+        return 0 if frozen else 1
+
+    failures = []
+    warnings = []
+    for fname, path, direction in TRACKED:
+        base_path = os.path.join(base_dir, fname)
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{fname}: fresh file missing at {fresh_path}")
+            continue
+        with open(fresh_path) as f:
+            fresh_doc = json.load(f)
+        if not os.path.exists(base_path):
+            warnings.append(f"{fname}: no baseline at {base_path} (run --freeze)")
+            continue
+        with open(base_path) as f:
+            base_doc = json.load(f)
+        provisional = bool(base_doc.get("provisional", False))
+        try:
+            base_v = lookup(base_doc, path)
+            fresh_v = lookup(fresh_doc, path)
+        except KeyError as e:
+            failures.append(f"{fname}:{path}: {e}")
+            continue
+        if direction == "higher":
+            ok = fresh_v >= base_v * (1.0 - TOLERANCE)
+        else:
+            ok = fresh_v <= base_v * (1.0 + TOLERANCE)
+        arrow = "↑" if direction == "higher" else "↓"
+        line = f"{fname}:{path} ({arrow}): baseline {base_v:.4g} fresh {fresh_v:.4g}"
+        if ok:
+            print(f"  ok    {line}")
+        elif provisional:
+            warnings.append(f"provisional baseline, not failing: {line}")
+        else:
+            failures.append(line)
+
+    for w in warnings:
+        print(f"  warn  {w}")
+    if failures:
+        for f in failures:
+            print(f"  FAIL  {f}", file=sys.stderr)
+        print(
+            f"\n{len(failures)} tracked metric(s) regressed by >"
+            f"{TOLERANCE:.0%} vs {base_dir}",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench trajectory within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
