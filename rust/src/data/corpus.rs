@@ -98,7 +98,9 @@ pub fn generate(preset: CorpusPreset, scale: f64, table: &WordTable, rng: &mut R
     let make_doc = |class: usize, rng: &mut Rng| -> Doc {
         let len = sample_len(mean_len, rng);
         let mut words = Vec::with_capacity(len);
-        let mut counts: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+        // BTreeMap: word order inside a doc must be deterministic across
+        // runs (HashMap's RandomState would silently break seeded replay).
+        let mut counts: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
         for _ in 0..len {
             let topic = if rng.f64() < overlap {
                 rng.below(table.topics)
@@ -167,6 +169,24 @@ mod tests {
         }
         let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
         assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        // Regression: the nBOW loop once iterated a HashMap, so two
+        // same-seed generates disagreed on word order inside each doc.
+        let gen = || {
+            let mut rng = Rng::new(9);
+            let table = WordTable::new(20, 30, 16, 0.3, &mut rng);
+            generate(CorpusPreset::Twitter, 0.15, &table, &mut rng)
+        };
+        let (a, b) = (gen(), gen());
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.n(), b.n());
+        for (da, db) in a.docs.iter().zip(&b.docs) {
+            assert_eq!(da.weights, db.weights, "weights must replay bitwise");
+            assert_eq!(da.words, db.words, "word vectors must replay bitwise");
+        }
     }
 
     #[test]

@@ -152,14 +152,24 @@ impl FastScan {
 }
 
 /// Coefficient of the f32 rounding margin: |dot64(u,v) − dot32(û,v̂)| ≤
-/// coeff·‖u‖·‖v‖ for d-term dots over f64-cast inputs — one half-ulp per
+/// coeff·‖u‖·‖v‖ + [`F32_MARGIN_ABS_FLOOR`] for d-term dots over
+/// f64-cast inputs, whenever the f32 dot is finite — one half-ulp per
 /// cast, one per product, d for any summation order, bounded through
 /// Cauchy–Schwarz on the absolute values, with a 4x safety factor.
-/// (Underflow-to-subnormal errors escape the relative model but are
-/// absolutely tiny; the 1e-12 absolute floor in every bound covers them.)
-fn f32_margin_coeff(dim: usize) -> f64 {
+/// Non-finite f32 dots (overflow past f32::MAX ≈ 3.4e38) carry no
+/// margin at all; the scan detects them with `is_finite` and falls back
+/// to exact f64 scoring. Fuzzed in `tests/f32_margin.rs` and mirrored
+/// numerically by `tools/validate_f32_margin.py`.
+pub fn f32_margin_coeff(dim: usize) -> f64 {
     4.0 * (dim as f64 + 4.0) * (f32::EPSILON as f64)
 }
+
+/// Absolute floor added to every rounding-margin bound. The relative
+/// model above breaks when f32 products underflow to subnormals or zero
+/// (the error stays ≈ d·1e-38 absolute while coeff·‖u‖·‖v‖ can shrink
+/// below it); this floor dominates those escapes by ~25 orders of
+/// magnitude while staying far beneath any observable score gap.
+pub const F32_MARGIN_ABS_FLOOR: f64 = 1e-12;
 
 /// f64 → f32 cast of a whole row (the fast scan's mirror builder).
 fn to_f32(v: &[f64]) -> Vec<f32> {
@@ -375,7 +385,8 @@ impl IvfIndex {
                     _ => dot(&u, &cell.centroid),
                 };
                 let raw = center + unorm * cell.radius + self.emb.gap;
-                let slack = 1e-6 * (unorm * (cnorm + cell.radius) + self.emb.gap) + 1e-12;
+                let slack =
+                    1e-6 * (unorm * (cnorm + cell.radius) + self.emb.gap) + F32_MARGIN_ABS_FLOOR;
                 (raw + slack, c)
             })
             .collect();
@@ -408,7 +419,7 @@ impl IvfIndex {
                     // overflows (−inf would wrongly skip a live
                     // candidate) — so ±inf/NaN scores are re-scored too.
                     let cm = (coeff.unwrap() + 1e-6) * unorm;
-                    let extra = 1e-6 * self.emb.gap + 1e-12 + self.emb.gap;
+                    let extra = 1e-6 * self.emb.gap + F32_MARGIN_ABS_FLOOR + self.emb.gap;
                     let block = &fs.blocks[c];
                     let ns = &fs.norms[c];
                     for (t, &j) in self.cells[c].members.iter().enumerate() {

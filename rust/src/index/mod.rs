@@ -26,5 +26,5 @@ pub mod ivf;
 pub mod signed;
 
 pub use batch::{rerank_exact, scan_batch, select_top_k, topk_batch};
-pub use ivf::{IvfConfig, IvfIndex, SearchStats};
+pub use ivf::{f32_margin_coeff, IvfConfig, IvfIndex, SearchStats, F32_MARGIN_ABS_FLOOR};
 pub use signed::SignedEmbedding;

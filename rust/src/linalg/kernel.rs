@@ -64,7 +64,7 @@ thread_local! {
 /// Pack `b` into `buf` and return the panel view over it.
 fn pack_b<'a>(b: &Mat, buf: &'a mut Vec<f64>) -> PackedB<'a> {
     let (k, n) = (b.rows, b.cols);
-    let np = (n + NR - 1) / NR;
+    let np = n.div_ceil(NR);
     buf.clear();
     buf.resize(np * k * NR, 0.0);
     for p in 0..np {
@@ -101,7 +101,7 @@ pub fn gemm_nn(a: &Mat, bp: &PackedB<'_>, row0: usize, chunk: &mut [f64]) {
         return;
     }
     let rows = chunk.len() / n;
-    let np = (n + NR - 1) / NR;
+    let np = n.div_ceil(NR);
     let mut i = 0;
     while i < rows {
         let mr = MR.min(rows - i);

@@ -83,9 +83,9 @@ pub fn split(total: usize, workers: usize, align: usize) -> Vec<Range<usize>> {
     }
     let align = align.max(1);
     let workers = workers.max(1);
-    let per = (total + workers - 1) / workers;
-    let chunk = ((per + align - 1) / align) * align;
-    let mut out = Vec::with_capacity((total + chunk - 1) / chunk);
+    let per = total.div_ceil(workers);
+    let chunk = per.div_ceil(align) * align;
+    let mut out = Vec::with_capacity(total.div_ceil(chunk));
     let mut start = 0;
     while start < total {
         let end = (start + chunk).min(total);

@@ -34,7 +34,7 @@ mod tests {
     fn passes_trivially_true_property() {
         check("reflexivity", 20, |rng| {
             let x = rng.f64();
-            assert!(x >= 0.0 && x < 1.0);
+            assert!((0.0..1.0).contains(&x));
         });
     }
 

@@ -1,0 +1,138 @@
+//! Property suite for the f32 fast-scan rounding margin: the pruning
+//! bound `|dot_f64(u,v) − dot_f32(û,v̂)| ≤ f32_margin_coeff(d)·‖u‖·‖v‖ +
+//! F32_MARGIN_ABS_FLOOR` must hold for every *finite* f32 dot, across
+//! randomized dimensions and scales — including the two regimes where
+//! the naive relative bound breaks and the implementation's escape
+//! hatches (the `is_finite` fallback and the absolute floor) are the
+//! only thing standing between "prune" and "drop a true neighbour".
+//!
+//! Numerically mirrored by `tools/validate_f32_margin.py` (numpy twin
+//! of `dot_f32`, same three regimes, denser sweeps).
+
+use simmat::index::{f32_margin_coeff, F32_MARGIN_ABS_FLOOR};
+use simmat::linalg::dot;
+use simmat::linalg::kernel::dot_f32;
+use simmat::util::rng::Rng;
+
+const DIMS: [usize; 19] = [
+    1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 256,
+];
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+fn norm(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+/// One random vector with per-element magnitude 10^U[lo,hi], mixed signs.
+fn scaled_vec(d: usize, lo: f64, hi: f64, rng: &mut Rng) -> Vec<f64> {
+    (0..d)
+        .map(|_| {
+            let mag = 10f64.powf(lo + (hi - lo) * rng.f64());
+            if rng.f64() < 0.5 {
+                -mag
+            } else {
+                mag
+            }
+        })
+        .collect()
+}
+
+/// Check the floored bound on one pair; returns whether the f32 dot was
+/// finite (non-finite dots carry no bound — the scan re-scores them).
+fn check_pair(u: &[f64], v: &[f64]) -> bool {
+    let exact = dot(u, v);
+    let approx = dot_f32(&to_f32(u), &to_f32(v)) as f64;
+    if !approx.is_finite() {
+        return false;
+    }
+    let bound = f32_margin_coeff(u.len()) * norm(u) * norm(v) + F32_MARGIN_ABS_FLOOR;
+    let err = (exact - approx).abs();
+    assert!(
+        err <= bound,
+        "margin violated at d={}: err {err:e} > bound {bound:e}",
+        u.len()
+    );
+    true
+}
+
+#[test]
+fn margin_holds_on_moderate_scales() {
+    let mut rng = Rng::new(11);
+    for trial in 0..4000 {
+        let d = DIMS[trial % DIMS.len()];
+        let u = scaled_vec(d, -6.0, 6.0, &mut rng);
+        let v = scaled_vec(d, -6.0, 6.0, &mut rng);
+        assert!(check_pair(&u, &v), "no overflow expected at 1e-6..1e6");
+    }
+}
+
+#[test]
+fn margin_holds_whenever_finite_near_overflow() {
+    // 1e18..1e25: f32 products run past f32::MAX ≈ 3.4e38. The bound
+    // must hold for every finite dot, and overflow must actually occur
+    // — otherwise the scan's `is_finite` fallback would be dead code
+    // and this regime untested.
+    let mut rng = Rng::new(12);
+    let mut overflowed = 0usize;
+    for trial in 0..3000 {
+        let d = DIMS[trial % DIMS.len()];
+        let u = scaled_vec(d, 18.0, 25.0, &mut rng);
+        let v = scaled_vec(d, 18.0, 25.0, &mut rng);
+        if !check_pair(&u, &v) {
+            overflowed += 1;
+        }
+    }
+    assert!(overflowed > 0, "1e18..1e25 inputs must exercise f32 overflow");
+}
+
+#[test]
+fn abs_floor_is_load_bearing_under_denormals() {
+    // 1e-44..1e-15 magnitudes: f32 products flush to subnormals/zero,
+    // the relative error model collapses, and only the absolute floor
+    // keeps the bound true. Assert both halves: the floored bound never
+    // fails, and the *unfloored* bound demonstrably does — if it never
+    // did, the floor (and this regime) could be silently dropped.
+    let mut rng = Rng::new(13);
+    let mut rel_violations = 0usize;
+    for trial in 0..3000 {
+        let d = DIMS[trial % DIMS.len()];
+        let u = scaled_vec(d, -44.0, -15.0, &mut rng);
+        let v = scaled_vec(d, -44.0, -15.0, &mut rng);
+        assert!(check_pair(&u, &v), "no overflow possible under 1e-15");
+        let exact = dot(&u, &v);
+        let approx = dot_f32(&to_f32(&u), &to_f32(&v)) as f64;
+        if (exact - approx).abs() > f32_margin_coeff(d) * norm(&u) * norm(&v) {
+            rel_violations += 1;
+        }
+    }
+    assert!(
+        rel_violations > 0,
+        "the pure relative bound should fail under f32 underflow"
+    );
+}
+
+#[test]
+fn floor_dwarfs_worst_underflow_escape() {
+    // Worst escape from the relative model: one smallest-normal-f32
+    // absolute error per term. The floor must dominate it by orders of
+    // magnitude at any dimension this codebase ever dots.
+    let worst = 1e6 * f32::MIN_POSITIVE as f64;
+    assert!(worst < F32_MARGIN_ABS_FLOOR * 1e-10);
+}
+
+#[test]
+fn coeff_grows_with_dimension_and_stays_tiny() {
+    // Sanity on the coefficient itself: monotone in d (longer dots
+    // accumulate more rounding) and far below any score gap the pruning
+    // threshold could care about at realistic ranks.
+    let mut prev = 0.0;
+    for d in DIMS {
+        let c = f32_margin_coeff(d);
+        assert!(c > prev, "coeff must grow with d");
+        assert!(c < 1e-3, "coeff at d={d} suspiciously large: {c}");
+        prev = c;
+    }
+}

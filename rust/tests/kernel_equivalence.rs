@@ -115,6 +115,106 @@ fn gram_nt_into_is_bit_identical_to_dot_per_entry() {
     }
 }
 
+/// Exhaustive sweep of the shapes the MR=4/NR=4 register tiling can get
+/// wrong: m and n exactly at and one past each tile boundary (4, 5, 8,
+/// 9), crossed with k ∈ {0, 1, 8, 9} — k=0 must yield an all-zero
+/// product, not garbage from an unentered accumulation loop. Bitwise
+/// against the naive references for all three transpose variants.
+#[test]
+fn tile_boundary_shapes_are_bit_identical() {
+    let mut rng = Rng::new(8);
+    for m in [4, 5, 8, 9] {
+        for n in [4, 5, 8, 9] {
+            for k in [0, 1, 8, 9] {
+                let a = Mat::gaussian(m, k, &mut rng);
+                let b = Mat::gaussian(k, n, &mut rng);
+                let want = matmul_naive(&a, &b);
+                if k == 0 {
+                    assert!(want.data.iter().all(|&x| x == 0.0), "empty-k reference");
+                }
+                for w in [1, 4] {
+                    let got = pool::with_workers(w, || a.matmul(&b));
+                    assert_eq!(got.data, want.data, "nn ({m},{k},{n}) w={w}");
+                }
+                let bt = Mat::gaussian(n, k, &mut rng);
+                let want = matmul_nt_naive(&a, &bt);
+                for w in [1, 4] {
+                    let got = pool::with_workers(w, || a.matmul_nt(&bt));
+                    assert_eq!(got.data, want.data, "nt ({m},{k},{n}) w={w}");
+                }
+                let at = Mat::gaussian(k, m, &mut rng);
+                let b2 = Mat::gaussian(k, n, &mut rng);
+                let want = matmul_tn_naive(&at, &b2);
+                for w in [1, 4] {
+                    let got = pool::with_workers(w, || at.matmul_tn(&b2));
+                    assert_eq!(got.data, want.data, "tn ({m},{k},{n}) w={w}");
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate GEMMs the tiling must not mangle: a single output row
+/// (the microkernel's partial-MR path on every tile) and a single
+/// output column (partial-NR on every panel), both ways round.
+#[test]
+fn single_row_and_single_column_gemm_are_bit_identical() {
+    let mut rng = Rng::new(9);
+    for k in [1, 4, 7, 16, 33] {
+        for other in [1, 4, 5, 9, 24] {
+            // 1 x k · k x other and other x k · k x 1.
+            let cases = [(1usize, other), (other, 1usize)];
+            for (m, n) in cases {
+                let a = Mat::gaussian(m, k, &mut rng);
+                let b = Mat::gaussian(k, n, &mut rng);
+                let want = matmul_naive(&a, &b);
+                let got = a.matmul(&b);
+                assert_eq!(got.data, want.data, "nn ({m},{k},{n})");
+                let bt = Mat::gaussian(n, k, &mut rng);
+                assert_eq!(
+                    a.matmul_nt(&bt).data,
+                    matmul_nt_naive(&a, &bt).data,
+                    "nt ({m},{k},{n})"
+                );
+            }
+        }
+    }
+}
+
+/// `push_row`'s geometric reserve policy, pinned at exact powers of two
+/// where an off-by-one in the doubling test would show: growing to 2^p
+/// rows costs O(p) reallocations, and the grown matrix is bit-identical
+/// to the batch-built reference.
+#[test]
+fn push_row_realloc_counts_at_powers_of_two() {
+    let mut rng = Rng::new(10);
+    for cols in [4usize, 5] {
+        for rows in [1024usize, 2048, 4096] {
+            let rws: Vec<Vec<f64>> = (0..rows)
+                .map(|_| (0..cols).map(|_| rng.normal()).collect())
+                .collect();
+            let mut m = Mat::zeros(0, cols);
+            let mut reallocs = 0usize;
+            let mut cap = m.data.capacity();
+            for r in &rws {
+                m.push_row(r);
+                if m.data.capacity() != cap {
+                    reallocs += 1;
+                    cap = m.data.capacity();
+                }
+            }
+            let budget = (rows * cols).ilog2() as usize + 2;
+            assert!(
+                reallocs <= budget,
+                "({rows}x{cols}): {reallocs} reallocs > budget {budget}"
+            );
+            let want = Mat::from_rows(rws.clone());
+            assert_eq!(m.rows, want.rows);
+            assert_eq!(m.data, want.data, "grown matrix must match batch build");
+        }
+    }
+}
+
 /// The f32 fast scan must return the same ranked lists — scores, order,
 /// tie-breaks, everything — as the exact f64 scan for every one of the
 /// seven approximation methods, at every pool size.

@@ -1,7 +1,11 @@
 #!/usr/bin/env python3
 """Compare fresh BENCH_*.json files against the checked-in baseline.
 
-Usage: python3 tools/compare_bench.py BENCH_baseline [fresh_dir]
+Usage:
+    python3 tools/compare_bench.py BENCH_baseline [fresh_dir]
+    python3 tools/compare_bench.py BENCH_baseline [fresh_dir] --freeze
+    python3 tools/compare_bench.py BENCH_baseline [fresh_dir] --freeze-if-provisional
+    python3 tools/compare_bench.py BENCH_baseline --check-frozen
 
 Tracks *relative* metrics only (speedups, recall, prune rate, overhead
 ratios) — both sides of each ratio are measured in the same process on
@@ -9,14 +13,29 @@ the same machine, so they are stable across hardware, unlike absolute
 queries/sec. Fails (exit 1) when any tracked metric regresses by more
 than TOLERANCE versus the baseline.
 
-A baseline file carrying "provisional": true records the *expected*
-trajectory before any CI run has frozen real numbers; provisional
-entries warn instead of failing. To freeze the current numbers as the
-baseline, run the benches and copy the fresh JSONs over
-BENCH_baseline/ (dropping the provisional flag):
+The gate is hard: a tracked metric read from a baseline that is missing,
+still carries "provisional": true, or holds a 0.0 placeholder value
+fails with "baseline is provisional — freeze first". It never divides by
+zero and never silently passes against a floor nobody measured.
 
+Modes:
+  (default)                gate fresh files against the baseline
+  --freeze                 copy fresh JSONs over the baseline, dropping
+                           the provisional flag; refuses to freeze a file
+                           whose tracked metrics are 0.0/missing (a bench
+                           that wrote placeholders must not become a
+                           baseline)
+  --freeze-if-provisional  like --freeze but only replaces baseline files
+                           that are absent or still provisional — CI's
+                           first-run bootstrap; committed real baselines
+                           are never clobbered by runner noise
+  --check-frozen           guard: exit 1 if any baseline file is missing,
+                           provisional, or carries a 0.0 tracked value
+
+Typical bring-up flow:
     cargo bench --bench microbench_hotpath
     python3 tools/compare_bench.py BENCH_baseline . --freeze
+    git add BENCH_baseline && git commit
 """
 
 import json
@@ -41,6 +60,12 @@ TRACKED = [
     ("BENCH_streaming.json", "drift_overhead_ratio", "lower"),
 ]
 
+FREEZE_FIRST = "baseline is provisional — freeze first"
+
+
+def tracked_files():
+    return sorted({f for f, _, _ in TRACKED})
+
 
 def lookup(doc, path):
     cur = doc
@@ -57,54 +82,110 @@ def lookup(doc, path):
     return float(cur)
 
 
-def main():
-    args = [a for a in sys.argv[1:] if not a.startswith("--")]
-    freeze = "--freeze" in sys.argv
-    if not args:
-        print(__doc__)
-        return 2
-    base_dir = args[0]
-    fresh_dir = args[1] if len(args) > 1 else "."
+def load(path):
+    with open(path) as f:
+        return json.load(f)
 
-    if freeze:
-        os.makedirs(base_dir, exist_ok=True)
-        frozen = 0
-        for fname in sorted({f for f, _, _ in TRACKED}):
-            src = os.path.join(fresh_dir, fname)
-            if not os.path.exists(src):
-                print(f"  skip  {fname}: not found in {fresh_dir}")
+
+def baseline_problems(base_dir):
+    """Why this baseline dir is not a frozen baseline (empty = frozen)."""
+    problems = []
+    for fname in tracked_files():
+        path = os.path.join(base_dir, fname)
+        if not os.path.exists(path):
+            problems.append(f"{fname}: missing from {base_dir}")
+            continue
+        doc = load(path)
+        if doc.get("provisional", False):
+            problems.append(f'{fname}: still carries "provisional": true')
+        for f, metric, _ in TRACKED:
+            if f != fname:
                 continue
-            with open(src) as f:
-                doc = json.load(f)
-            doc.pop("provisional", None)
-            with open(os.path.join(base_dir, fname), "w") as f:
-                json.dump(doc, f, indent=2)
-                f.write("\n")
-            frozen += 1
-        print(f"froze {frozen} baseline file(s) into {base_dir}")
-        return 0 if frozen else 1
+            try:
+                v = lookup(doc, metric)
+            except KeyError as e:
+                problems.append(f"{fname}:{metric}: {e}")
+                continue
+            if v == 0.0:
+                problems.append(f"{fname}:{metric}: 0.0 placeholder value")
+    return problems
 
-    failures = []
-    warnings = []
+
+def fresh_problems(doc, fname):
+    """Tracked metrics in a fresh file that must not be frozen as-is."""
+    problems = []
+    for f, metric, _ in TRACKED:
+        if f != fname:
+            continue
+        try:
+            v = lookup(doc, metric)
+        except KeyError as e:
+            problems.append(f"{fname}:{metric}: {e}")
+            continue
+        if v == 0.0:
+            problems.append(f"{fname}:{metric}: refusing to freeze a 0.0 value")
+    return problems
+
+
+def freeze(base_dir, fresh_dir, only_provisional=False):
+    """Copy fresh bench JSONs over the baseline. Returns (frozen, kept,
+    errors): files written, files left alone (already frozen), and
+    reasons nothing could be written."""
+    os.makedirs(base_dir, exist_ok=True)
+    frozen, kept, errors = [], [], []
+    for fname in tracked_files():
+        dst = os.path.join(base_dir, fname)
+        if only_provisional and os.path.exists(dst):
+            if not load(dst).get("provisional", False):
+                kept.append(fname)
+                continue
+        src = os.path.join(fresh_dir, fname)
+        if not os.path.exists(src):
+            errors.append(f"{fname}: not found in {fresh_dir}")
+            continue
+        doc = load(src)
+        problems = fresh_problems(doc, fname)
+        if problems:
+            errors.extend(problems)
+            continue
+        doc.pop("provisional", None)
+        doc.pop("note", None)
+        with open(dst, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        frozen.append(fname)
+    return frozen, kept, errors
+
+
+def gate(base_dir, fresh_dir):
+    """Run the regression gate. Returns (oks, failures) message lists."""
+    oks, failures = [], []
     for fname, path, direction in TRACKED:
         base_path = os.path.join(base_dir, fname)
         fresh_path = os.path.join(fresh_dir, fname)
         if not os.path.exists(fresh_path):
             failures.append(f"{fname}: fresh file missing at {fresh_path}")
             continue
-        with open(fresh_path) as f:
-            fresh_doc = json.load(f)
         if not os.path.exists(base_path):
-            warnings.append(f"{fname}: no baseline at {base_path} (run --freeze)")
+            failures.append(f"{fname}:{path}: {FREEZE_FIRST} (no baseline file)")
             continue
-        with open(base_path) as f:
-            base_doc = json.load(f)
-        provisional = bool(base_doc.get("provisional", False))
+        base_doc = load(base_path)
+        fresh_doc = load(fresh_path)
+        if base_doc.get("provisional", False):
+            failures.append(f"{fname}:{path}: {FREEZE_FIRST}")
+            continue
         try:
             base_v = lookup(base_doc, path)
+        except KeyError as e:
+            failures.append(f"{fname}:{path}: baseline: {e}")
+            continue
+        if base_v == 0.0:
+            failures.append(f"{fname}:{path}: {FREEZE_FIRST} (0.0 placeholder)")
+            continue
+        try:
             fresh_v = lookup(fresh_doc, path)
         except KeyError as e:
-            failures.append(f"{fname}:{path}: {e}")
+            failures.append(f"{fname}:{path}: fresh: {e}")
             continue
         if direction == "higher":
             ok = fresh_v >= base_v * (1.0 - TOLERANCE)
@@ -112,21 +193,62 @@ def main():
             ok = fresh_v <= base_v * (1.0 + TOLERANCE)
         arrow = "↑" if direction == "higher" else "↓"
         line = f"{fname}:{path} ({arrow}): baseline {base_v:.4g} fresh {fresh_v:.4g}"
-        if ok:
-            print(f"  ok    {line}")
-        elif provisional:
-            warnings.append(f"provisional baseline, not failing: {line}")
-        else:
-            failures.append(line)
+        (oks if ok else failures).append(line)
+    return oks, failures
 
-    for w in warnings:
-        print(f"  warn  {w}")
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    args = [a for a in argv if not a.startswith("--")]
+    flags = {a for a in argv if a.startswith("--")}
+    unknown = flags - {"--freeze", "--freeze-if-provisional", "--check-frozen"}
+    if unknown:
+        print(f"unknown flag(s): {sorted(unknown)}", file=sys.stderr)
+        return 2
+    if not args:
+        print(__doc__)
+        return 2
+    base_dir = args[0]
+    fresh_dir = args[1] if len(args) > 1 else "."
+
+    if "--check-frozen" in flags:
+        problems = baseline_problems(base_dir)
+        for p in problems:
+            print(f"  FAIL  {p}", file=sys.stderr)
+        if problems:
+            print(
+                f"\n{base_dir} is not a frozen baseline: run the benches and "
+                "`tools/compare_bench.py BENCH_baseline . --freeze`, then "
+                "commit the result",
+                file=sys.stderr,
+            )
+            return 1
+        print(f"{base_dir}: all baselines frozen (non-zero, no provisional flag)")
+        return 0
+
+    if "--freeze" in flags or "--freeze-if-provisional" in flags:
+        only_prov = "--freeze-if-provisional" in flags
+        frozen, kept, errors = freeze(base_dir, fresh_dir, only_prov)
+        for f in frozen:
+            print(f"  froze {f}")
+        for f in kept:
+            print(f"  kept  {f}: already frozen")
+        for e in errors:
+            print(f"  FAIL  {e}", file=sys.stderr)
+        if errors:
+            return 1
+        print(f"froze {len(frozen)} baseline file(s) into {base_dir}")
+        return 0
+
+    oks, failures = gate(base_dir, fresh_dir)
+    for line in oks:
+        print(f"  ok    {line}")
     if failures:
         for f in failures:
             print(f"  FAIL  {f}", file=sys.stderr)
         print(
-            f"\n{len(failures)} tracked metric(s) regressed by >"
-            f"{TOLERANCE:.0%} vs {base_dir}",
+            f"\n{len(failures)} tracked metric(s) failed the gate "
+            f"(tolerance {TOLERANCE:.0%}) vs {base_dir}",
             file=sys.stderr,
         )
         return 1

@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Self-test for tools/compare_bench.py — the gate that gates the gate.
+
+Covers the failure modes the bring-up issue called out: a 0.0 or missing
+baseline must fail with "baseline is provisional — freeze first" (never
+divide by zero, never silently pass), freezing must refuse placeholder
+values, and --freeze-if-provisional must not clobber committed
+baselines.
+
+Runs standalone (`python3 tools/test_compare_bench.py`) or under pytest
+(`python3 -m pytest tools/test_compare_bench.py -q`).
+"""
+
+import copy
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import compare_bench as cb  # noqa: E402
+
+# A minimal, fully-measured document set covering every TRACKED metric.
+GOOD = {
+    "BENCH_kernels.json": {
+        "gemm": [
+            {"shape": "gather_n_x_s", "speedup": 2.5},
+            {"shape": "core_s_x_s", "speedup": 1.2},
+            {"shape": "scan_r_wide", "speedup": 1.4},
+        ],
+        "ivf_fast_scan": {"speedup": 1.8},
+    },
+    "BENCH_simeval.json": {"wmd_eval": {"speedup": 3.0}},
+    "BENCH_topk.json": {"speedup": 8.0, "recall_at_k": 0.97, "prune_rate": 0.6},
+    "BENCH_streaming.json": {"drift_overhead_ratio": 0.3},
+}
+
+
+def write_docs(d, docs):
+    os.makedirs(d, exist_ok=True)
+    for fname, doc in docs.items():
+        with open(os.path.join(d, fname), "w") as f:
+            json.dump(doc, f)
+
+
+def dirs(base_docs, fresh_docs):
+    tmp = tempfile.mkdtemp(prefix="cmpbench_")
+    base, fresh = os.path.join(tmp, "base"), os.path.join(tmp, "fresh")
+    if base_docs is not None:
+        write_docs(base, base_docs)
+    write_docs(fresh, fresh_docs)
+    return base, fresh
+
+
+def test_identical_docs_pass():
+    base, fresh = dirs(GOOD, GOOD)
+    oks, failures = cb.gate(base, fresh)
+    assert not failures, failures
+    assert len(oks) == len(cb.TRACKED)
+    assert cb.main([base, fresh]) == 0
+
+
+def test_regression_beyond_tolerance_fails():
+    worse = copy.deepcopy(GOOD)
+    worse["BENCH_topk.json"]["speedup"] = 8.0 * (1 - cb.TOLERANCE) - 0.1
+    base, fresh = dirs(GOOD, worse)
+    _, failures = cb.gate(base, fresh)
+    assert any("BENCH_topk.json:speedup" in f for f in failures)
+    assert cb.main([base, fresh]) == 1
+
+
+def test_lower_is_better_direction():
+    worse = copy.deepcopy(GOOD)
+    worse["BENCH_streaming.json"]["drift_overhead_ratio"] = 0.3 * 1.5
+    base, fresh = dirs(GOOD, worse)
+    _, failures = cb.gate(base, fresh)
+    assert any("drift_overhead_ratio" in f for f in failures)
+
+
+def test_within_tolerance_regression_passes():
+    slightly = copy.deepcopy(GOOD)
+    slightly["BENCH_topk.json"]["speedup"] = 8.0 * (1 - cb.TOLERANCE) + 0.1
+    base, fresh = dirs(GOOD, slightly)
+    _, failures = cb.gate(base, fresh)
+    assert not failures, failures
+
+
+def test_zero_baseline_fails_with_freeze_first_not_zero_division():
+    placeholder = copy.deepcopy(GOOD)
+    placeholder["BENCH_topk.json"]["speedup"] = 0.0
+    base, fresh = dirs(placeholder, GOOD)
+    _, failures = cb.gate(base, fresh)  # must not raise ZeroDivisionError
+    hits = [f for f in failures if cb.FREEZE_FIRST in f and "topk" in f]
+    assert hits, failures
+    assert cb.main([base, fresh]) == 1
+
+
+def test_provisional_baseline_fails_even_when_values_look_fine():
+    prov = copy.deepcopy(GOOD)
+    for doc in prov.values():
+        doc["provisional"] = True
+    base, fresh = dirs(prov, GOOD)
+    _, failures = cb.gate(base, fresh)
+    assert len(failures) == len(cb.TRACKED)
+    assert all(cb.FREEZE_FIRST in f for f in failures)
+
+
+def test_missing_baseline_fails_not_warns():
+    base, fresh = dirs(None, GOOD)
+    _, failures = cb.gate(base, fresh)
+    assert failures and all(cb.FREEZE_FIRST in f for f in failures)
+
+
+def test_missing_fresh_file_fails():
+    fresh_partial = {k: v for k, v in GOOD.items() if k != "BENCH_topk.json"}
+    base, fresh = dirs(GOOD, fresh_partial)
+    _, failures = cb.gate(base, fresh)
+    assert any("fresh file missing" in f for f in failures)
+
+
+def test_freeze_refuses_placeholder_values():
+    zeros = copy.deepcopy(GOOD)
+    zeros["BENCH_simeval.json"]["wmd_eval"]["speedup"] = 0.0
+    base, fresh = dirs(None, zeros)
+    frozen, _, errors = cb.freeze(base, fresh)
+    assert any("refusing to freeze" in e for e in errors)
+    assert "BENCH_simeval.json" not in frozen
+    assert cb.main([base, fresh, "--freeze"]) == 1
+
+
+def test_freeze_drops_provisional_flag_and_gate_then_passes():
+    prov = copy.deepcopy(GOOD)
+    for doc in prov.values():
+        doc["provisional"] = True
+        doc["note"] = "placeholder note"
+    base, fresh = dirs(None, prov)
+    frozen, _, errors = cb.freeze(base, fresh)
+    assert not errors and len(frozen) == len(cb.tracked_files())
+    for fname in frozen:
+        with open(os.path.join(base, fname)) as f:
+            doc = json.load(f)
+        assert "provisional" not in doc and "note" not in doc
+    _, failures = cb.gate(base, fresh)
+    assert not failures
+    assert not cb.baseline_problems(base)
+
+
+def test_freeze_if_provisional_keeps_committed_baselines():
+    faster = copy.deepcopy(GOOD)
+    faster["BENCH_topk.json"]["speedup"] = 100.0
+    base, fresh = dirs(GOOD, faster)  # baseline already frozen
+    frozen, kept, errors = cb.freeze(base, fresh, only_provisional=True)
+    assert not errors and not frozen
+    assert set(kept) == set(cb.tracked_files())
+    with open(os.path.join(base, "BENCH_topk.json")) as f:
+        assert json.load(f)["speedup"] == 8.0  # not clobbered
+
+
+def test_check_frozen_guard():
+    base, _ = dirs(GOOD, GOOD)
+    assert cb.main([base, "--check-frozen"]) == 0
+    prov = copy.deepcopy(GOOD)
+    prov["BENCH_kernels.json"]["provisional"] = True
+    base2, _ = dirs(prov, GOOD)
+    assert cb.main([base2, "--check-frozen"]) == 1
+    assert any("provisional" in p for p in cb.baseline_problems(base2))
+
+
+def test_unknown_flag_rejected():
+    assert cb.main(["BENCH_baseline", "--frooze"]) == 2
+
+
+def main():
+    tests = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for t in tests:
+        t()
+        print(f"  ok    {t.__name__}")
+    print(f"{len(tests)} compare_bench self-tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

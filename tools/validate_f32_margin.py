@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Numerical validation of the IVF f32 fast-scan rounding margin.
+
+Mirrors `index::ivf::f32_margin_coeff` and `linalg::kernel::dot_f32`
+bit-exactly (8 partial f32 accumulators, pairwise combine, sequential
+tail) and fuzzes the documented bound
+
+    |dot_f64(u, v) - dot_f32(u32, v32)| <= coeff(d) * |u| * |v| + FLOOR
+
+over randomized dimensions and scales, including the regimes the Rust
+unit tests cannot sweep densely:
+
+  * near-overflow inputs (1e18 .. 1e25): f32 products overflow to +-inf,
+    the bound does NOT apply, and the scan's `is_finite` guard is the
+    only defence — we verify non-finite results actually occur there;
+  * denormal / underflow inputs: f32 products flush below the subnormal
+    range, the *relative* part of the bound collapses, and only the
+    absolute floor keeps the inequality true — we verify both that the
+    pure relative bound is violated (the floor is load-bearing) and
+    that the floored bound always holds.
+
+Runs standalone (`python3 tools/validate_f32_margin.py`) or under
+pytest (`python3 -m pytest tools/validate_f32_margin.py -q`).
+"""
+
+import math
+
+import numpy as np
+
+F32_EPS = float(np.finfo(np.float32).eps)  # 2^-23, matches f32::EPSILON
+ABS_FLOOR = 1e-12  # index::ivf::F32_MARGIN_ABS_FLOOR
+
+
+def margin_coeff(dim):
+    """Mirror of `index::ivf::f32_margin_coeff`."""
+    return 4.0 * (dim + 4.0) * F32_EPS
+
+
+def dot_f32(a64, b64):
+    """Bit-exact mirror of `linalg::kernel::dot_f32` on f64-cast inputs."""
+    a = a64.astype(np.float32)
+    b = b64.astype(np.float32)
+    d = len(a)
+    p = np.zeros(8, dtype=np.float32)
+    with np.errstate(over="ignore", invalid="ignore", under="ignore"):
+        for c in range(d // 8):
+            p = p + a[8 * c : 8 * c + 8] * b[8 * c : 8 * c + 8]
+        s = ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]))
+        for i in range(8 * (d // 8), d):
+            s = np.float32(s + a[i] * b[i])
+    return float(s)
+
+
+def dot_f64(a, b):
+    return math.fsum(float(x) * float(y) for x, y in zip(a, b))
+
+
+DIMS = [1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 256]
+
+
+def fuzz(rng, log10_lo, log10_hi, trials, dims=DIMS):
+    """Yield (d, err, rel_bound, floored_bound, finite) per trial with
+    per-element magnitudes log-uniform in [10^lo, 10^hi]."""
+    for _ in range(trials):
+        d = dims[rng.integers(len(dims))]
+        mag = 10.0 ** rng.uniform(log10_lo, log10_hi, size=(2, d))
+        sign = rng.choice([-1.0, 1.0], size=(2, d))
+        u, v = mag * sign
+        exact = dot_f64(u, v)
+        approx = dot_f32(u, v)
+        rel = margin_coeff(d) * float(np.linalg.norm(u)) * float(np.linalg.norm(v))
+        finite = math.isfinite(approx)
+        err = abs(exact - approx) if finite else math.inf
+        yield d, err, rel, rel + ABS_FLOOR, finite
+
+
+def test_margin_holds_on_moderate_scales():
+    """Normal operating range: bound holds with room to spare."""
+    rng = np.random.default_rng(1)
+    worst = 0.0
+    for d, err, _, bound, finite in fuzz(rng, -6.0, 6.0, 4000):
+        assert finite
+        assert err <= bound, f"d={d}: err {err} > bound {bound}"
+        worst = max(worst, err / bound)
+    # The 4x safety factor should leave at least 2x observed headroom.
+    assert worst < 0.5, f"margin nearly exhausted: worst ratio {worst}"
+
+
+def test_margin_holds_whenever_f32_is_finite_near_overflow():
+    """1e18..1e25: overflow to non-finite must occur (proving the scan's
+    is_finite guard is load-bearing); every finite result obeys the bound."""
+    rng = np.random.default_rng(2)
+    overflowed = 0
+    for d, err, _, bound, finite in fuzz(rng, 18.0, 25.0, 3000):
+        if not finite:
+            overflowed += 1
+            continue
+        assert err <= bound, f"d={d}: err {err} > bound {bound}"
+    assert overflowed > 0, "expected f32 overflow in the 1e18..1e25 regime"
+
+
+def test_abs_floor_is_load_bearing_under_denormals():
+    """Denormal/underflow regime: the pure relative bound fails, the
+    floored bound never does — exactly why F32_MARGIN_ABS_FLOOR exists."""
+    rng = np.random.default_rng(3)
+    rel_violations = 0
+    for d, err, rel, bound, finite in fuzz(rng, -44.0, -15.0, 3000):
+        assert finite
+        assert err <= bound, f"d={d}: err {err} > floored bound {bound}"
+        if err > rel:
+            rel_violations += 1
+    assert rel_violations > 0, (
+        "expected the pure relative bound to fail under f32 underflow; "
+        "if it never does, the floor could be removed"
+    )
+
+
+def test_floor_dwarfs_worst_underflow_error():
+    """The floor must dominate the worst possible underflow escape:
+    d * (smallest normal f32) per term, with 25+ orders of headroom."""
+    worst_escape = max(DIMS) * float(np.finfo(np.float32).tiny)
+    assert worst_escape < ABS_FLOOR * 1e-20
+
+
+def main():
+    tests = [
+        test_margin_holds_on_moderate_scales,
+        test_margin_holds_whenever_f32_is_finite_near_overflow,
+        test_abs_floor_is_load_bearing_under_denormals,
+        test_floor_dwarfs_worst_underflow_error,
+    ]
+    for t in tests:
+        t()
+        print(f"  ok    {t.__name__}")
+    # Tightness report: worst observed err/bound ratio at moderate scale.
+    rng = np.random.default_rng(4)
+    worst = 0.0
+    for _, err, _, bound, finite in fuzz(rng, -3.0, 3.0, 4000):
+        if finite:
+            worst = max(worst, err / bound)
+    print(f"worst err/bound ratio at moderate scale: {worst:.4f}")
+    print("f32 margin bound validated (overflow guarded, floor load-bearing)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())
