@@ -1,0 +1,104 @@
+//! Fault tolerance end to end: a flaky similarity backend (seeded,
+//! deterministic fault injection) behind the retrying wrapper heals to a
+//! **bit-identical** factorization — Δ(i,j) is a pure function of the
+//! indices, so a retry re-buys exactly the same values — and retries are
+//! metered in the same Δ-call currency as every other oracle cost. Then
+//! the backend dies for good mid-maintenance and the streaming
+//! coordinator degrades gracefully: the previous snapshot keeps serving
+//! and `health_summary()` says so.
+//!
+//! Run: cargo run --release --example fault_tolerance
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use simmat::coordinator::{Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig};
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{
+    CountingOracle, FaultMode, FaultTolerantOracle, FlakyOracle, PrefixOracle, RetryConfig,
+};
+use simmat::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let n = 120;
+    let base = NearPsdOracle::new(n, 12, 0.3, &mut rng);
+
+    // --- 1. transient faults heal to a bit-identical build ---
+    let plan = Method::SmsNystrom.sample_plan(n, 16, &mut Rng::new(1));
+    let (clean, _) = Method::SmsNystrom
+        .build_with_plan(&base, &plan, &mut Rng::new(2))
+        .unwrap();
+    // 2% of pairs fail transiently (healing after one failure each);
+    // `FaultMode::Transient` surfaces one faulted pair per attempt, so
+    // budget a full retry_chunk of retries per sub-batch.
+    let flaky = FlakyOracle::new(&base, FaultMode::Transient { rate: 0.02 }, 11, 1);
+    let counter = CountingOracle::new(&flaky);
+    let cfg = RetryConfig::default();
+    let cfg = RetryConfig {
+        max_retries: cfg.retry_chunk as u32,
+        ..cfg
+    };
+    let ft = FaultTolerantOracle::new(&counter, cfg);
+    let (healed, _) = Method::SmsNystrom
+        .try_build_with_plan(&ft, &plan, &mut Rng::new(2))
+        .unwrap();
+    assert_eq!(healed.left.data, clean.left.data);
+    assert_eq!(healed.right_t.data, clean.right_t.data);
+    println!(
+        "transient faults at 2%: healed in {} retries, {} metered Δ calls — \
+         bit-identical to the fault-free build",
+        ft.retries(),
+        counter.calls()
+    );
+
+    // --- 2. persistent outage mid-rebuild: serve the stale snapshot ---
+    let prefix = PrefixOracle::new(&base, 80);
+    let cfg = StreamConfig {
+        probe_pairs: 16,
+        epoch: 8,
+        // Any measured drift triggers a rebuild once one insert landed.
+        policy: RebuildPolicy {
+            drift_threshold: -1.0,
+            min_inserts: 1,
+        },
+    };
+    let svc = SimilarityService::build_streaming(&prefix, Method::SmsNystrom, 16, 32, cfg, &mut rng)
+        .unwrap();
+    println!(
+        "built {} over the 80-doc prefix ({} Δ calls)",
+        svc.stats.method.name(),
+        svc.stats.oracle_calls
+    );
+    // The backend serves the insert extension (8 docs x 16 landmarks =
+    // 128 pairs) and the drift probe (16 pairs), then dies for good —
+    // the rebuild's very first evaluation fails.
+    let outage = FlakyOracle::new(&base, FaultMode::Transient { rate: 0.0 }, 0, 0);
+    outage.outage_after_pairs(128 + 16);
+    let ids: Vec<usize> = (80..88).collect();
+    let report = svc.insert_batch(&outage, &ids).unwrap();
+    assert!(!report.rebuilt);
+    println!(
+        "insert of {} docs committed; degraded: {}",
+        report.inserted,
+        report.degraded.as_deref().unwrap_or("(none)")
+    );
+    // The grown store keeps answering from the last good snapshot.
+    assert_eq!(svc.n(), 88);
+    match svc.respond(&Query::Entry(87, 3)) {
+        Response::Scalar(v) => println!("query on the stale snapshot: K(87,3) = {v:.4}"),
+        other => panic!("expected a scalar, got {other:?}"),
+    }
+    // With the backend still dark, the next insert aborts cleanly.
+    let err = svc.insert(&outage, 88).unwrap_err();
+    println!("next insert against the dark backend: {err}");
+    assert_eq!(svc.n(), 88, "a failed insert must leave the store untouched");
+    assert_eq!(svc.metrics.oracle_failures.load(Relaxed), 2);
+    println!("health: {}", svc.metrics.health_summary());
+    assert!(svc.metrics.health_summary().starts_with("status=degraded"));
+
+    // --- 3. malformed queries get a structured error, never a panic ---
+    match svc.respond(&Query::Row(5_000)) {
+        Response::Error(msg) => println!("out-of-range query: {msg}"),
+        other => panic!("expected a structured error, got {other:?}"),
+    }
+}

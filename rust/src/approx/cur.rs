@@ -9,8 +9,9 @@
 //!   linear-time CUR of Drineas et al. 2006; variants (s) S1 = S2 and
 //!   (d) independent samples.
 
+use super::error::ApproxError;
 use super::factored::Factored;
-use super::gather::column_blocks;
+use super::gather::try_column_blocks;
 use super::sampling::LandmarkPlan;
 use crate::linalg::{pinv, svd, Mat};
 use crate::sim::SimOracle;
@@ -44,21 +45,25 @@ pub fn sicur(
 /// Shared core: K̃ = C U R with C = K S1 (n x s1), R = S2ᵀ K (s2 x n) and
 /// U = (S2ᵀ K S1)⁺ (s1 x s2).
 pub fn cur_with_plan(oracle: &dyn SimOracle, plan: &LandmarkPlan) -> Result<Factored, String> {
-    cur_parts(oracle, plan).map(|(f, _)| f)
+    cur_parts(oracle, plan)
+        .map(|(f, _)| f)
+        .map_err(String::from)
 }
 
 /// Build plus the joining matrix U = (S2ᵀ K S1)⁺ — the per-row map the
 /// out-of-sample extension (`approx::extend`) applies to a new document's
 /// S1 similarities (its right-factor row is the gathered S2 similarities).
+/// Fallible: an oracle fault surfaces as [`ApproxError::Oracle`] before
+/// any factorization math runs.
 pub(crate) fn cur_parts(
     oracle: &dyn SimOracle,
     plan: &LandmarkPlan,
-) -> Result<(Factored, Mat), String> {
+) -> Result<(Factored, Mat), ApproxError> {
     // R as its transpose K S2 (n x s2) — row-contiguous for serving. When
     // S1 ⊆ S2 we slice C out of it instead of re-querying the oracle;
     // otherwise the union gather still dedups any colliding columns.
     let (c, r_t) = if plan.is_nested() {
-        let r_t = oracle.columns(&plan.s2);
+        let r_t = oracle.try_columns(&plan.s2)?;
         let pos: Vec<usize> = plan
             .s1
             .iter()
@@ -66,7 +71,7 @@ pub(crate) fn cur_parts(
             .collect();
         (r_t.select_cols(&pos), r_t)
     } else {
-        column_blocks(oracle, &plan.s1, &plan.s2)
+        try_column_blocks(oracle, &plan.s1, &plan.s2)?
     };
     // Inner matrix S2ᵀ K S1 (s2 x s1): rows S2 of C.
     let inner = c.select_rows(&plan.s2);
@@ -100,7 +105,9 @@ pub fn stacur_with_plan(
     plan: &LandmarkPlan,
     shared: bool,
 ) -> Result<Factored, String> {
-    stacur_parts(oracle, plan, shared).map(|(f, _)| f)
+    stacur_parts(oracle, plan, shared)
+        .map(|(f, _)| f)
+        .map_err(String::from)
 }
 
 /// Build plus the effective joining map U·c* (scale calibration folded
@@ -112,17 +119,17 @@ pub(crate) fn stacur_parts(
     oracle: &dyn SimOracle,
     plan: &LandmarkPlan,
     shared: bool,
-) -> Result<(Factored, Mat), String> {
+) -> Result<(Factored, Mat), ApproxError> {
     let n = oracle.n();
     let s = plan.s1.len();
     let (c, r_t) = if shared {
-        let c = oracle.columns(&plan.s1); // n x s
+        let c = oracle.try_columns(&plan.s1)?; // n x s
         let r_t = c.clone();
         (c, r_t)
     } else {
         // Independent samples can still collide; the union gather pays
         // n·|S1 ∪ S2| Δ calls instead of 2·n·s.
-        column_blocks(oracle, &plan.s1, &plan.s2)
+        try_column_blocks(oracle, &plan.s1, &plan.s2)?
     };
     // S1ᵀ K S2 (s x s): rows S1 of K S2.
     let inner = r_t.select_rows(&plan.s1);

@@ -1,9 +1,56 @@
 //! Approximation-error metrics: relative Frobenius error ‖K − K̃‖_F/‖K‖_F
 //! (the paper's Fig. 3 / Table 7 measure), computed blockwise against the
-//! factored form without materializing K̃ separately.
+//! factored form without materializing K̃ separately — plus the typed
+//! build-failure error ([`ApproxError`]) the fallible `try_` build paths
+//! return.
 
 use super::factored::Factored;
 use crate::linalg::{dot, Mat};
+use crate::sim::OracleError;
+
+/// Why a sublinear build (or streaming extension) failed: either the
+/// similarity backend faulted mid-gather, or the numerics gave out
+/// (eigendecomposition no-convergence, degenerate pseudo-inverse). The
+/// string-based public builders (`nystrom`, `sms_nystrom`, ...) flatten
+/// this to their legacy `Result<_, String>`; callers that need to
+/// distinguish retryable oracle faults from hopeless numerics use the
+/// `try_` variants.
+#[derive(Clone, Debug)]
+pub enum ApproxError {
+    /// A gather failed after the oracle layer gave up.
+    Oracle(OracleError),
+    /// The oracle answered but the factorization math failed.
+    Numeric(String),
+}
+
+impl std::fmt::Display for ApproxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApproxError::Oracle(e) => write!(f, "oracle fault during build: {e}"),
+            ApproxError::Numeric(m) => write!(f, "numeric failure during build: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ApproxError {}
+
+impl From<OracleError> for ApproxError {
+    fn from(e: OracleError) -> Self {
+        ApproxError::Oracle(e)
+    }
+}
+
+impl From<String> for ApproxError {
+    fn from(m: String) -> Self {
+        ApproxError::Numeric(m)
+    }
+}
+
+impl From<ApproxError> for String {
+    fn from(e: ApproxError) -> Self {
+        e.to_string()
+    }
+}
 
 /// ‖K − L·Rᵀ‖_F / ‖K‖_F.
 pub fn rel_fro_error(k: &Mat, f: &Factored) -> f64 {

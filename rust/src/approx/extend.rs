@@ -29,13 +29,14 @@
 //! exactly this kind of degradation and trigger a rebuild.
 
 use super::cur::{cur_parts, stacur_parts};
+use super::error::ApproxError;
 use super::factored::Factored;
 use super::gather::union_with_positions;
 use super::nystrom::nystrom_parts;
 use super::sampling::LandmarkPlan;
 use super::sms::{sms_parts, SmsConfig, SmsResult};
 use crate::linalg::Mat;
-use crate::sim::SimOracle;
+use crate::sim::{OracleError, SimOracle};
 use crate::util::rng::Rng;
 
 /// How the right-factor row of an inserted document is produced.
@@ -74,7 +75,19 @@ impl Extension {
     /// grown corpus): exactly `ids.len() * per_insert_calls()` Δ calls,
     /// no access to the existing store — callers can hold no lock here.
     pub fn extension_rows(&self, oracle: &dyn SimOracle, ids: &[usize]) -> (Mat, Mat) {
-        let block = oracle.block(ids, &self.landmarks); // m x |landmarks|
+        self.try_extension_rows(oracle, ids)
+            .unwrap_or_else(|e| panic!("extension gather failed: {e}"))
+    }
+
+    /// Fallible twin of [`Self::extension_rows`]: a failed gather
+    /// surfaces as `Err` with no partial rows, so the coordinator can
+    /// abort the insert and keep serving the previous snapshot.
+    pub fn try_extension_rows(
+        &self,
+        oracle: &dyn SimOracle,
+        ids: &[usize],
+    ) -> Result<(Mat, Mat), OracleError> {
+        let block = oracle.try_block(ids, &self.landmarks)?; // m x |landmarks|
         let mut left = Mat::zeros(ids.len(), self.m_left.cols);
         for r in 0..ids.len() {
             let krow = block.row(r);
@@ -100,7 +113,7 @@ impl Extension {
                 right
             }
         };
-        (left, right)
+        Ok((left, right))
     }
 
     /// Append precomputed extension rows to the store (the coordinator
@@ -121,6 +134,20 @@ impl Extension {
         let (left, right) = self.extension_rows(oracle, ids);
         self.append_rows(f, &left, &right);
     }
+
+    /// Fallible twin of [`Self::extend`]: on `Err` the store is
+    /// untouched (the gather runs to completion or fails before any row
+    /// is appended).
+    pub fn try_extend(
+        &self,
+        f: &mut Factored,
+        oracle: &dyn SimOracle,
+        ids: &[usize],
+    ) -> Result<(), OracleError> {
+        let (left, right) = self.try_extension_rows(oracle, ids)?;
+        self.append_rows(f, &left, &right);
+        Ok(())
+    }
 }
 
 /// Classic Nyström build plus its extension (s Δ calls per insert).
@@ -128,6 +155,14 @@ pub fn nystrom_extended(
     oracle: &dyn SimOracle,
     landmarks: &[usize],
 ) -> Result<(Factored, Extension), String> {
+    try_nystrom_extended(oracle, landmarks).map_err(String::from)
+}
+
+/// Fallible twin of [`nystrom_extended`] preserving the error taxonomy.
+pub fn try_nystrom_extended(
+    oracle: &dyn SimOracle,
+    landmarks: &[usize],
+) -> Result<(Factored, Extension), ApproxError> {
     let (f, w_pinv) = nystrom_parts(oracle, landmarks)?;
     let s = landmarks.len();
     let ext = Extension {
@@ -150,6 +185,16 @@ pub fn sms_extended(
     cfg: SmsConfig,
     rng: &mut Rng,
 ) -> Result<(SmsResult, Extension), String> {
+    try_sms_extended(oracle, plan, cfg, rng).map_err(String::from)
+}
+
+/// Fallible twin of [`sms_extended`] preserving the error taxonomy.
+pub fn try_sms_extended(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+    cfg: SmsConfig,
+    rng: &mut Rng,
+) -> Result<(SmsResult, Extension), ApproxError> {
     let (res, inv_sqrt) = sms_parts(oracle, plan, cfg, rng)?;
     let s1 = plan.s1.len();
     let ext = Extension {
@@ -167,6 +212,14 @@ pub fn cur_extended(
     oracle: &dyn SimOracle,
     plan: &LandmarkPlan,
 ) -> Result<(Factored, Extension), String> {
+    try_cur_extended(oracle, plan).map_err(String::from)
+}
+
+/// Fallible twin of [`cur_extended`] preserving the error taxonomy.
+pub fn try_cur_extended(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+) -> Result<(Factored, Extension), ApproxError> {
     let (f, u) = cur_parts(oracle, plan)?;
     let (landmarks, s1_pos, s2_pos) = union_with_positions(&plan.s1, &plan.s2);
     let ext = Extension {
@@ -186,6 +239,15 @@ pub fn stacur_extended(
     plan: &LandmarkPlan,
     shared: bool,
 ) -> Result<(Factored, Extension), String> {
+    try_stacur_extended(oracle, plan, shared).map_err(String::from)
+}
+
+/// Fallible twin of [`stacur_extended`] preserving the error taxonomy.
+pub fn try_stacur_extended(
+    oracle: &dyn SimOracle,
+    plan: &LandmarkPlan,
+    shared: bool,
+) -> Result<(Factored, Extension), ApproxError> {
     let (f, u_eff) = stacur_parts(oracle, plan, shared)?;
     let (landmarks, s1_pos, s2_pos) = union_with_positions(&plan.s1, &plan.s2);
     let ext = Extension {

@@ -18,7 +18,7 @@
 //! `tests/eval_economy.rs` and the microbench smoke check).
 
 use crate::linalg::Mat;
-use crate::sim::SimOracle;
+use crate::sim::{OracleError, SimOracle};
 
 /// Plan for the C = K·S1 / W2 = S2ᵀKS2 block pair of a two-stage build.
 pub struct GatherPlan {
@@ -73,10 +73,18 @@ impl GatherPlan {
     /// Fetch C with a sharded gather, then assemble W2 from C's rows where
     /// the plans overlap and a sharded gather of only the missing columns.
     pub fn execute(&self, oracle: &dyn SimOracle) -> GatherBlocks {
-        let columns = oracle.columns(&self.s1);
+        self.try_execute(oracle)
+            .unwrap_or_else(|e| panic!("gather failed: {e}"))
+    }
+
+    /// Fallible twin of [`Self::execute`]: a failed gather surfaces as
+    /// `Err` and no partial blocks are observed. Identical sharding and
+    /// assembly — on `Ok` the blocks are bit-identical to `execute`'s.
+    pub fn try_execute(&self, oracle: &dyn SimOracle) -> Result<GatherBlocks, OracleError> {
+        let columns = oracle.try_columns(&self.s1)?;
         let miss_cols: Vec<usize> = self.misses.iter().map(|&c| self.s2[c]).collect();
         // s2 x |misses| block of entries C cannot provide.
-        let fresh = oracle.block(&self.s2, &miss_cols);
+        let fresh = oracle.try_block(&self.s2, &miss_cols)?;
         let mut submatrix = Mat::zeros(self.s2.len(), self.s2.len());
         for (r, &i) in self.s2.iter().enumerate() {
             let mut m = 0;
@@ -92,7 +100,7 @@ impl GatherPlan {
                 submatrix.set(r, c, v);
             }
         }
-        GatherBlocks { columns, submatrix }
+        Ok(GatherBlocks { columns, submatrix })
     }
 }
 
@@ -123,9 +131,18 @@ pub(crate) fn union_with_positions(
 /// single sharded gather over the deduplicated union of requested columns:
 /// n·|A ∪ B| Δ calls instead of n·(|A| + |B|).
 pub fn column_blocks(oracle: &dyn SimOracle, a: &[usize], b: &[usize]) -> (Mat, Mat) {
+    try_column_blocks(oracle, a, b).unwrap_or_else(|e| panic!("gather failed: {e}"))
+}
+
+/// Fallible twin of [`column_blocks`].
+pub fn try_column_blocks(
+    oracle: &dyn SimOracle,
+    a: &[usize],
+    b: &[usize],
+) -> Result<(Mat, Mat), OracleError> {
     let (union, a_pos, b_pos) = union_with_positions(a, b);
-    let block = oracle.columns(&union);
-    (block.select_cols(&a_pos), block.select_cols(&b_pos))
+    let block = oracle.try_columns(&union)?;
+    Ok((block.select_cols(&a_pos), block.select_cols(&b_pos)))
 }
 
 #[cfg(test)]

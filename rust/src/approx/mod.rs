@@ -31,10 +31,13 @@ pub mod sms;
 pub mod wme;
 
 pub use cur::{cur_embeddings, sicur, skeleton, stacur, stacur_with_plan};
-pub use error::{rel_fro_error, rel_fro_error_dense};
-pub use extend::{cur_extended, nystrom_extended, sms_extended, stacur_extended, Extension};
+pub use error::{rel_fro_error, rel_fro_error_dense, ApproxError};
+pub use extend::{
+    cur_extended, nystrom_extended, sms_extended, stacur_extended, try_cur_extended,
+    try_nystrom_extended, try_sms_extended, try_stacur_extended, Extension,
+};
 pub use factored::Factored;
-pub use gather::{column_blocks, GatherBlocks, GatherPlan};
+pub use gather::{column_blocks, try_column_blocks, GatherBlocks, GatherPlan};
 pub use nystrom::{nystrom, nystrom_psd_embedding};
 pub use optimal::{optimal_embeddings, optimal_rank_k};
 pub use sampling::{LandmarkPlan, LandmarkReservoir};

@@ -2,6 +2,7 @@
 //! K̃ = K S (SᵀK S)⁺ SᵀK. Exact on PSD matrices of rank ≤ s; unstable on
 //! indefinite matrices (the failure mode SMS-Nyström repairs — Sec. 2.2).
 
+use super::error::ApproxError;
 use super::factored::Factored;
 use super::sampling::LandmarkPlan;
 use crate::linalg::{eigh, Mat};
@@ -22,17 +23,20 @@ pub fn nystrom(oracle: &dyn SimOracle, s: usize, rng: &mut Rng) -> Result<Factor
 }
 
 pub fn nystrom_with_plan(oracle: &dyn SimOracle, landmarks: &[usize]) -> Result<Factored, String> {
-    nystrom_parts(oracle, landmarks).map(|(f, _)| f)
+    nystrom_parts(oracle, landmarks)
+        .map(|(f, _)| f)
+        .map_err(String::from)
 }
 
 /// Build plus the joining pseudo-inverse W⁺ — the per-row map the
 /// out-of-sample extension (`approx::extend`) applies to a new document's
-/// landmark similarities.
+/// landmark similarities. Fallible: an oracle fault surfaces as
+/// [`ApproxError::Oracle`] before any factorization math runs.
 pub(crate) fn nystrom_parts(
     oracle: &dyn SimOracle,
     landmarks: &[usize],
-) -> Result<(Factored, Mat), String> {
-    let c = oracle.columns(landmarks); // n x s: C_{ik} = K(i, S[k])
+) -> Result<(Factored, Mat), ApproxError> {
+    let c = oracle.try_columns(landmarks)?; // n x s: C_{ik} = K(i, S[k])
     let w = c.select_rows(landmarks); // s x s: W_{kl} = K(S[k], S[l])
     let w_pinv = eigh(&w.symmetrized())?.pinv(RCOND);
     let left = c.matmul(&w_pinv);
@@ -46,7 +50,7 @@ pub fn nystrom_psd_embedding(
     oracle: &dyn SimOracle,
     landmarks: &[usize],
 ) -> Result<Factored, String> {
-    let c = oracle.columns(landmarks);
+    let c = oracle.try_columns(landmarks).map_err(|e| e.to_string())?;
     let w = c.select_rows(landmarks);
     let inv_sqrt = eigh(&w.symmetrized())?.inv_sqrt(RCOND);
     Ok(Factored::from_z(c.matmul(&inv_sqrt)))

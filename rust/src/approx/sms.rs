@@ -7,6 +7,7 @@
 //! classic Nyström on the shifted matrix. Includes the β-rescaled variant
 //! of Appendix C used for coreference clustering.
 
+use super::error::ApproxError;
 use super::factored::Factored;
 use super::gather::GatherPlan;
 use super::sampling::LandmarkPlan;
@@ -80,24 +81,28 @@ pub fn sms_nystrom_with_plan(
     cfg: SmsConfig,
     rng: &mut Rng,
 ) -> Result<SmsResult, String> {
-    sms_parts(oracle, plan, cfg, rng).map(|(r, _)| r)
+    sms_parts(oracle, plan, cfg, rng)
+        .map(|(r, _)| r)
+        .map_err(String::from)
 }
 
 /// Build plus the joining inverse square root (S1ᵀK̄S1)^{-1/2} — the map
 /// the out-of-sample extension (`approx::extend`) applies to a new
 /// document's landmark similarities. New documents are never landmarks,
 /// so their K̄ rows carry no diagonal shift: z_new = K(new, S1)·W1^{-1/2}.
+/// Fallible: an oracle fault surfaces as [`ApproxError::Oracle`] before
+/// any factorization math runs.
 pub(crate) fn sms_parts(
     oracle: &dyn SimOracle,
     plan: &LandmarkPlan,
     cfg: SmsConfig,
     rng: &mut Rng,
-) -> Result<(SmsResult, Mat), String> {
+) -> Result<(SmsResult, Mat), ApproxError> {
     // Lines 4-5: K S1 (n x s1, also contains S1ᵀ K S1 as rows S1) and
     // S2ᵀ K S2 from one deduplicated gather — the planner copies the
     // overlap (every W2 column indexed by S1 is already inside C), so
     // nested plans cost n·s1 + s2·(s2 − s1) Δ calls instead of n·s1 + s2².
-    let blocks = GatherPlan::new(&plan.s1, &plan.s2).execute(oracle);
+    let blocks = GatherPlan::new(&plan.s1, &plan.s2).try_execute(oracle)?;
     let mut c = blocks.columns;
     let w2 = blocks.submatrix.symmetrized();
     // Line 6: e = -α λ_min(S2ᵀ K S2); Lanczos above the size threshold.

@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::sim::SimOracle;
+use crate::sim::{OracleError, SimOracle};
 
 use super::metrics::Metrics;
 
@@ -70,6 +70,25 @@ impl SimOracle for BatchingOracle<'_> {
             self.metrics.record_batch(chunk.len(), self.batch);
             self.metrics.record_latency(t0.elapsed());
         }
+    }
+
+    /// Fallible chunked path: forwards each batch-sized chunk through the
+    /// inner oracle's `try_eval_batch_into`, recording metrics only for
+    /// chunks that completed. The first failing chunk aborts the call —
+    /// pair accounting for delivered chunks stays exact.
+    fn try_eval_batch_into(
+        &self,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+    ) -> Result<(), OracleError> {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (chunk, ochunk) in pairs.chunks(self.batch).zip(out.chunks_mut(self.batch)) {
+            let t0 = Instant::now();
+            self.inner.try_eval_batch_into(chunk, ochunk)?;
+            self.metrics.record_batch(chunk.len(), self.batch);
+            self.metrics.record_latency(t0.elapsed());
+        }
+        Ok(())
     }
 
     fn pairs_per_worker(&self) -> usize {

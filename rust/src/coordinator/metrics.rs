@@ -33,6 +33,19 @@ pub struct Metrics {
     pub cells_pruned: AtomicU64,
     /// Exact Δ evaluations spent re-ranking index candidates.
     pub rerank_calls: AtomicU64,
+    /// Oracle batches that failed after retries were exhausted (or were
+    /// not retryable) — each one degraded or aborted the operation that
+    /// issued it.
+    pub oracle_failures: AtomicU64,
+    /// Retry attempts issued by the fault-tolerant layer. Retries are
+    /// metered Δ-calls (they also show up in `oracle_calls`), never free.
+    pub oracle_retries: AtomicU64,
+    /// Streaming epochs that degraded instead of completing: a skipped
+    /// drift probe or a failed rebuild that left the previous snapshot
+    /// serving.
+    pub degraded_epochs: AtomicU64,
+    /// Circuit-breaker trips in the fault-tolerant oracle layer.
+    pub breaker_trips: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     latency_count: AtomicU64,
@@ -87,6 +100,22 @@ impl Metrics {
 
     pub fn record_rerank(&self, delta_calls: u64) {
         self.rerank_calls.fetch_add(delta_calls, Ordering::Relaxed);
+    }
+
+    pub fn record_oracle_failure(&self) {
+        self.oracle_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_oracle_retries(&self, retries: u64) {
+        self.oracle_retries.fetch_add(retries, Ordering::Relaxed);
+    }
+
+    pub fn record_degraded_epoch(&self) {
+        self.degraded_epochs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_breaker_trip(&self) {
+        self.breaker_trips.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -155,6 +184,27 @@ impl Metrics {
         )
     }
 
+    /// One-line health view of the fault-tolerance counters: `status=ok`
+    /// while every oracle call has succeeded first-or-retried and every
+    /// epoch completed, `status=degraded` once any failure forced the
+    /// coordinator to keep serving a stale snapshot or skip an epoch.
+    pub fn health_summary(&self) -> String {
+        let failures = self.oracle_failures.load(Ordering::Relaxed);
+        let degraded = self.degraded_epochs.load(Ordering::Relaxed);
+        let trips = self.breaker_trips.load(Ordering::Relaxed);
+        let status = if failures + degraded + trips == 0 {
+            "ok"
+        } else {
+            "degraded"
+        };
+        format!(
+            "status={status} oracle_failures={failures} oracle_retries={} \
+             degraded_epochs={degraded} breaker_trips={trips} rebuilds={}",
+            self.oracle_retries.load(Ordering::Relaxed),
+            self.rebuilds.load(Ordering::Relaxed),
+        )
+    }
+
     /// One-line view of the streaming-growth counters.
     pub fn streaming_summary(&self) -> String {
         format!(
@@ -192,6 +242,24 @@ mod tests {
         assert_eq!(m.cells_pruned.load(Ordering::Relaxed), 38);
         assert_eq!(m.rerank_calls.load(Ordering::Relaxed), 40);
         assert!(m.index_summary().contains("topk_queries=4"));
+    }
+
+    #[test]
+    fn health_summary_flips_to_degraded_on_any_fault() {
+        let m = Metrics::new();
+        assert!(m.health_summary().starts_with("status=ok"));
+        m.record_oracle_retries(3);
+        // Retries alone are business as usual — the work still succeeded.
+        assert!(m.health_summary().starts_with("status=ok"));
+        m.record_oracle_failure();
+        m.record_degraded_epoch();
+        m.record_breaker_trip();
+        let h = m.health_summary();
+        assert!(h.starts_with("status=degraded"), "{h}");
+        assert!(h.contains("oracle_failures=1"), "{h}");
+        assert!(h.contains("oracle_retries=3"), "{h}");
+        assert!(h.contains("degraded_epochs=1"), "{h}");
+        assert!(h.contains("breaker_trips=1"), "{h}");
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod tiles;
 
 pub use batcher::{BatchClient, BatchService, BatchingOracle};
 pub use metrics::Metrics;
-pub use router::{route, Query, Response};
+pub use router::{respond, route, Query, Response, RouteError};
 pub use scheduler::{schedule, DriftMonitor, RebuildPolicy, SampleMode, Schedule};
 pub use server::{BuildStats, InsertReport, Method, SimilarityService, StreamConfig};
 pub use tiles::{dense_rows, TileServer};

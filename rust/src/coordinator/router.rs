@@ -32,6 +32,10 @@ pub enum Response {
     Ranked(Vec<(usize, f64)>),
     /// One ranked list per query of a `TopKBatch`.
     RankedBatch(Vec<Vec<(usize, f64)>>),
+    /// Structured failure: the query was invalid (or the service is
+    /// degraded); the message is the [`RouteError`] rendering. Produced
+    /// by [`respond`] so serving loops never panic or drop a request.
+    Error(String),
 }
 
 #[derive(Debug)]
@@ -50,6 +54,13 @@ impl std::fmt::Display for RouteError {
 }
 
 impl std::error::Error for RouteError {}
+
+/// Total (never-failing) variant of [`route`]: invalid queries come back
+/// as [`Response::Error`] instead of `Err`, so a serving loop can answer
+/// every request with a `Response` and never unwinds on bad input.
+pub fn respond(f: &Factored, q: &Query) -> Response {
+    route(f, q).unwrap_or_else(|e| Response::Error(e.to_string()))
+}
 
 pub fn route(f: &Factored, q: &Query) -> Result<Response, RouteError> {
     let n = f.n();
@@ -152,5 +163,31 @@ mod tests {
             Response::Ranked(r) => assert_eq!(r.len(), 7),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn respond_returns_structured_error_per_query_variant() {
+        // Every query variant with an out-of-range index must come back
+        // as Response::Error — never a panic, never a silent clamp.
+        let f = toy(); // n = 8
+        let bad = [
+            Query::Entry(8, 0),
+            Query::Entry(0, 8),
+            Query::Row(8),
+            Query::TopK(99, 2),
+            Query::TopKBatch(vec![0, 8], 2),
+            Query::Embed(8),
+        ];
+        for q in &bad {
+            match respond(&f, q) {
+                Response::Error(msg) => {
+                    assert!(msg.contains("out of range"), "{q:?}: {msg}");
+                    assert!(msg.contains("n=8"), "{q:?}: {msg}");
+                }
+                other => panic!("{q:?} should be rejected, got {other:?}"),
+            }
+        }
+        // Valid queries pass through respond unchanged.
+        assert_eq!(respond(&f, &Query::Entry(1, 2)), route(&f, &Query::Entry(1, 2)).unwrap());
     }
 }

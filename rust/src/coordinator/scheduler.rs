@@ -9,7 +9,7 @@
 //! O(n·s) rebuild on the pool.
 
 use crate::approx::{Factored, LandmarkPlan};
-use crate::sim::SimOracle;
+use crate::sim::{OracleError, SimOracle};
 use crate::util::rng::Rng;
 
 /// A chunk of pair evaluations, aligned to the artifact batch size.
@@ -138,11 +138,27 @@ impl DriftMonitor {
     /// Run one probe over the grown corpus [0, n): `probe_pairs` exact Δ
     /// evaluations against the factored store's approximate entries.
     pub fn probe(&mut self, oracle: &dyn SimOracle, f: &Factored, n: usize, rng: &mut Rng) -> f64 {
+        self.try_probe(oracle, f, n, rng)
+            .unwrap_or_else(|e| panic!("drift probe failed: {e}"))
+    }
+
+    /// Fallible twin of [`Self::probe`]: on `Err` the pairs are already
+    /// drawn from `rng` (the RNG stream advances identically either way)
+    /// but `last_drift` is left untouched, so a failed probe simply skips
+    /// the epoch without corrupting the drift history.
+    pub fn try_probe(
+        &mut self,
+        oracle: &dyn SimOracle,
+        f: &Factored,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Result<f64, OracleError> {
         debug_assert!(n <= oracle.n() && n <= f.n());
         let pairs: Vec<(usize, usize)> = (0..self.probe_pairs)
             .map(|_| (rng.below(n), rng.below(n)))
             .collect();
-        let exact = oracle.eval_batch(&pairs);
+        let mut exact = vec![0.0; pairs.len()];
+        oracle.try_eval_batch_into(&pairs, &mut exact)?;
         let mut num = 0.0;
         let mut den = 0.0;
         for (v, &(i, j)) in exact.iter().zip(&pairs) {
@@ -151,7 +167,7 @@ impl DriftMonitor {
             den += v * v;
         }
         self.last_drift = (num / den.max(1e-300)).sqrt();
-        self.last_drift
+        Ok(self.last_drift)
     }
 }
 

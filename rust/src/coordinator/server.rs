@@ -13,10 +13,12 @@
 //! a briefly-held lock, and a rebuild swaps the store atomically.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
 use std::time::Instant;
 
-use crate::approx::{self, Extension, Factored, LandmarkPlan, LandmarkReservoir, SmsConfig};
+use crate::approx::{
+    self, ApproxError, Extension, Factored, LandmarkPlan, LandmarkReservoir, SmsConfig,
+};
 use crate::index::{rerank_exact, topk_batch, IvfConfig, IvfIndex};
 use crate::sim::{CountingOracle, PrefixOracle, SimOracle};
 use crate::util::rng::Rng;
@@ -25,6 +27,17 @@ use super::batcher::BatchingOracle;
 use super::metrics::Metrics;
 use super::router::{route, Query, Response, RouteError};
 use super::scheduler::{DriftMonitor, RebuildPolicy};
+
+/// Lock-poisoning policy for the whole service, in one place: recover the
+/// guard and keep serving. Every shared structure here (the factored
+/// store, the index snapshot, the stream state) is only ever mutated
+/// through swap-on-success protocols — a panicking client observed a
+/// consistent snapshot, so the data under a poisoned lock is still valid
+/// and refusing to serve it would turn one crashed caller into a wedged
+/// service. Tested by `poisoned_lock_does_not_wedge_the_service`.
+fn relock<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Which approximation the service builds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,20 +98,33 @@ impl Method {
         plan: &LandmarkPlan,
         rng: &mut Rng,
     ) -> Result<(Factored, Extension), String> {
+        self.try_build_with_plan(oracle, plan, rng).map_err(String::from)
+    }
+
+    /// Fallible twin of [`Self::build_with_plan`]: oracle faults surface
+    /// as [`ApproxError::Oracle`] (distinguishable from numeric failures),
+    /// which is what lets the coordinator keep serving a previous
+    /// snapshot when a drift rebuild dies mid-gather.
+    pub fn try_build_with_plan(
+        &self,
+        oracle: &dyn SimOracle,
+        plan: &LandmarkPlan,
+        rng: &mut Rng,
+    ) -> Result<(Factored, Extension), ApproxError> {
         match self {
-            Method::Nystrom => approx::nystrom_extended(oracle, &plan.s1),
-            Method::SmsNystrom => approx::sms_extended(oracle, plan, SmsConfig::default(), rng)
+            Method::Nystrom => approx::try_nystrom_extended(oracle, &plan.s1),
+            Method::SmsNystrom => approx::try_sms_extended(oracle, plan, SmsConfig::default(), rng)
                 .map(|(r, e)| (r.factored, e)),
             Method::SmsNystromRescaled => {
                 let cfg = SmsConfig {
                     rescale: true,
                     ..SmsConfig::default()
                 };
-                approx::sms_extended(oracle, plan, cfg, rng).map(|(r, e)| (r.factored, e))
+                approx::try_sms_extended(oracle, plan, cfg, rng).map(|(r, e)| (r.factored, e))
             }
-            Method::Skeleton | Method::SiCur => approx::cur_extended(oracle, plan),
-            Method::StaCurShared => approx::stacur_extended(oracle, plan, true),
-            Method::StaCurIndependent => approx::stacur_extended(oracle, plan, false),
+            Method::Skeleton | Method::SiCur => approx::try_cur_extended(oracle, plan),
+            Method::StaCurShared => approx::try_stacur_extended(oracle, plan, true),
+            Method::StaCurIndependent => approx::try_stacur_extended(oracle, plan, false),
         }
     }
 
@@ -164,6 +190,11 @@ pub struct InsertReport {
     pub drift: Option<f64>,
     /// Whether the drift policy triggered a full rebuild.
     pub rebuilt: bool,
+    /// `Some(reason)` when the insert itself succeeded but a maintenance
+    /// step (drift probe or rebuild) failed and was skipped: the service
+    /// keeps serving the previous snapshot and `Metrics::degraded_epochs`
+    /// is bumped. `None` on a fully healthy epoch.
+    pub degraded: Option<String>,
 }
 
 /// Mutable streaming state, serialized behind one lock so concurrent
@@ -287,9 +318,10 @@ impl SimilarityService {
                 oracle_calls: 0,
                 drift: None,
                 rebuilt: false,
+                degraded: None,
             });
         }
-        let mut st = self.stream.lock().unwrap();
+        let mut st = relock(self.stream.lock());
         let st = &mut *st;
         for (k, &id) in ids.iter().enumerate() {
             if id != st.n + k {
@@ -309,33 +341,40 @@ impl SimilarityService {
         // The O(m·s) landmark gather runs through the batcher *before*
         // the store lock is taken, so readers never wait on oracle
         // traffic; the append itself is a short O(m·r) critical section.
+        // A failed gather aborts the insert with the store untouched —
+        // the service keeps serving the pre-insert snapshot.
         let counter = CountingOracle::new(oracle);
-        let (left, right) = {
+        let gathered = {
             let batched = BatchingOracle::new(&counter, self.batch, self.metrics.clone());
-            st.extension.extension_rows(&batched, ids)
+            st.extension.try_extension_rows(&batched, ids)
+        };
+        let (left, right) = match gathered {
+            Ok(rows) => rows,
+            Err(e) => {
+                self.metrics.record_oracle_failure();
+                return Err(format!("insert aborted, store unchanged: {e}"));
+            }
         };
         let calls = counter.calls();
         {
-            let mut store = self.factored.write().unwrap();
-            if Arc::strong_count(&store) == 1 {
+            let mut store = relock(self.factored.write());
+            if let Some(f) = Arc::get_mut(&mut store) {
                 // Sole owner (no reader snapshot outstanding): append in
-                // place — an O(m·r) critical section. No weak refs are
-                // ever created, so get_mut cannot fail here. Note: with
-                // the retrieval index enabled this branch never runs —
-                // the index pins its own store snapshot, so inserts
-                // always take the copy-on-write path below.
-                let f = Arc::get_mut(&mut store).expect("sole owner");
+                // place — an O(m·r) critical section. Note: with the
+                // retrieval index enabled this branch never runs — the
+                // index pins its own store snapshot, so inserts always
+                // take the copy-on-write path below.
                 st.extension.append_rows(f, &left, &right);
             } else {
-                // A `factored()` snapshot is live: copy-on-write OUTSIDE
-                // the write lock (the O(n·r) clone runs under a read
-                // lock, so queries keep flowing), then swap in O(1).
-                // The stream mutex serializes mutators, so nothing can
-                // slip in between the drop and the swap.
+                // A `factored()` snapshot (or weak ref) is live:
+                // copy-on-write OUTSIDE the write lock (the O(n·r) clone
+                // runs under a read lock, so queries keep flowing), then
+                // swap in O(1). The stream mutex serializes mutators, so
+                // nothing can slip in between the drop and the swap.
                 drop(store);
-                let mut fresh = (**self.factored.read().unwrap()).clone();
+                let mut fresh = (**relock(self.factored.read())).clone();
                 st.extension.append_rows(&mut fresh, &left, &right);
-                *self.factored.write().unwrap() = Arc::new(fresh);
+                *relock(self.factored.write()) = Arc::new(fresh);
             }
         }
         self.metrics.record_inserts(ids.len() as u64, calls);
@@ -346,41 +385,81 @@ impl SimilarityService {
         }
         let mut drift = None;
         let mut rebuilt = false;
+        let mut degraded = None;
         if st.monitor.tick(ids.len()) {
-            let snapshot = self.factored.read().unwrap().clone();
+            let snapshot = relock(self.factored.read()).clone();
             let probe_counter = CountingOracle::new(oracle);
-            let d = st.monitor.probe(&probe_counter, &snapshot, st.n, &mut st.rng);
+            let probed = st
+                .monitor
+                .try_probe(&probe_counter, &snapshot, st.n, &mut st.rng);
             self.metrics.record_drift_probe(probe_counter.calls());
-            drift = Some(d);
-            if st.policy.should_rebuild(d, st.inserts_since_build) {
-                // Full rebuild over the *grown* corpus only — the oracle
-                // may already know about documents not yet inserted.
-                let grown = PrefixOracle::new(oracle, st.n);
-                let plan = st.reservoir.refreshed_plan(&mut st.rng);
-                let rebuild_counter = CountingOracle::new(&grown);
-                let (fresh, next_ext) = {
-                    let batched =
-                        BatchingOracle::new(&rebuild_counter, self.batch, self.metrics.clone());
-                    self.method.build_with_plan(&batched, &plan, &mut st.rng)?
-                };
-                st.extension = next_ext;
-                st.inserts_since_build = 0;
-                let fresh = Arc::new(fresh);
-                // Re-quantize the retrieval index over the fresh store
-                // *before* swapping either, so the index trails the
-                // store swap by one O(1) pointer write (readers between
-                // the two swaps still get self-consistent answers from
-                // the old index's own snapshot).
-                let fresh_index = match self.index.read().unwrap().as_ref() {
-                    Some(idx) => Some(Arc::new(IvfIndex::build(fresh.clone(), idx.config())?)),
-                    None => None,
-                };
-                *self.factored.write().unwrap() = fresh;
-                if let Some(fresh_index) = fresh_index {
-                    *self.index.write().unwrap() = Some(fresh_index);
+            match probed {
+                Ok(d) => drift = Some(d),
+                Err(e) => {
+                    // Probe failure is non-fatal: the inserted rows are
+                    // already serving; skip this epoch's drift estimate
+                    // (and therefore any rebuild decision) and report
+                    // the degradation.
+                    self.metrics.record_oracle_failure();
+                    self.metrics.record_degraded_epoch();
+                    degraded = Some(format!("drift probe failed, epoch skipped: {e}"));
                 }
-                self.metrics.record_rebuild();
-                rebuilt = true;
+            }
+            if let Some(d) = drift {
+                if st.policy.should_rebuild(d, st.inserts_since_build) {
+                    // Full rebuild over the *grown* corpus only — the
+                    // oracle may already know about documents not yet
+                    // inserted.
+                    let grown = PrefixOracle::new(oracle, st.n);
+                    let plan = st.reservoir.refreshed_plan(&mut st.rng);
+                    let rebuild_counter = CountingOracle::new(&grown);
+                    let built = {
+                        let batched =
+                            BatchingOracle::new(&rebuild_counter, self.batch, self.metrics.clone());
+                        self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
+                    };
+                    match built {
+                        Ok((fresh, next_ext)) => {
+                            let fresh = Arc::new(fresh);
+                            // Re-quantize the retrieval index over the
+                            // fresh store *before* swapping either, so
+                            // the index trails the store swap by one
+                            // O(1) pointer write (readers between the
+                            // two swaps still get self-consistent
+                            // answers from the old index's own
+                            // snapshot). Nothing — not even the
+                            // extension — is committed until both
+                            // rebuild products exist: an index failure
+                            // leaves the whole previous snapshot
+                            // serving.
+                            let fresh_index = match relock(self.index.read()).as_ref() {
+                                Some(idx) => {
+                                    Some(Arc::new(IvfIndex::build(fresh.clone(), idx.config())?))
+                                }
+                                None => None,
+                            };
+                            st.extension = next_ext;
+                            st.inserts_since_build = 0;
+                            *relock(self.factored.write()) = fresh;
+                            if let Some(fresh_index) = fresh_index {
+                                *relock(self.index.write()) = Some(fresh_index);
+                            }
+                            self.metrics.record_rebuild();
+                            rebuilt = true;
+                        }
+                        Err(e) => {
+                            // Rebuild failure is non-fatal: the extended
+                            // store (with the rows this insert appended)
+                            // keeps serving, the old extension stays
+                            // valid for future inserts, and the drift
+                            // policy will re-fire next epoch.
+                            self.metrics.record_oracle_failure();
+                            self.metrics.record_degraded_epoch();
+                            degraded =
+                                Some(format!("rebuild failed, serving previous snapshot: {e}"));
+                        }
+                    }
+                }
             }
         }
         // Keep the retrieval index in step with the grown store (a
@@ -396,9 +475,9 @@ impl SimilarityService {
         // mutators, so the index can only lag the store by the rows of
         // the in-flight insert — never mix snapshots.
         if !rebuilt {
-            let live_index = self.index.read().unwrap().clone();
+            let live_index = relock(self.index.read()).clone();
             if let Some(idx) = live_index {
-                let snapshot = self.factored.read().unwrap().clone();
+                let snapshot = relock(self.factored.read()).clone();
                 let fresh = if idx.n() + left.rows == snapshot.n() {
                     idx.extended(snapshot, &left, &right)
                 } else {
@@ -407,7 +486,7 @@ impl SimilarityService {
                     // back to a clean rebuild over the current snapshot.
                     IvfIndex::build(snapshot, idx.config())?
                 };
-                *self.index.write().unwrap() = Some(Arc::new(fresh));
+                *relock(self.index.write()) = Some(Arc::new(fresh));
             }
         }
         Ok(InsertReport {
@@ -415,6 +494,7 @@ impl SimilarityService {
             oracle_calls: calls,
             drift,
             rebuilt,
+            degraded,
         })
     }
 
@@ -445,8 +525,15 @@ impl SimilarityService {
                 _ => {}
             }
         }
-        let f = self.factored.read().unwrap();
+        let f = relock(self.factored.read());
         route(&f, q)
+    }
+
+    /// Total (never-failing) query entry point for serving loops: a bad
+    /// request comes back as [`Response::Error`] instead of `Err`, so one
+    /// malformed query can never unwind a serving thread.
+    pub fn respond(&self, q: &Query) -> Response {
+        self.query(q).unwrap_or_else(|e| Response::Error(e.to_string()))
     }
 
     /// Build (or rebuild) the sublinear top-k retrieval index over the
@@ -456,16 +543,16 @@ impl SimilarityService {
     /// serializes with inserts/rebuilds — a racing insert can neither
     /// clobber the new config nor leave the index astride two stores.
     pub fn enable_index(&self, cfg: IvfConfig) -> Result<(), String> {
-        let _mutators = self.stream.lock().unwrap();
+        let _mutators = relock(self.stream.lock());
         let idx = IvfIndex::build(self.factored(), cfg)?;
         self.rerank.store(cfg.rerank, Ordering::Relaxed);
-        *self.index.write().unwrap() = Some(Arc::new(idx));
+        *relock(self.index.write()) = Some(Arc::new(idx));
         Ok(())
     }
 
     /// Snapshot of the retrieval index, if enabled.
     pub fn index(&self) -> Option<Arc<IvfIndex>> {
-        self.index.read().unwrap().clone()
+        relock(self.index.read()).clone()
     }
 
     /// Exact re-rank budget: candidates per query re-scored through the
@@ -498,22 +585,22 @@ impl SimilarityService {
 
     /// Snapshot of the current factored store.
     pub fn factored(&self) -> Arc<Factored> {
-        self.factored.read().unwrap().clone()
+        relock(self.factored.read()).clone()
     }
 
     /// Documents currently served (build corpus + inserts).
     pub fn n(&self) -> usize {
-        self.stream.lock().unwrap().n
+        relock(self.stream.lock()).n
     }
 
     /// Exact Δ evaluations one inserted document costs right now.
     pub fn per_insert_calls(&self) -> usize {
-        self.stream.lock().unwrap().extension.per_insert_calls()
+        relock(self.stream.lock()).extension.per_insert_calls()
     }
 
     /// Most recent drift estimate (0 before the first probe).
     pub fn last_drift(&self) -> f64 {
-        self.stream.lock().unwrap().monitor.last_drift
+        relock(self.stream.lock()).monitor.last_drift
     }
 }
 
@@ -634,6 +721,81 @@ mod tests {
         assert_eq!(lists.len(), 2);
         assert!(lists.iter().all(|l| l.len() == 4));
         assert_eq!(svc.metrics.rerank_calls.load(Relaxed), 2 * 12);
+    }
+
+    #[test]
+    fn insert_with_pinned_snapshot_copies_on_write() {
+        // Regression: a reader holding a `factored()` snapshot across an
+        // insert used to be able to race the sole-owner in-place append
+        // (`Arc::get_mut(..).expect("sole owner")`). Pinning the Arc must
+        // force the copy-on-write path: the pinned snapshot is immutable,
+        // the service serves the grown store, and nothing panics.
+        let mut rng = Rng::new(11);
+        let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
+        let prefix = crate::sim::PrefixOracle::new(&o, 40);
+        let svc = SimilarityService::build(&prefix, Method::Nystrom, 8, 32, &mut rng).unwrap();
+        let pinned = svc.factored();
+        let before = pinned.entry(0, 1);
+        svc.insert(&o, 40).unwrap();
+        assert_eq!(pinned.n(), 40, "pinned snapshot must not see the append");
+        assert_eq!(pinned.entry(0, 1), before);
+        assert_eq!(svc.factored().n(), 41);
+        assert_eq!(svc.factored().entry(0, 1), before, "CoW must preserve old rows");
+        drop(pinned);
+        // With the pin gone the next insert may append in place again.
+        svc.insert(&o, 41).unwrap();
+        assert_eq!(svc.n(), 42);
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_wedge_the_service() {
+        // A client oracle that panics mid-insert unwinds while service
+        // locks are held, poisoning them. The relock policy recovers the
+        // guards: later queries and inserts must keep working.
+        struct PanickingOracle {
+            n: usize,
+        }
+        impl crate::sim::SimOracle for PanickingOracle {
+            fn n(&self) -> usize {
+                self.n
+            }
+            fn eval_batch(&self, _pairs: &[(usize, usize)]) -> Vec<f64> {
+                panic!("injected client bug during similarity evaluation")
+            }
+        }
+        let mut rng = Rng::new(12);
+        let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
+        let prefix = crate::sim::PrefixOracle::new(&o, 40);
+        let svc = SimilarityService::build(&prefix, Method::Nystrom, 8, 32, &mut rng).unwrap();
+        let bad = PanickingOracle { n: 50 };
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = svc.insert(&bad, 40);
+        }));
+        assert!(unwound.is_err(), "the injected panic must surface");
+        // The service is not wedged: state reads, queries, and a healthy
+        // insert all succeed after the poisoning panic.
+        assert_eq!(svc.n(), 40, "failed insert must not grow the store");
+        match svc.query(&Query::Entry(0, 1)).unwrap() {
+            Response::Scalar(v) => assert!(v.is_finite()),
+            _ => panic!(),
+        }
+        svc.insert(&o, 40).unwrap();
+        assert_eq!(svc.n(), 41);
+    }
+
+    #[test]
+    fn respond_never_errors_on_bad_queries() {
+        let mut rng = Rng::new(13);
+        let o = NearPsdOracle::new(30, 4, 0.3, &mut rng);
+        let svc = SimilarityService::build(&o, Method::Nystrom, 6, 32, &mut rng).unwrap();
+        match svc.respond(&Query::Row(500)) {
+            Response::Error(msg) => assert!(msg.contains("out of range")),
+            other => panic!("expected structured error, got {other:?}"),
+        }
+        match svc.respond(&Query::Entry(0, 1)) {
+            Response::Scalar(v) => assert!(v.is_finite()),
+            other => panic!("expected scalar, got {other:?}"),
+        }
     }
 
     #[test]

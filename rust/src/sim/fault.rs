@@ -1,0 +1,430 @@
+//! Fault-tolerant oracle layer: bounded retries with a deterministic
+//! seeded backoff schedule, a per-gather deadline budget, NaN/±inf
+//! quarantine on returned similarities, and a circuit breaker that trips
+//! after k consecutive failed calls.
+//!
+//! The key invariant: Δ(i,j) is a pure function of the indices, so a
+//! batch that succeeds on retry is **bit-identical** to one that
+//! succeeded first try. [`FaultTolerantOracle`] therefore retries at a
+//! fixed sub-batch granularity ([`RetryConfig::retry_chunk`]) and
+//! re-evaluates the whole sub-batch on every attempt — partial writes
+//! from a failed attempt are always overwritten before the caller can
+//! observe them, and the repaired gather equals the fault-free gather
+//! exactly, at every pool worker count.
+//!
+//! Cost accounting: retries are metered Δ-calls, never free. Wrap a
+//! [`crate::sim::CountingOracle`] *below* this wrapper and every attempt
+//! — including the failed ones — shows up in `calls()`, the same
+//! currency `BENCH_simeval.json`/`BENCH_streaming.json` pin. With
+//! sub-batch granularity `c` and per-pair transient fault rate `p`, the
+//! expected overhead is ≈ `1 + p·c` of the fault-free call count
+//! (`BENCH_fault.json` tracks the measured ratio at p = 1%).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Metrics;
+use crate::sim::oracle::{OracleError, SimOracle};
+
+/// Knobs for [`FaultTolerantOracle`]. The defaults suit tests and cheap
+/// local backends: no sleeping (`backoff_base = 0` keeps the schedule
+/// deterministic *and* instant), three retries, breaker at eight
+/// consecutive failures.
+#[derive(Clone, Debug)]
+pub struct RetryConfig {
+    /// Retry attempts per sub-batch after the first try.
+    pub max_retries: u32,
+    /// Base unit of the exponential backoff schedule. `Duration::ZERO`
+    /// (the default) disables sleeping entirely; the schedule itself —
+    /// which attempt waits how many units — is a pure function of
+    /// (`seed`, sub-batch index, attempt) either way.
+    pub backoff_base: Duration,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+    /// Wall-clock budget for one top-level gather call. Checked between
+    /// attempts: the first attempt always runs, but no retry starts once
+    /// the budget is spent (the batch then fails with
+    /// [`OracleError::Timeout`]).
+    pub deadline: Option<Duration>,
+    /// Consecutive failed top-level calls that trip the circuit breaker.
+    pub breaker_threshold: u32,
+    /// Sub-batch granularity for retries: a fault re-evaluates at most
+    /// this many pairs, bounding the expected Δ-call overhead at fault
+    /// rate `p` to ≈ `1 + p·retry_chunk`.
+    pub retry_chunk: usize,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            max_retries: 3,
+            backoff_base: Duration::ZERO,
+            seed: 0x5EED_FA17,
+            deadline: None,
+            breaker_threshold: 8,
+            retry_chunk: 32,
+        }
+    }
+}
+
+/// SplitMix64-style finalizer: the deterministic jitter source for the
+/// backoff schedule (kept local — `util::rng`'s seeding mix is private
+/// and this must stay a pure function of its inputs).
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic backoff before retry `attempt` (1-based) of sub-batch
+/// `chunk`: exponential in the attempt with seeded jitter, `attempt`
+/// units ∈ [2^(a-1), 2^a), scaled by `backoff_base`. Pure — the same
+/// (config, chunk, attempt) always waits the same amount.
+fn backoff_delay(cfg: &RetryConfig, chunk: u64, attempt: u32) -> Duration {
+    if cfg.backoff_base.is_zero() {
+        return Duration::ZERO;
+    }
+    let exp = 1u64 << (attempt.saturating_sub(1)).min(16);
+    let jitter = mix(cfg.seed ^ chunk.wrapping_mul(0x9E37_79B9) ^ u64::from(attempt)) % exp;
+    cfg.backoff_base.saturating_mul((exp + jitter) as u32)
+}
+
+/// Quarantine check: a backend that *answers* with a non-finite
+/// similarity is as faulty as one that errors — catch it here, before it
+/// can poison a factorization.
+fn quarantine(pairs: &[(usize, usize)], out: &[f64]) -> Option<OracleError> {
+    for (&(i, j), &v) in pairs.iter().zip(out) {
+        if !v.is_finite() {
+            return Some(OracleError::Corrupt { i, j, value: v });
+        }
+    }
+    None
+}
+
+/// Retrying wrapper around a fallible [`SimOracle`]. See the module docs
+/// for the bit-identity and cost-accounting contracts.
+pub struct FaultTolerantOracle<'a> {
+    inner: &'a dyn SimOracle,
+    cfg: RetryConfig,
+    /// Optional sink: mirror retry/failure/trip counts into a service's
+    /// [`Metrics`] so `health_summary()` sees them.
+    metrics: Option<Arc<Metrics>>,
+    retries: AtomicU64,
+    failures: AtomicU64,
+    consecutive: AtomicU64,
+    trips: AtomicU64,
+    open: AtomicBool,
+}
+
+impl<'a> FaultTolerantOracle<'a> {
+    pub fn new(inner: &'a dyn SimOracle, cfg: RetryConfig) -> Self {
+        FaultTolerantOracle {
+            inner,
+            cfg,
+            metrics: None,
+            retries: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            consecutive: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+            open: AtomicBool::new(false),
+        }
+    }
+
+    /// Mirror this wrapper's counters into a coordinator's [`Metrics`].
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Retry attempts issued so far (each one re-bought its sub-batch's
+    /// Δ-calls).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Top-level calls that failed after retries were exhausted or hit a
+    /// non-retryable fault.
+    pub fn failures(&self) -> u64 {
+        self.failures.load(Ordering::Relaxed)
+    }
+
+    pub fn breaker_trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Whether the breaker is currently open (failing fast).
+    pub fn breaker_open(&self) -> bool {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Close the breaker and forget the consecutive-failure streak (an
+    /// operator decided the backend recovered).
+    pub fn reset_breaker(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        self.open.store(false, Ordering::Relaxed);
+    }
+
+    /// One sub-batch: attempt, quarantine, retry on retryable faults
+    /// while attempts and the deadline budget allow. Every attempt
+    /// re-evaluates the whole sub-batch, so a success — first try or
+    /// fifth — leaves bit-identical values in `out`.
+    fn eval_chunk(
+        &self,
+        chunk_index: u64,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+        started: Instant,
+    ) -> Result<(), OracleError> {
+        let mut attempt = 0u32;
+        loop {
+            let fault = match self.inner.try_eval_batch_into(pairs, out) {
+                Ok(()) => match quarantine(pairs, out) {
+                    None => return Ok(()),
+                    Some(e) => e,
+                },
+                Err(e) => e,
+            };
+            if !fault.retryable() || attempt >= self.cfg.max_retries {
+                return Err(fault);
+            }
+            if let Some(budget) = self.cfg.deadline {
+                if started.elapsed() >= budget {
+                    return Err(OracleError::Timeout(format!(
+                        "per-gather deadline budget exhausted; last fault: {fault}"
+                    )));
+                }
+            }
+            attempt += 1;
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            if let Some(m) = &self.metrics {
+                m.record_oracle_retries(1);
+            }
+            let delay = backoff_delay(&self.cfg, chunk_index, attempt);
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+        }
+    }
+
+    fn record_outcome(&self, failed: bool) {
+        if !failed {
+            self.consecutive.store(0, Ordering::Relaxed);
+            return;
+        }
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.record_oracle_failure();
+        }
+        let streak = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= u64::from(self.cfg.breaker_threshold.max(1))
+            && !self.open.swap(true, Ordering::Relaxed)
+        {
+            self.trips.fetch_add(1, Ordering::Relaxed);
+            if let Some(m) = &self.metrics {
+                m.record_breaker_trip();
+            }
+        }
+    }
+}
+
+impl SimOracle for FaultTolerantOracle<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let mut out = vec![0.0; pairs.len()];
+        self.eval_batch_into(pairs, &mut out);
+        out
+    }
+
+    /// Infallible view for legacy call sites: retries exactly like the
+    /// `try_` path and panics only once retries are exhausted (callers
+    /// that can degrade gracefully should use
+    /// [`SimOracle::try_eval_batch_into`] instead).
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        self.try_eval_batch_into(pairs, out)
+            .unwrap_or_else(|e| panic!("fault-tolerant oracle gave up: {e}"));
+    }
+
+    fn try_eval_batch_into(
+        &self,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+    ) -> Result<(), OracleError> {
+        debug_assert_eq!(pairs.len(), out.len());
+        if self.open.load(Ordering::Relaxed) {
+            return Err(OracleError::Persistent(
+                "circuit breaker open: backend failing consistently".into(),
+            ));
+        }
+        let started = Instant::now();
+        let chunk = self.cfg.retry_chunk.max(1);
+        let mut result = Ok(());
+        for (ci, (p, o)) in pairs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate() {
+            if let Err(e) = self.eval_chunk(ci as u64, p, o, started) {
+                result = Err(e);
+                break;
+            }
+        }
+        self.record_outcome(result.is_err());
+        result
+    }
+
+    fn pairs_per_worker(&self) -> usize {
+        self.inner.pairs_per_worker()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::sim::oracle::OracleErrorKind;
+    use crate::sim::synthetic::{FaultMode, FlakyOracle};
+    use crate::sim::{CountingOracle, DenseOracle};
+
+    fn base() -> DenseOracle {
+        DenseOracle::new(Mat::from_fn(16, 16, |i, j| (i * 100 + j) as f64))
+    }
+
+    #[test]
+    fn backoff_schedule_is_pure_and_exponential() {
+        let cfg = RetryConfig {
+            backoff_base: Duration::from_micros(10),
+            ..RetryConfig::default()
+        };
+        for chunk in 0..4u64 {
+            for attempt in 1..5u32 {
+                let a = backoff_delay(&cfg, chunk, attempt);
+                let b = backoff_delay(&cfg, chunk, attempt);
+                assert_eq!(a, b, "same inputs, same delay");
+                let exp = 1u128 << (attempt - 1);
+                let units = a.as_micros() / 10;
+                assert!(units >= exp && units < 2 * exp, "attempt {attempt}: {units}");
+            }
+        }
+        let zero = RetryConfig::default();
+        assert_eq!(backoff_delay(&zero, 3, 2), Duration::ZERO);
+    }
+
+    /// Errors surface one pair per attempt in `FaultMode::Transient`, so
+    /// a sub-batch with k scheduled pairs needs up to k·max_failures
+    /// retries: budget the worst case, retry_chunk · max_failures.
+    fn patient(max_failures: u32) -> RetryConfig {
+        let cfg = RetryConfig::default();
+        RetryConfig {
+            max_retries: cfg.retry_chunk as u32 * max_failures,
+            ..cfg
+        }
+    }
+
+    #[test]
+    fn transient_faults_repair_to_bit_identical_values() {
+        let inner = base();
+        let flaky = FlakyOracle::new(&inner, FaultMode::Transient { rate: 0.2 }, 77, 2);
+        let ft = FaultTolerantOracle::new(&flaky, patient(2));
+        let pairs: Vec<(usize, usize)> = (0..100).map(|t| (t % 16, (t * 3) % 16)).collect();
+        let clean = inner.eval_batch(&pairs);
+        let repaired = ft.eval_batch(&pairs);
+        assert_eq!(clean, repaired);
+        assert!(ft.retries() > 0, "a 20% rate over 100 pairs must fault");
+        assert_eq!(ft.failures(), 0);
+    }
+
+    #[test]
+    fn quarantine_catches_nan_and_retry_repairs_it() {
+        let inner = base();
+        // Corrupt answers on the first attempt only: quarantine must
+        // catch the NaN and the retry must deliver the true value.
+        let flaky = FlakyOracle::new(&inner, FaultMode::CorruptNan { rate: 0.3 }, 5, 1);
+        let ft = FaultTolerantOracle::new(&flaky, RetryConfig::default());
+        let pairs: Vec<(usize, usize)> = (0..64).map(|t| (t % 16, (t * 5) % 16)).collect();
+        assert_eq!(ft.eval_batch(&pairs), inner.eval_batch(&pairs));
+        assert!(ft.retries() > 0);
+    }
+
+    #[test]
+    fn persistent_corruption_is_rejected_not_served() {
+        let inner = base();
+        let flaky = FlakyOracle::new(&inner, FaultMode::CorruptNan { rate: 0.3 }, 5, u32::MAX);
+        let ft = FaultTolerantOracle::new(&flaky, RetryConfig::default());
+        let pairs: Vec<(usize, usize)> = (0..64).map(|t| (t % 16, (t * 5) % 16)).collect();
+        let mut out = vec![0.0; pairs.len()];
+        let err = ft.try_eval_batch_into(&pairs, &mut out).unwrap_err();
+        assert_eq!(err.kind(), OracleErrorKind::Corrupt);
+    }
+
+    #[test]
+    fn persistent_faults_fail_fast_and_trip_the_breaker() {
+        let inner = base();
+        let flaky = FlakyOracle::new(
+            &inner,
+            FaultMode::PersistentRange { lo: 3, hi: 4 },
+            9,
+            u32::MAX,
+        );
+        let counter = CountingOracle::new(&flaky);
+        let cfg = RetryConfig {
+            breaker_threshold: 3,
+            retry_chunk: 8,
+            ..RetryConfig::default()
+        };
+        let ft = FaultTolerantOracle::new(&counter, cfg);
+        let mut out = [0.0];
+        // Persistent fault: no retries spent on it.
+        for _ in 0..3 {
+            assert!(ft.try_eval_batch_into(&[(3, 0)], &mut out).is_err());
+        }
+        assert_eq!(ft.retries(), 0);
+        assert_eq!(ft.failures(), 3);
+        assert!(ft.breaker_open());
+        assert_eq!(ft.breaker_trips(), 1);
+        // Open breaker fails fast: the healthy pair is refused without
+        // spending a Δ-call.
+        let before = counter.calls();
+        let err = ft.try_eval_batch_into(&[(0, 1)], &mut out).unwrap_err();
+        assert_eq!(err.kind(), OracleErrorKind::Persistent);
+        assert_eq!(counter.calls(), before);
+        // Reset: healthy pairs flow again.
+        ft.reset_breaker();
+        assert!(ft.try_eval_batch_into(&[(0, 1)], &mut out).is_ok());
+        assert_eq!(out[0], 1.0);
+    }
+
+    #[test]
+    fn zero_deadline_allows_first_attempt_but_no_retries() {
+        let inner = base();
+        let flaky = FlakyOracle::new(&inner, FaultMode::Transient { rate: 1.0 }, 3, 1);
+        let cfg = RetryConfig {
+            deadline: Some(Duration::ZERO),
+            ..RetryConfig::default()
+        };
+        let ft = FaultTolerantOracle::new(&flaky, cfg);
+        let mut out = [0.0];
+        let err = ft.try_eval_batch_into(&[(0, 1)], &mut out).unwrap_err();
+        assert_eq!(err.kind(), OracleErrorKind::Timeout);
+        assert_eq!(ft.retries(), 0);
+        // Without the deadline the same fault schedule repairs fine.
+        let flaky2 = FlakyOracle::new(&inner, FaultMode::Transient { rate: 1.0 }, 3, 1);
+        let ft2 = FaultTolerantOracle::new(&flaky2, RetryConfig::default());
+        assert!(ft2.try_eval_batch_into(&[(0, 1)], &mut out).is_ok());
+    }
+
+    #[test]
+    fn sharded_gather_through_ft_is_bit_identical_per_worker_count() {
+        use crate::util::pool;
+        let inner = base();
+        let clean = inner.columns(&[0, 5, 9]);
+        for workers in [1, 4] {
+            pool::with_workers(workers, || {
+                let flaky = FlakyOracle::new(&inner, FaultMode::Transient { rate: 0.1 }, 21, 2);
+                let ft = FaultTolerantOracle::new(&flaky, patient(2));
+                let got = ft.try_columns(&[0, 5, 9]).unwrap();
+                assert_eq!(got.data, clean.data, "workers={workers}");
+            });
+        }
+    }
+}

@@ -1,10 +1,18 @@
 //! Similarity oracles: the trait, counting/symmetrizing wrappers, the
-//! Rust Sinkhorn-WMD twin of the L1 kernel, and synthetic test matrices.
-//! PJRT-backed oracles (the production path) live in `runtime::oracles`.
+//! Rust Sinkhorn-WMD twin of the L1 kernel, synthetic test matrices, and
+//! the fault-tolerance layer (error taxonomy, retrying wrapper, seeded
+//! fault injection). PJRT-backed oracles (the production path) live in
+//! `runtime::oracles`.
 
+pub mod fault;
 pub mod oracle;
 pub mod synthetic;
 pub mod wmd;
 
-pub use oracle::{CountingOracle, DenseOracle, PrefixOracle, SimOracle, Symmetrized};
+pub use fault::{FaultTolerantOracle, RetryConfig};
+pub use oracle::{
+    CountingOracle, DenseOracle, OracleError, OracleErrorKind, PrefixOracle, SimOracle,
+    Symmetrized,
+};
+pub use synthetic::{FaultMode, FlakyOracle};
 pub use wmd::{Doc, SinkhornCfg, SinkhornScratch, WmdOracle};

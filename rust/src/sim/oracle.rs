@@ -23,6 +23,67 @@ use crate::util::pool;
 /// [`SimOracle::pairs_per_worker`] so even small gathers parallelize.
 const PAIRS_PER_WORKER: usize = 4096;
 
+/// What went wrong inside a similarity backend. The taxonomy drives the
+/// retry policy in [`crate::sim::fault::FaultTolerantOracle`]: transient,
+/// timeout and corrupt faults are worth retrying (Δ(i,j) is a pure
+/// function of the indices, so a retry that succeeds is bit-identical to
+/// a first-try success); persistent faults are not.
+#[derive(Clone, Debug)]
+pub enum OracleError {
+    /// Momentary failure (network blip, preempted accelerator, dropped
+    /// RPC): safe and worthwhile to retry.
+    Transient(String),
+    /// The backend or the caller's per-gather deadline budget ran out.
+    Timeout(String),
+    /// The backend cannot answer no matter how often it is asked (missing
+    /// shard, crashed replica, open circuit breaker).
+    Persistent(String),
+    /// The backend answered, but with a non-finite similarity — caught by
+    /// the NaN/±inf quarantine before it can poison a factorization.
+    Corrupt { i: usize, j: usize, value: f64 },
+}
+
+/// Coarse fault class of an [`OracleError`] (comparison-friendly: the
+/// payload strings and the non-finite `Corrupt` value don't support `Eq`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OracleErrorKind {
+    Transient,
+    Timeout,
+    Persistent,
+    Corrupt,
+}
+
+impl OracleError {
+    pub fn kind(&self) -> OracleErrorKind {
+        match self {
+            OracleError::Transient(_) => OracleErrorKind::Transient,
+            OracleError::Timeout(_) => OracleErrorKind::Timeout,
+            OracleError::Persistent(_) => OracleErrorKind::Persistent,
+            OracleError::Corrupt { .. } => OracleErrorKind::Corrupt,
+        }
+    }
+
+    /// Whether a retry can possibly succeed.
+    pub fn retryable(&self) -> bool {
+        !matches!(self, OracleError::Persistent(_))
+    }
+}
+
+impl std::fmt::Display for OracleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OracleError::Transient(m) => write!(f, "transient oracle fault: {m}"),
+            OracleError::Timeout(m) => write!(f, "oracle timeout: {m}"),
+            OracleError::Persistent(m) => write!(f, "persistent oracle fault: {m}"),
+            OracleError::Corrupt { i, j, value } => {
+                write!(f, "corrupt similarity Δ({i},{j}) = {value}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OracleError {}
+
 pub trait SimOracle: Sync {
     /// Number of data points.
     fn n(&self) -> usize;
@@ -39,6 +100,23 @@ pub trait SimOracle: Sync {
     fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
         debug_assert_eq!(pairs.len(), out.len());
         out.copy_from_slice(&self.eval_batch(pairs));
+    }
+
+    /// Fallible twin of [`Self::eval_batch_into`]: a backend that can fail
+    /// reports *why* instead of panicking a pool worker. On `Err` the
+    /// contents of `out` are unspecified (a retry must re-evaluate the
+    /// whole batch; since Δ(i,j) is pure, the re-evaluation is
+    /// bit-identical). The default wraps the infallible path so every
+    /// existing oracle keeps compiling; **wrappers must forward this
+    /// method** or a fallible inner oracle behind them would panic
+    /// instead of returning the error.
+    fn try_eval_batch_into(
+        &self,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+    ) -> Result<(), OracleError> {
+        self.eval_batch_into(pairs, out);
+        Ok(())
     }
 
     fn eval(&self, i: usize, j: usize) -> f64 {
@@ -95,6 +173,43 @@ pub trait SimOracle: Sync {
             }
         })
     }
+
+    /// Fallible twin of [`Self::materialize`]: first error (in row-chunk
+    /// order, deterministic across worker counts) wins, and the partially
+    /// written matrix is dropped — callers never observe partial output.
+    fn try_materialize(&self) -> Result<Mat, OracleError> {
+        let n = self.n();
+        try_sharded_gather(self, n, n, |i, pairs| {
+            for j in 0..n {
+                pairs.push((i, j));
+            }
+        })
+    }
+
+    /// Fallible twin of [`Self::columns`] — see [`Self::try_materialize`]
+    /// for the error contract.
+    fn try_columns(&self, cols: &[usize]) -> Result<Mat, OracleError> {
+        try_sharded_gather(self, self.n(), cols.len(), |i, pairs| {
+            for &j in cols {
+                pairs.push((i, j));
+            }
+        })
+    }
+
+    /// Fallible twin of [`Self::submatrix`].
+    fn try_submatrix(&self, idx: &[usize]) -> Result<Mat, OracleError> {
+        self.try_block(idx, idx)
+    }
+
+    /// Fallible twin of [`Self::block`].
+    fn try_block(&self, rows_idx: &[usize], cols_idx: &[usize]) -> Result<Mat, OracleError> {
+        try_sharded_gather(self, rows_idx.len(), cols_idx.len(), |r, pairs| {
+            let i = rows_idx[r];
+            for &j in cols_idx {
+                pairs.push((i, j));
+            }
+        })
+    }
 }
 
 /// Shared sharded-gather scaffold behind the trait's block assemblers:
@@ -123,6 +238,38 @@ where
         oracle.eval_batch_into(&pairs, chunk);
     });
     out
+}
+
+/// Fallible twin of [`sharded_gather`]: identical sharding (same `split`,
+/// same per-row pair order), but each worker calls
+/// [`SimOracle::try_eval_batch_into`] and the first chunk error *in chunk
+/// order* is returned — deterministic for every worker count. No worker
+/// is cancelled mid-write, the partially filled matrix is dropped on
+/// `Err`, and panics still cross the pool boundary as panics.
+fn try_sharded_gather<O, F>(
+    oracle: &O,
+    rows: usize,
+    width: usize,
+    pairs_of: F,
+) -> Result<Mat, OracleError>
+where
+    O: SimOracle + ?Sized,
+    F: Fn(usize, &mut Vec<(usize, usize)>) + Sync,
+{
+    let mut out = Mat::zeros(rows, width);
+    if rows == 0 || width == 0 {
+        return Ok(out);
+    }
+    let workers = pool::auto_workers(rows * width, oracle.pairs_per_worker());
+    pool::try_for_row_chunks(workers, &mut out.data, width, 1, |row0, chunk| {
+        let count = chunk.len() / width;
+        let mut pairs = Vec::with_capacity(count * width);
+        for r in row0..row0 + count {
+            pairs_of(r, &mut pairs);
+        }
+        oracle.try_eval_batch_into(&pairs, chunk)
+    })?;
+    Ok(out)
 }
 
 /// Oracle backed by a fully materialized matrix (tests, cached baselines).
@@ -193,6 +340,17 @@ impl SimOracle for CountingOracle<'_> {
         self.inner.eval_batch_into(pairs, out);
     }
 
+    fn try_eval_batch_into(
+        &self,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+    ) -> Result<(), OracleError> {
+        // Requested pairs are metered whether or not the backend delivers
+        // them — retries are Δ-calls, never free.
+        self.count.fetch_add(pairs.len() as u64, Ordering::Relaxed);
+        self.inner.try_eval_batch_into(pairs, out)
+    }
+
     fn pairs_per_worker(&self) -> usize {
         self.inner.pairs_per_worker()
     }
@@ -246,6 +404,34 @@ impl SimOracle for Symmetrized<'_> {
         }
     }
 
+    fn try_eval_batch_into(
+        &self,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+    ) -> Result<(), OracleError> {
+        debug_assert_eq!(pairs.len(), out.len());
+        let mut both = Vec::with_capacity(pairs.len() * 2);
+        for &(i, j) in pairs {
+            both.push((i, j));
+            if i != j {
+                both.push((j, i));
+            }
+        }
+        let mut vals = vec![0.0; both.len()];
+        self.inner.try_eval_batch_into(&both, &mut vals)?;
+        let mut k = 0;
+        for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+            if i == j {
+                *o = vals[k];
+                k += 1;
+            } else {
+                *o = 0.5 * (vals[k] + vals[k + 1]);
+                k += 2;
+            }
+        }
+        Ok(())
+    }
+
     fn pairs_per_worker(&self) -> usize {
         // Each requested pair costs up to two inner evaluations.
         (self.inner.pairs_per_worker() / 2).max(1)
@@ -281,6 +467,15 @@ impl SimOracle for PrefixOracle<'_> {
     fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
         debug_assert!(pairs.iter().all(|&(i, j)| i < self.n && j < self.n));
         self.inner.eval_batch_into(pairs, out);
+    }
+
+    fn try_eval_batch_into(
+        &self,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+    ) -> Result<(), OracleError> {
+        debug_assert!(pairs.iter().all(|&(i, j)| i < self.n && j < self.n));
+        self.inner.try_eval_batch_into(pairs, out)
     }
 
     fn pairs_per_worker(&self) -> usize {
@@ -400,6 +595,102 @@ mod tests {
         assert_eq!((b.rows, b.cols), (2, 3));
         assert_eq!(b.row(0), &[40.0, 43.0, 42.0]);
         assert_eq!(b.row(1), &[10.0, 13.0, 12.0]);
+    }
+
+    /// Fails every pair whose row index falls in `[lo, hi)`.
+    struct RangeFailOracle {
+        k: Mat,
+        lo: usize,
+        hi: usize,
+    }
+
+    impl SimOracle for RangeFailOracle {
+        fn n(&self) -> usize {
+            self.k.rows
+        }
+
+        fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+            let mut out = vec![0.0; pairs.len()];
+            self.try_eval_batch_into(pairs, &mut out)
+                .unwrap_or_else(|e| panic!("{e}"));
+            out
+        }
+
+        fn try_eval_batch_into(
+            &self,
+            pairs: &[(usize, usize)],
+            out: &mut [f64],
+        ) -> Result<(), OracleError> {
+            for (o, &(i, j)) in out.iter_mut().zip(pairs) {
+                if (self.lo..self.hi).contains(&i) {
+                    return Err(OracleError::Persistent(format!("row {i} down")));
+                }
+                *o = self.k.get(i, j);
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn try_gathers_default_to_infallible_path() {
+        let k = Mat::from_fn(5, 5, |i, j| (10 * i + j) as f64);
+        let o = DenseOracle::new(k.clone());
+        assert_eq!(o.try_materialize().unwrap().data, k.data);
+        assert_eq!(
+            o.try_columns(&[1, 3]).unwrap().data,
+            o.columns(&[1, 3]).data
+        );
+        assert_eq!(
+            o.try_block(&[4, 1], &[0, 2]).unwrap().data,
+            o.block(&[4, 1], &[0, 2]).data
+        );
+        assert_eq!(
+            o.try_submatrix(&[0, 2]).unwrap().data,
+            o.submatrix(&[0, 2]).data
+        );
+    }
+
+    #[test]
+    fn try_gather_first_error_wins_at_every_worker_count() {
+        let k = Mat::from_fn(12, 12, |i, j| (i + j) as f64);
+        for workers in [1, 4] {
+            pool::with_workers(workers, || {
+                let o = RangeFailOracle {
+                    k: k.clone(),
+                    lo: 7,
+                    hi: 9,
+                };
+                let err = o.try_materialize().unwrap_err();
+                // First error in chunk order: the failing row with the
+                // smallest index always reports, regardless of pool size.
+                match err {
+                    OracleError::Persistent(m) => assert!(m.contains("row 7"), "{m}"),
+                    other => panic!("unexpected error {other:?}"),
+                }
+                assert!(err.kind() == OracleErrorKind::Persistent);
+                assert!(!err.retryable());
+                // A gather that avoids the dead rows still succeeds.
+                let ok = o.try_block(&[0, 3, 11], &[1, 2]).unwrap();
+                assert_eq!(ok.get(1, 0), 4.0);
+            });
+        }
+    }
+
+    #[test]
+    fn try_errors_forward_through_wrappers() {
+        let k = Mat::from_fn(6, 6, |i, j| (i * j) as f64);
+        let o = RangeFailOracle { k, lo: 2, hi: 3 };
+        let c = CountingOracle::new(&o);
+        let mut out = vec![0.0; 2];
+        assert!(c.try_eval_batch_into(&[(0, 1), (2, 4)], &mut out).is_err());
+        // Requested pairs are metered even when the backend fails them.
+        assert_eq!(c.calls(), 2);
+        let s = Symmetrized::new(&o);
+        assert!(s.try_eval_batch_into(&[(1, 2)], &mut out[..1]).is_err());
+        assert!(s.try_eval_batch_into(&[(0, 1)], &mut out[..1]).is_ok());
+        let p = PrefixOracle::new(&o, 4);
+        assert!(p.try_eval_batch_into(&[(2, 0)], &mut out[..1]).is_err());
+        assert!(p.try_eval_batch_into(&[(3, 0)], &mut out[..1]).is_ok());
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Synthetic test-matrix oracles used by Fig. 3's controlled comparisons:
-//! the i.i.d. Gaussian PSD matrix Z Z^T, RBF kernels, and tunable
-//! near-PSD matrices (PSD part + scaled indefinite perturbation).
+//! the i.i.d. Gaussian PSD matrix Z Z^T, RBF kernels, tunable near-PSD
+//! matrices (PSD part + scaled indefinite perturbation), and the seeded
+//! fault-injection wrapper ([`FlakyOracle`]) powering the chaos suite.
 
-use super::oracle::SimOracle;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::oracle::{OracleError, SimOracle};
 use crate::linalg::{dot, Mat};
 use crate::util::rng::Rng;
 
@@ -178,6 +183,180 @@ impl SimOracle for DriftingRbfOracle {
                 .sum();
             *o = (-d2 * self.inv_two_sigma_sq).exp();
         }
+    }
+}
+
+/// Which pairs fault, and how, in a [`FlakyOracle`]. All schedules are
+/// pure functions of (seed, i, j), so the same configuration injects the
+/// same faults regardless of batching, pool worker count, or retry
+/// order — the chaos suite's determinism rests on this.
+#[derive(Clone, Debug)]
+pub enum FaultMode {
+    /// Pair (i,j) faults with probability `rate` (hash-scheduled),
+    /// failing with [`OracleError::Transient`] until its per-pair fault
+    /// budget is spent, then answering truthfully.
+    Transient { rate: f64 },
+    /// Exactly these pairs fault transiently — for tests that pin retry
+    /// and Δ-call counts to the digit.
+    TransientPairs(Vec<(usize, usize)>),
+    /// Every pair touching a document in `[lo, hi)` fails with
+    /// [`OracleError::Persistent`] forever (a dead shard).
+    PersistentRange { lo: usize, hi: usize },
+    /// Hash-scheduled pairs fail with [`OracleError::Timeout`] until the
+    /// fault budget is spent (a slow backend).
+    Slow { rate: f64 },
+    /// Hash-scheduled pairs *answer* — with NaN — until the fault budget
+    /// is spent. No error is raised here; the fault-tolerant layer's
+    /// quarantine must catch it.
+    CorruptNan { rate: f64 },
+}
+
+/// Deterministic fault-injection wrapper: delegates to `inner` but makes
+/// scheduled pairs fail according to [`FaultMode`]. Transient-style
+/// faults (`Transient`, `TransientPairs`, `Slow`, `CorruptNan`) fire the
+/// first `max_failures` times each scheduled pair is evaluated and then
+/// heal, so a retrying caller eventually sees the true value — which is
+/// why retried builds are bit-identical to fault-free ones.
+///
+/// An optional global outage switch ([`Self::outage_after_pairs`])
+/// persistently fails every evaluation after the N-th pair served,
+/// whatever the mode — the chaos suite uses it to kill the backend
+/// mid-rebuild at an exact, batching-independent point.
+pub struct FlakyOracle<'a> {
+    inner: &'a dyn SimOracle,
+    mode: FaultMode,
+    seed: u64,
+    max_failures: u32,
+    attempts: Mutex<HashMap<(usize, usize), u32>>,
+    pairs_served: AtomicU64,
+    outage_after: AtomicU64,
+}
+
+/// SplitMix64-style finalizer for the per-pair fault schedule.
+fn pair_hash(seed: u64, i: usize, j: usize) -> u64 {
+    let mut z = seed
+        ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (j as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl<'a> FlakyOracle<'a> {
+    /// `max_failures` is the per-pair fault budget for the transient-style
+    /// modes (ignored by `PersistentRange`, which never heals).
+    pub fn new(inner: &'a dyn SimOracle, mode: FaultMode, seed: u64, max_failures: u32) -> Self {
+        FlakyOracle {
+            inner,
+            mode,
+            seed,
+            max_failures,
+            attempts: Mutex::new(HashMap::new()),
+            pairs_served: AtomicU64::new(0),
+            outage_after: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Kill the backend after it has served exactly `n` more pairs:
+    /// every evaluation from pair n+1 on fails with
+    /// [`OracleError::Persistent`], regardless of mode. The cutoff counts
+    /// *served pairs*, so it lands at the same logical point for every
+    /// batch size and worker count.
+    pub fn outage_after_pairs(&self, n: u64) {
+        let served = self.pairs_served.load(Ordering::Relaxed);
+        self.outage_after.store(served.saturating_add(n), Ordering::Relaxed);
+    }
+
+    fn scheduled(&self, i: usize, j: usize) -> bool {
+        match &self.mode {
+            FaultMode::Transient { rate }
+            | FaultMode::Slow { rate }
+            | FaultMode::CorruptNan { rate } => {
+                (pair_hash(self.seed, i, j) as f64 / u64::MAX as f64) < *rate
+            }
+            FaultMode::TransientPairs(list) => list.contains(&(i, j)),
+            FaultMode::PersistentRange { lo, hi } => {
+                (*lo..*hi).contains(&i) || (*lo..*hi).contains(&j)
+            }
+        }
+    }
+
+    /// Consume one unit of pair (i,j)'s fault budget; true while the pair
+    /// should still fault.
+    fn consume_budget(&self, i: usize, j: usize) -> bool {
+        let mut attempts = self.attempts.lock().unwrap_or_else(|p| p.into_inner());
+        let count = attempts.entry((i, j)).or_insert(0);
+        if *count >= self.max_failures {
+            return false;
+        }
+        *count += 1;
+        true
+    }
+}
+
+impl SimOracle for FlakyOracle<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn eval_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let mut out = vec![0.0; pairs.len()];
+        self.eval_batch_into(pairs, &mut out);
+        out
+    }
+
+    fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
+        self.try_eval_batch_into(pairs, out)
+            .unwrap_or_else(|e| panic!("unhandled injected fault: {e}"));
+    }
+
+    fn try_eval_batch_into(
+        &self,
+        pairs: &[(usize, usize)],
+        out: &mut [f64],
+    ) -> Result<(), OracleError> {
+        debug_assert_eq!(pairs.len(), out.len());
+        for (idx, &(i, j)) in pairs.iter().enumerate() {
+            let served = self.pairs_served.fetch_add(1, Ordering::Relaxed);
+            if served >= self.outage_after.load(Ordering::Relaxed) {
+                return Err(OracleError::Persistent("injected backend outage".into()));
+            }
+            if self.scheduled(i, j) {
+                match &self.mode {
+                    FaultMode::PersistentRange { lo, hi } => {
+                        return Err(OracleError::Persistent(format!(
+                            "shard [{lo},{hi}) down: pair ({i},{j})"
+                        )));
+                    }
+                    FaultMode::Transient { .. } | FaultMode::TransientPairs(_) => {
+                        if self.consume_budget(i, j) {
+                            return Err(OracleError::Transient(format!(
+                                "injected transient fault at ({i},{j})"
+                            )));
+                        }
+                    }
+                    FaultMode::Slow { .. } => {
+                        if self.consume_budget(i, j) {
+                            return Err(OracleError::Timeout(format!(
+                                "injected slow evaluation at ({i},{j})"
+                            )));
+                        }
+                    }
+                    FaultMode::CorruptNan { .. } => {
+                        if self.consume_budget(i, j) {
+                            out[idx] = f64::NAN;
+                            continue;
+                        }
+                    }
+                }
+            }
+            self.inner.eval_batch_into(&pairs[idx..=idx], &mut out[idx..=idx]);
+        }
+        Ok(())
+    }
+
+    fn pairs_per_worker(&self) -> usize {
+        self.inner.pairs_per_worker()
     }
 }
 

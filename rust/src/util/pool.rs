@@ -173,6 +173,66 @@ where
     });
 }
 
+/// Fallible twin of [`for_row_chunks`]: `f` returns `Result<(), E>` per
+/// chunk and the first error **in chunk order** is returned (not the
+/// first to finish — deterministic for every worker count). Every chunk
+/// still runs to completion before this returns, so no worker is
+/// cancelled mid-write; on `Err` the caller must treat `data` as
+/// unspecified and drop it. Worker panics are re-raised on the caller
+/// with their original payload, exactly like the infallible path.
+pub fn try_for_row_chunks<T, E, F>(
+    workers: usize,
+    data: &mut [T],
+    width: usize,
+    align: usize,
+    f: F,
+) -> Result<(), E>
+where
+    T: Send,
+    E: Send,
+    F: Fn(usize, &mut [T]) -> Result<(), E> + Sync,
+{
+    if width == 0 || data.is_empty() {
+        return Ok(());
+    }
+    debug_assert_eq!(data.len() % width, 0, "data is not whole rows");
+    let rows = data.len() / width;
+    let ranges = split(rows, workers, align);
+    if ranges.len() <= 1 {
+        return f(0, data);
+    }
+    let pin = OVERRIDE.with(|c| c.get());
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        let mut rest = data;
+        for r in ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * width);
+            rest = tail;
+            let fr = &f;
+            handles.push(s.spawn(move || {
+                OVERRIDE.with(|c| c.set(pin));
+                fr(r.start, chunk)
+            }));
+        }
+        let mut first_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +286,64 @@ mod tests {
         for (i, row) in data.chunks(width).enumerate() {
             assert!(row.iter().all(|&v| v == (i + 1) as u32), "row {i}: {row:?}");
         }
+    }
+
+    #[test]
+    fn try_for_row_chunks_matches_infallible_path_on_ok() {
+        let width = 3;
+        let mut want = vec![0u32; 11 * width];
+        for_row_chunks(4, &mut want, width, 2, |row0, chunk| {
+            for (k, row) in chunk.chunks_mut(width).enumerate() {
+                row.fill((row0 + k) as u32);
+            }
+        });
+        let mut got = vec![0u32; 11 * width];
+        let r: Result<(), ()> = try_for_row_chunks(4, &mut got, width, 2, |row0, chunk| {
+            for (k, row) in chunk.chunks_mut(width).enumerate() {
+                row.fill((row0 + k) as u32);
+            }
+            Ok(())
+        });
+        assert!(r.is_ok());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn try_for_row_chunks_first_error_in_chunk_order_wins() {
+        // Two chunks fail; the winner must be the earliest by row index,
+        // not the first thread to finish.
+        let width = 1;
+        let mut data = vec![0u32; 16];
+        let err = try_for_row_chunks(4, &mut data, width, 1, |row0, _chunk| {
+            if row0 >= 4 {
+                Err(row0)
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        let starts: Vec<usize> = split(16, 4, 1).iter().map(|r| r.start).collect();
+        let expect = *starts.iter().find(|&&s| s >= 4).unwrap();
+        assert_eq!(err, expect);
+    }
+
+    #[test]
+    fn try_for_row_chunks_propagates_worker_panics() {
+        let r = std::panic::catch_unwind(|| {
+            let mut data = vec![0u32; 16];
+            let _: Result<(), ()> = try_for_row_chunks(4, &mut data, 1, 1, |row0, _| {
+                if row0 > 0 {
+                    panic!("try worker failed at {row0}");
+                }
+                Ok(())
+            });
+        });
+        let msg = r
+            .unwrap_err()
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("try worker failed"), "payload: {msg}");
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Chaos suite: the fault-tolerance contracts of the oracle layer and
+//! the coordinator, under seeded deterministic fault injection.
+//!
+//! The invariants pinned here:
+//! * retried transient faults yield **bit-identical** factorizations (and
+//!   IVF top-k answers) to a fault-free build, at every pool worker count
+//!   — Δ(i,j) is pure, so a retry re-buys exactly the same values;
+//! * a persistent backend outage mid-maintenance degrades gracefully:
+//!   the previous snapshot keeps serving and `health_summary()` says so;
+//! * corrupt (NaN) similarities are quarantined before they can poison a
+//!   factorization;
+//! * retries are metered Δ-calls with exactly predictable counts.
+
+use simmat::approx::ApproxError;
+use simmat::coordinator::{
+    Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig,
+};
+use simmat::index::{IvfConfig, IvfIndex};
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{
+    CountingOracle, FaultMode, FaultTolerantOracle, FlakyOracle, OracleErrorKind, PrefixOracle,
+    RetryConfig, SimOracle,
+};
+use simmat::util::pool;
+use simmat::util::rng::Rng;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+/// `FaultMode::Transient` surfaces one faulted pair per attempt, so a
+/// retry sub-batch holding k scheduled pairs needs up to k·max_failures
+/// retries before it heals: budget the worst case.
+fn patient(max_failures: u32) -> RetryConfig {
+    let cfg = RetryConfig::default();
+    RetryConfig {
+        max_retries: cfg.retry_chunk as u32 * max_failures,
+        ..cfg
+    }
+}
+
+/// Every method, at one and four workers: a build whose oracle drops ~5%
+/// of batches transiently (healing after two failures) must equal the
+/// fault-free build bit for bit once the fault-tolerant layer retries.
+#[test]
+fn transient_faults_yield_bit_identical_builds_for_every_method() {
+    let mut rng = Rng::new(40);
+    let base = NearPsdOracle::new(64, 8, 0.3, &mut rng);
+    for method in Method::ALL {
+        let plan = method.sample_plan(64, 10, &mut Rng::new(41));
+        let (clean, _) = method
+            .build_with_plan(&base, &plan, &mut Rng::new(42))
+            .unwrap_or_else(|e| panic!("{} clean build: {e}", method.name()));
+        for workers in [1usize, 4] {
+            pool::with_workers(workers, || {
+                let flaky =
+                    FlakyOracle::new(&base, FaultMode::Transient { rate: 0.05 }, 7, 2);
+                let ft = FaultTolerantOracle::new(&flaky, patient(2));
+                let (got, _) = method
+                    .try_build_with_plan(&ft, &plan, &mut Rng::new(42))
+                    .unwrap_or_else(|e| panic!("{} w={workers}: {e}", method.name()));
+                assert_eq!(
+                    got.left.data,
+                    clean.left.data,
+                    "{} w={workers}: left factor must repair bit-identically",
+                    method.name()
+                );
+                assert_eq!(
+                    got.right_t.data,
+                    clean.right_t.data,
+                    "{} w={workers}: right factor must repair bit-identically",
+                    method.name()
+                );
+            });
+        }
+    }
+}
+
+/// Bit-identical stores imply bit-identical retrieval: IVF top-k answers
+/// from a store built under transient faults match the fault-free index.
+#[test]
+fn ivf_topk_is_identical_under_transient_faults() {
+    let mut rng = Rng::new(45);
+    let base = NearPsdOracle::new(72, 8, 0.2, &mut rng);
+    let plan = Method::Nystrom.sample_plan(72, 12, &mut Rng::new(46));
+    let (clean, _) = Method::Nystrom
+        .build_with_plan(&base, &plan, &mut Rng::new(47))
+        .unwrap();
+    for workers in [1usize, 4] {
+        pool::with_workers(workers, || {
+            let flaky = FlakyOracle::new(&base, FaultMode::Transient { rate: 0.08 }, 13, 2);
+            let ft = FaultTolerantOracle::new(&flaky, patient(2));
+            let (got, _) = Method::Nystrom
+                .try_build_with_plan(&ft, &plan, &mut Rng::new(47))
+                .unwrap();
+            assert!(ft.retries() > 0, "an 8% rate over 864 pairs must fault");
+            let idx_clean = IvfIndex::build(Arc::new(clean.clone()), IvfConfig::default()).unwrap();
+            let idx_got = IvfIndex::build(Arc::new(got), IvfConfig::default()).unwrap();
+            for q in [0usize, 7, 33, 71] {
+                assert_eq!(
+                    idx_got.top_k(q, 8),
+                    idx_clean.top_k(q, 8),
+                    "w={workers} query {q}"
+                );
+            }
+        });
+    }
+}
+
+/// A backend that dies mid-rebuild must not take the service down: the
+/// insert itself (already committed) keeps serving, the rebuild is
+/// skipped, and the degradation is visible in the report and metrics.
+#[test]
+fn persistent_outage_during_rebuild_serves_stale_snapshot() {
+    let mut rng = Rng::new(70);
+    let full = NearPsdOracle::new(60, 8, 0.4, &mut rng);
+    let prefix = PrefixOracle::new(&full, 40);
+    let cfg = StreamConfig {
+        probe_pairs: 16,
+        epoch: 8,
+        // Any drift triggers a rebuild as soon as one insert landed.
+        policy: RebuildPolicy {
+            drift_threshold: -1.0,
+            min_inserts: 1,
+        },
+    };
+    let svc = SimilarityService::build_streaming(&prefix, Method::Nystrom, 8, 32, cfg, &mut rng)
+        .unwrap();
+    // Rate-0 transient mode: the wrapper only counts pairs; the outage
+    // switch is the sole fault source. The insert spends 8 docs x 8
+    // landmarks = 64 pairs, the probe 16 more; the backend dies on the
+    // rebuild's very first evaluation (pair 81).
+    let flaky = FlakyOracle::new(&full, FaultMode::Transient { rate: 0.0 }, 0, 0);
+    flaky.outage_after_pairs(64 + 16);
+    let ids: Vec<usize> = (40..48).collect();
+    let report = svc.insert_batch(&flaky, &ids).unwrap();
+    assert_eq!(report.inserted, 8);
+    assert_eq!(report.oracle_calls, 64);
+    assert!(report.drift.is_some(), "the probe ran before the outage");
+    assert!(!report.rebuilt, "the rebuild must have been skipped");
+    let reason = report.degraded.expect("the skipped rebuild must be reported");
+    assert!(reason.contains("rebuild failed"), "{reason}");
+    // The grown store keeps serving.
+    assert_eq!(svc.n(), 48);
+    assert_eq!(svc.factored().n(), 48);
+    match svc.query(&Query::Entry(47, 3)).unwrap() {
+        Response::Scalar(v) => assert!(v.is_finite()),
+        other => panic!("expected scalar, got {other:?}"),
+    }
+    assert_eq!(svc.metrics.degraded_epochs.load(Relaxed), 1);
+    assert_eq!(svc.metrics.oracle_failures.load(Relaxed), 1);
+    assert_eq!(svc.metrics.rebuilds.load(Relaxed), 0);
+    let health = svc.metrics.health_summary();
+    assert!(health.starts_with("status=degraded"), "{health}");
+    assert!(health.contains("degraded_epochs=1"), "{health}");
+    // With the backend still dark, a further insert aborts cleanly and
+    // leaves the store untouched.
+    let err = svc.insert(&flaky, 48).unwrap_err();
+    assert!(err.contains("insert aborted"), "{err}");
+    assert_eq!(svc.n(), 48);
+    assert_eq!(svc.metrics.oracle_failures.load(Relaxed), 2);
+}
+
+/// An outage that lands during the drift probe skips the epoch (no drift
+/// estimate, no rebuild decision) but keeps the inserted rows serving.
+#[test]
+fn probe_outage_skips_the_epoch() {
+    let mut rng = Rng::new(71);
+    let full = NearPsdOracle::new(60, 8, 0.4, &mut rng);
+    let prefix = PrefixOracle::new(&full, 40);
+    let cfg = StreamConfig {
+        probe_pairs: 16,
+        epoch: 8,
+        policy: RebuildPolicy {
+            drift_threshold: -1.0,
+            min_inserts: 1,
+        },
+    };
+    let svc = SimilarityService::build_streaming(&prefix, Method::Nystrom, 8, 32, cfg, &mut rng)
+        .unwrap();
+    let flaky = FlakyOracle::new(&full, FaultMode::Transient { rate: 0.0 }, 0, 0);
+    // Die halfway through the probe: extension (64 pairs) succeeds.
+    flaky.outage_after_pairs(64 + 8);
+    let ids: Vec<usize> = (40..48).collect();
+    let report = svc.insert_batch(&flaky, &ids).unwrap();
+    assert_eq!(report.inserted, 8);
+    assert!(report.drift.is_none(), "failed probe must not report drift");
+    assert!(!report.rebuilt);
+    let reason = report.degraded.expect("the skipped probe must be reported");
+    assert!(reason.contains("drift probe failed"), "{reason}");
+    assert_eq!(svc.n(), 48);
+    assert_eq!(svc.metrics.degraded_epochs.load(Relaxed), 1);
+    assert!(svc.metrics.health_summary().starts_with("status=degraded"));
+}
+
+/// Corrupt (NaN) answers never reach a factorization: a backend that
+/// corrupts persistently fails the build with a Corrupt oracle error,
+/// while one that heals after a retry builds bit-identically.
+#[test]
+fn nan_quarantine_rejects_corrupt_similarities() {
+    let mut rng = Rng::new(50);
+    let base = NearPsdOracle::new(48, 6, 0.3, &mut rng);
+    let plan = Method::Nystrom.sample_plan(48, 8, &mut Rng::new(51));
+    let flaky = FlakyOracle::new(&base, FaultMode::CorruptNan { rate: 0.2 }, 9, u32::MAX);
+    let ft = FaultTolerantOracle::new(&flaky, RetryConfig::default());
+    match Method::Nystrom.try_build_with_plan(&ft, &plan, &mut Rng::new(52)) {
+        Ok(_) => panic!("a persistently corrupt backend must not produce a store"),
+        Err(ApproxError::Oracle(e)) => assert_eq!(e.kind(), OracleErrorKind::Corrupt),
+        Err(other) => panic!("expected a Corrupt oracle error, got: {other}"),
+    }
+    // Same schedule, but the corruption heals after one failure: the
+    // quarantined sub-batches are re-bought and the build is exact.
+    let (clean, _) = Method::Nystrom
+        .build_with_plan(&base, &plan, &mut Rng::new(52))
+        .unwrap();
+    let flaky2 = FlakyOracle::new(&base, FaultMode::CorruptNan { rate: 0.2 }, 9, 1);
+    let ft2 = FaultTolerantOracle::new(&flaky2, RetryConfig::default());
+    let (got, _) = Method::Nystrom
+        .try_build_with_plan(&ft2, &plan, &mut Rng::new(52))
+        .unwrap();
+    assert!(ft2.retries() > 0, "a 20% NaN rate must trigger retries");
+    assert_eq!(got.left.data, clean.left.data);
+    assert_eq!(got.right_t.data, clean.right_t.data);
+}
+
+/// Retries are metered Δ-calls with exactly predictable counts: each
+/// faulted pair re-buys precisely one retry_chunk-sized sub-batch.
+#[test]
+fn retry_delta_call_accounting_is_exact() {
+    pool::with_workers(1, || {
+        let mut rng = Rng::new(60);
+        let base = NearPsdOracle::new(40, 6, 0.3, &mut rng);
+        let landmarks = [5usize, 17, 29, 33];
+        // Row-major gather order: (0,17) is pair #1 (sub-batch 0) and
+        // (20,29) pair #82 (sub-batch 5) — two distinct sub-batches.
+        let faulty = vec![(0usize, 17usize), (20usize, 29usize)];
+        let flaky = FlakyOracle::new(&base, FaultMode::TransientPairs(faulty), 0, 1);
+        let counter = CountingOracle::new(&flaky);
+        let cfg = RetryConfig {
+            retry_chunk: 16,
+            ..RetryConfig::default()
+        };
+        let ft = FaultTolerantOracle::new(&counter, cfg);
+        let cols = ft.try_columns(&landmarks).unwrap();
+        assert_eq!(cols.data, base.columns(&landmarks).data);
+        // 40 rows x 4 landmarks = 160 fault-free pairs, plus one 16-pair
+        // sub-batch retry per faulted pair: 160 + 2*16 metered Δ-calls.
+        assert_eq!(counter.calls(), 192);
+        assert_eq!(ft.retries(), 2);
+        assert_eq!(ft.failures(), 0);
+    });
+}
+
+/// The breaker's failure accounting also feeds a service's Metrics sink
+/// when one is attached, so `health_summary()` reflects oracle-layer
+/// faults even outside the coordinator's own maintenance paths.
+#[test]
+fn fault_metrics_mirror_into_a_service_sink() {
+    use simmat::coordinator::Metrics;
+    let mut rng = Rng::new(80);
+    let base = NearPsdOracle::new(30, 5, 0.3, &mut rng);
+    let flaky = FlakyOracle::new(
+        &base,
+        FaultMode::PersistentRange { lo: 2, hi: 3 },
+        1,
+        u32::MAX,
+    );
+    let metrics = Arc::new(Metrics::new());
+    let cfg = RetryConfig {
+        breaker_threshold: 2,
+        ..RetryConfig::default()
+    };
+    let ft = FaultTolerantOracle::new(&flaky, cfg).with_metrics(metrics.clone());
+    let mut out = [0.0];
+    for _ in 0..2 {
+        assert!(ft.try_eval_batch_into(&[(2, 0)], &mut out).is_err());
+    }
+    assert!(ft.breaker_open());
+    assert_eq!(metrics.oracle_failures.load(Relaxed), 2);
+    assert_eq!(metrics.breaker_trips.load(Relaxed), 1);
+    let health = metrics.health_summary();
+    assert!(health.starts_with("status=degraded"), "{health}");
+    assert!(health.contains("breaker_trips=1"), "{health}");
+}

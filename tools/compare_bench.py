@@ -58,6 +58,7 @@ TRACKED = [
     ("BENCH_topk.json", "recall_at_k", "higher"),
     ("BENCH_topk.json", "prune_rate", "higher"),
     ("BENCH_streaming.json", "drift_overhead_ratio", "lower"),
+    ("BENCH_fault.json", "overhead_1pct", "lower"),
 ]
 
 FREEZE_FIRST = "baseline is provisional — freeze first"
