@@ -11,7 +11,7 @@
 
 use std::sync::atomic::Ordering::Relaxed;
 
-use simmat::coordinator::{Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig};
+use simmat::coordinator::{Method, Query, RebuildPolicy, Response, ServiceConfig, StreamConfig};
 use simmat::sim::synthetic::NearPsdOracle;
 use simmat::sim::{
     CountingOracle, FaultMode, FaultTolerantOracle, FlakyOracle, PrefixOracle, RetryConfig,
@@ -26,7 +26,7 @@ fn main() {
     // --- 1. transient faults heal to a bit-identical build ---
     let plan = Method::SmsNystrom.sample_plan(n, 16, &mut Rng::new(1));
     let (clean, _) = Method::SmsNystrom
-        .build_with_plan(&base, &plan, &mut Rng::new(2))
+        .try_build_with_plan(&base, &plan, &mut Rng::new(2))
         .unwrap();
     // 2% of pairs fail transiently (healing after one failure each);
     // `FaultMode::Transient` surfaces one faulted pair per attempt, so
@@ -62,7 +62,10 @@ fn main() {
             min_inserts: 1,
         },
     };
-    let svc = SimilarityService::build_streaming(&prefix, Method::SmsNystrom, 16, 32, cfg, &mut rng)
+    let svc = ServiceConfig::new(Method::SmsNystrom, 16)
+        .batch(32)
+        .stream(cfg)
+        .build(&prefix, &mut rng)
         .unwrap();
     println!(
         "built {} over the 80-doc prefix ({} Δ calls)",
@@ -75,7 +78,7 @@ fn main() {
     let outage = FlakyOracle::new(&base, FaultMode::Transient { rate: 0.0 }, 0, 0);
     outage.outage_after_pairs(128 + 16);
     let ids: Vec<usize> = (80..88).collect();
-    let report = svc.insert_batch(&outage, &ids).unwrap();
+    let report = svc.try_insert_batch(&outage, &ids).unwrap();
     assert!(!report.rebuilt);
     println!(
         "insert of {} docs committed; degraded: {}",
@@ -89,7 +92,7 @@ fn main() {
         other => panic!("expected a scalar, got {other:?}"),
     }
     // With the backend still dark, the next insert aborts cleanly.
-    let err = svc.insert(&outage, 88).unwrap_err();
+    let err = svc.try_insert(&outage, 88).unwrap_err();
     println!("next insert against the dark backend: {err}");
     assert_eq!(svc.n(), 88, "a failed insert must leave the store untouched");
     assert_eq!(svc.metrics.oracle_failures.load(Relaxed), 2);

@@ -7,7 +7,7 @@
 
 use std::time::{Duration, Instant};
 
-use simmat::coordinator::{BatchService, Method, Query, Response, SimilarityService};
+use simmat::coordinator::{BatchService, Method, Query, Response, ServiceConfig};
 use simmat::data::CorefSpec;
 use simmat::runtime::{shared_runtime_subset, CorefPjrtOracle};
 use simmat::util::rng::Rng;
@@ -21,8 +21,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- build phase: sublinear, through the batching pipeline ---
     let oracle = CorefPjrtOracle::new(rt.clone(), corpus.mentions.clone())?;
-    let svc = SimilarityService::build(&oracle, Method::SiCur, n / 6, 64, &mut rng)
-        .map_err(|e| anyhow::anyhow!(e))?;
+    let svc = ServiceConfig::new(Method::SiCur, n / 6)
+        .batch(64)
+        .build(&oracle, &mut rng)?;
     println!(
         "built {} approximation: {} oracle calls ({:.1}% saved vs exact), {:.2}s",
         svc.stats.method.name(),

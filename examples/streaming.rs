@@ -10,7 +10,7 @@ use std::sync::atomic::Ordering::Relaxed;
 use std::time::Instant;
 
 use simmat::approx::rel_fro_error;
-use simmat::coordinator::{Method, RebuildPolicy, SimilarityService, StreamConfig};
+use simmat::coordinator::{Method, RebuildPolicy, ServiceConfig, StreamConfig};
 use simmat::sim::{CountingOracle, PrefixOracle, SimOracle};
 use simmat::util::rng::Rng;
 use simmat::workloads::{bench_scale, streaming_workload};
@@ -34,9 +34,11 @@ fn main() {
             min_inserts: 8,
         },
     };
-    let svc =
-        SimilarityService::build_streaming(&prefix, Method::SmsNystrom, s1, 64, cfg, &mut rng)
-            .unwrap();
+    let svc = ServiceConfig::new(Method::SmsNystrom, s1)
+        .batch(64)
+        .stream(cfg)
+        .build(&prefix, &mut rng)
+        .unwrap();
     println!(
         "built {} over the prefix: {} oracle calls, {:.2}s",
         svc.stats.method.name(),
@@ -50,7 +52,7 @@ fn main() {
     while id < n {
         let hi = (id + batch).min(n);
         let ids: Vec<usize> = (id..hi).collect();
-        let report = svc.insert_batch(full, &ids).unwrap();
+        let report = svc.try_insert_batch(full, &ids).unwrap();
         if let Some(d) = report.drift {
             let marker = if report.rebuilt {
                 "  -> REBUILD (reservoir-refreshed landmarks)"
@@ -98,7 +100,7 @@ fn main() {
         let hi = (id + batch).min(n);
         let grown = PrefixOracle::new(full, hi);
         let counter = CountingOracle::new(&grown);
-        let f = Method::SmsNystrom.build(&counter, s1, &mut rng2).unwrap();
+        let f = Method::SmsNystrom.try_build(&counter, s1, &mut rng2).unwrap();
         rebuild_calls += counter.calls();
         if hi == n {
             err_rebuild = rel_fro_error(&k, &f);

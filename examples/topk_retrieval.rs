@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use simmat::coordinator::{dense_rows, Method, Query, Response, SimilarityService};
+use simmat::coordinator::{dense_rows, Method, Query, Response, ServiceConfig};
 use simmat::index::{scan_batch, select_top_k, IvfConfig};
 use simmat::sim::synthetic::RbfOracle;
 use simmat::sim::SimOracle;
@@ -21,7 +21,10 @@ fn main() {
     let s1 = (n / 4).clamp(32, 160);
     println!("corpus: {n} docs, s1 = {s1} landmarks");
 
-    let svc = SimilarityService::build(&oracle, Method::SmsNystrom, s1, 64, &mut rng).unwrap();
+    let svc = ServiceConfig::new(Method::SmsNystrom, s1)
+        .batch(64)
+        .build(&oracle, &mut rng)
+        .unwrap();
     println!(
         "built {} in {:.2}s ({} Δ calls, {:.1}% of n²)",
         svc.stats.method.name(),
@@ -30,7 +33,7 @@ fn main() {
         100.0 * (1.0 - svc.stats.savings()),
     );
 
-    svc.enable_index(IvfConfig::default()).unwrap();
+    svc.try_enable_index(IvfConfig::default()).unwrap();
     let idx = svc.index().unwrap();
     println!(
         "index: {} cells over {} signed dims (gap {:.2e})",
@@ -73,7 +76,7 @@ fn main() {
         fast_scan: true,
         ..IvfConfig::default()
     };
-    svc.enable_index(fast_cfg).unwrap();
+    svc.try_enable_index(fast_cfg).unwrap();
     let t0 = Instant::now();
     let fast = match svc.query(&Query::TopKBatch(queries.clone(), k)).unwrap() {
         Response::RankedBatch(lists) => lists,

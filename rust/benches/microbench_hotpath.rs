@@ -10,7 +10,8 @@ use std::time::Duration;
 
 use simmat::approx::{self, Factored, GatherPlan, SmsConfig};
 use simmat::coordinator::{
-    BatchService, BatchingOracle, Method, Metrics, RebuildPolicy, SimilarityService, StreamConfig,
+    BatchService, BatchingOracle, Method, Metrics, Query, RebuildPolicy, Response, ServiceConfig,
+    ShardedService, StreamConfig, TransportKind,
 };
 use simmat::index::{scan_batch, topk_batch, IvfConfig, IvfIndex};
 use simmat::linalg::kernel;
@@ -304,15 +305,17 @@ fn main() {
         },
     };
     let mut srng = Rng::new(7);
-    let svc =
-        SimilarityService::build_streaming(&sprefix, Method::SmsNystrom, ss1, 64, scfg, &mut srng)
-            .unwrap();
+    let svc = ServiceConfig::new(Method::SmsNystrom, ss1)
+        .batch(64)
+        .stream(scfg)
+        .build(&sprefix, &mut srng)
+        .unwrap();
     let t0 = std::time::Instant::now();
     let mut sid = sn0;
     while sid < sn {
         let hi = (sid + 8).min(sn);
         let ids: Vec<usize> = (sid..hi).collect();
-        svc.insert_batch(&sw.oracle, &ids).unwrap();
+        svc.try_insert_batch(&sw.oracle, &ids).unwrap();
         sid = hi;
     }
     let insert_secs = t0.elapsed().as_secs_f64();
@@ -333,7 +336,7 @@ fn main() {
     for method in Method::ALL {
         let mut r2 = Rng::new(40);
         let plan = method.sample_plan(sn0, ss1, &mut r2);
-        let (mut f, ext) = method.build_with_plan(&sprefix, &plan, &mut r2).unwrap();
+        let (mut f, ext) = method.try_build_with_plan(&sprefix, &plan, &mut r2).unwrap();
         let scounter = CountingOracle::new(&sw.oracle);
         let ids: Vec<usize> = (sn0..sn0 + 8).collect();
         ext.extend(&mut f, &scounter, &ids);
@@ -667,6 +670,73 @@ fn main() {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_fault.json"));
     std::fs::write(&fault_path, fault_json).unwrap();
     rep.line(format!("- wrote {}", fault_path.display()));
+
+    // ---- Sharding: scatter-gather serving vs the single-shard path ----
+    // Same build, same seed: a 3-shard fleet behind the channel
+    // transport must answer the top-k batch bit-identically to the
+    // single-shard service; the merge-overhead ratio (sharded time over
+    // single-shard time for the same batch) is the tracked metric —
+    // it prices the per-shard scatter, the channel hop, and the
+    // canonical-order merge, and must not regress as the router grows.
+    rep.line("");
+    rep.line("## Sharding");
+    let (sh_n, sh_shards, sh_k) = (900usize, 3usize, 10usize);
+    let sh_oracle = {
+        let mut srng = Rng::new(41);
+        NearPsdOracle::new(sh_n, 16, 0.3, &mut srng)
+    };
+    let sh_cfg = ServiceConfig::new(Method::SmsNystrom, 96).batch(64).index(IvfConfig::default());
+    let sh_single = sh_cfg.build(&sh_oracle, &mut Rng::new(42)).unwrap();
+    let sh_fleet = ShardedService::build(
+        &sh_oracle,
+        &sh_cfg,
+        sh_shards,
+        TransportKind::Channel,
+        &mut Rng::new(42),
+    )
+    .unwrap();
+    let sh_queries: Vec<usize> = (0..sh_n).step_by(7).collect();
+    let sh_q = Query::TopKBatch(sh_queries.clone(), sh_k);
+    let sh_want = match sh_single.query(&sh_q).unwrap() {
+        Response::RankedBatch(lists) => lists,
+        other => panic!("expected ranked lists, got {other:?}"),
+    };
+    let sh_got = match sh_fleet.query(&sh_q).unwrap() {
+        Response::RankedBatch(lists) => lists,
+        other => panic!("expected ranked lists, got {other:?}"),
+    };
+    assert_eq!(sh_got, sh_want, "scatter-gather must merge to the exact single-shard lists");
+    let sh_single_t = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(sh_single.query(&sh_q).unwrap());
+    });
+    let sh_fleet_t = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(sh_fleet.query(&sh_q).unwrap());
+    });
+    let sh_qps_single = sh_queries.len() as f64 / (sh_single_t.mean_ns / 1e9);
+    let sh_qps_sharded = sh_queries.len() as f64 / (sh_fleet_t.mean_ns / 1e9);
+    let sh_ratio = sh_fleet_t.mean_ns / sh_single_t.mean_ns.max(1.0);
+    rep.line(format!(
+        "- top-{sh_k} x{} (n={sh_n}, {sh_shards} shards, channel): single {sh_qps_single:.0} \
+         q/s, sharded {sh_qps_sharded:.0} q/s, merge overhead {sh_ratio:.2}x — bit-identical",
+        sh_queries.len(),
+    ));
+    assert!(
+        sh_ratio < 50.0,
+        "scatter-gather overhead blew past sanity: {sh_ratio:.1}x over single-shard"
+    );
+    let shard_json = format!(
+        "{{\n  \"bench\": \"shard\",\n  \"shards\": {sh_shards},\n  \
+         \"corpus\": {{\"n\": {sh_n}, \"s1\": 96}},\n  \"queries\": {nq},\n  \"k\": {sh_k},\n  \
+         \"qps_single\": {sh_qps_single:.1},\n  \"qps_sharded\": {sh_qps_sharded:.1},\n  \
+         \"merge_overhead_ratio\": {sh_ratio:.3}\n}}\n",
+        nq = sh_queries.len(),
+    );
+    let shard_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_shard.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_shard.json"));
+    std::fs::write(&shard_path, shard_json).unwrap();
+    rep.line(format!("- wrote {}", shard_path.display()));
 
     // ---- PJRT per-artifact execution latency ----
     if let Some(dir) = default_artifacts_dir() {

@@ -46,6 +46,15 @@ pub struct Metrics {
     pub degraded_epochs: AtomicU64,
     /// Circuit-breaker trips in the fault-tolerant oracle layer.
     pub breaker_trips: AtomicU64,
+    /// Per-shard requests issued by the scatter-gather router (one per
+    /// shard touched per query — a 3-shard top-k scatter counts 3).
+    pub shard_calls: AtomicU64,
+    /// Shard requests that came back failed (transport error, degraded
+    /// worker, or an error reply).
+    pub shard_failures: AtomicU64,
+    /// Replies rejected by the router's epoch fence (each one triggers a
+    /// bounded retry at the refreshed epoch).
+    pub epoch_rejects: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     latency_count: AtomicU64,
@@ -116,6 +125,18 @@ impl Metrics {
 
     pub fn record_breaker_trip(&self) {
         self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shard_calls(&self, calls: u64) {
+        self.shard_calls.fetch_add(calls, Ordering::Relaxed);
+    }
+
+    pub fn record_shard_failure(&self) {
+        self.shard_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_epoch_reject(&self) {
+        self.epoch_rejects.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -205,6 +226,17 @@ impl Metrics {
         )
     }
 
+    /// One-line view of the scatter-gather counters.
+    pub fn shard_summary(&self) -> String {
+        format!(
+            "shard_calls={} shard_failures={} epoch_rejects={} queries={}",
+            self.shard_calls.load(Ordering::Relaxed),
+            self.shard_failures.load(Ordering::Relaxed),
+            self.epoch_rejects.load(Ordering::Relaxed),
+            self.queries.load(Ordering::Relaxed),
+        )
+    }
+
     /// One-line view of the streaming-growth counters.
     pub fn streaming_summary(&self) -> String {
         format!(
@@ -260,6 +292,21 @@ mod tests {
         assert!(h.contains("oracle_retries=3"), "{h}");
         assert!(h.contains("degraded_epochs=1"), "{h}");
         assert!(h.contains("breaker_trips=1"), "{h}");
+    }
+
+    #[test]
+    fn shard_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_shard_calls(3);
+        m.record_shard_calls(2);
+        m.record_shard_failure();
+        m.record_epoch_reject();
+        assert_eq!(m.shard_calls.load(Ordering::Relaxed), 5);
+        assert_eq!(m.shard_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(m.epoch_rejects.load(Ordering::Relaxed), 1);
+        let s = m.shard_summary();
+        assert!(s.contains("shard_calls=5"), "{s}");
+        assert!(s.contains("epoch_rejects=1"), "{s}");
     }
 
     #[test]

@@ -1,17 +1,25 @@
 //! L3 coordinator — the serving plane around the sublinear approximation:
 //! landmark scheduling, dynamic batching into artifact shapes, the query
-//! router over the factored store, and serving metrics.
+//! router over the factored store, the transport-agnostic service core
+//! with its multi-shard scatter-gather tier, and serving metrics.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod service;
+pub mod shard;
 pub mod tiles;
 
 pub use batcher::{BatchClient, BatchService, BatchingOracle};
 pub use metrics::Metrics;
-pub use router::{respond, route, Query, Response, RouteError};
+pub use router::{respond, route, Query, Reply, Request, Response, RouteError, VecQuery};
 pub use scheduler::{schedule, DriftMonitor, RebuildPolicy, SampleMode, Schedule};
 pub use server::{BuildStats, InsertReport, Method, SimilarityService, StreamConfig};
-pub use tiles::{dense_rows, TileServer};
+pub use service::{
+    connect, ChannelTransport, DirectTransport, Service, ServiceConfig, ServiceError, Snapshot,
+    Transport, TransportKind,
+};
+pub use shard::{Partition, ShardWorker, ShardedService};
+pub use tiles::{dense_rows, dense_rows_sharded, TileServer};

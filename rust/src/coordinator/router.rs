@@ -6,11 +6,91 @@
 //! Top-k queries routed here run the exact scan over the store; the
 //! coordinator's `SimilarityService` intercepts them when its retrieval
 //! index (`index::IvfIndex`) is enabled and answers sublinearly instead.
+//!
+//! # PROTOCOL — the versioned shard wire
+//!
+//! The sharded serving tier (`coordinator::shard`) speaks the same enums
+//! over a [`Transport`](crate::coordinator::service::Transport), wrapped
+//! in a versioned envelope:
+//!
+//! ```text
+//!   router ── Request { epoch, query } ──▶ shard worker
+//!   router ◀─ Reply  { epoch, response } ─ shard worker
+//! ```
+//!
+//! Rules, in order:
+//!
+//! 1. **Epoch fencing.** Every request carries the epoch the router
+//!    last observed for the target shard. A worker whose snapshot epoch
+//!    differs answers `Response::Error("epoch mismatch …")` with its
+//!    *current* epoch in the reply envelope — it never serves a query
+//!    tagged for a snapshot it no longer (or does not yet) hold. The
+//!    router detects the mismatch from `Reply::epoch`, refreshes its
+//!    view, and retries a bounded number of times before surfacing
+//!    `ServiceError::Epoch`. Rejection is deterministic: the same
+//!    (request epoch, snapshot epoch) pair always produces the same
+//!    reply.
+//! 2. **Data plane only.** The wire carries read queries. Mutations
+//!    (insert, rebuild commit) go through typed `ShardWorker` handle
+//!    methods — that seam is where a socket/persistence backend slots
+//!    in later, with the same epoch fencing.
+//! 3. **Self-describing payloads.** Cross-shard queries never reference
+//!    rows the target shard does not own. The router first fetches the
+//!    query point's serving operands from its *owner* shard
+//!    ([`Query::Vectors`] → [`Response::Vectors`], a list of
+//!    [`VecQuery`] preambles), then scatters by-value queries
+//!    ([`Query::TopKVec`], [`Query::ScoreRow`], [`Query::EntryVec`])
+//!    that embed those operands. Document ids on the wire are always
+//!    **global**; each shard translates to its local row positions.
+//! 4. **Versioning.** `Query`, `Response`, `RouteError`, `Request` and
+//!    `Reply` are `#[non_exhaustive]`: new variants/fields are a
+//!    protocol revision, not an API break. Peers must keep a wildcard
+//!    arm and answer unknown queries with `Response::Error` rather than
+//!    panicking.
 
 use crate::approx::Factored;
 use crate::index;
+use crate::linalg::{dot, kernel};
+
+/// A query point shipped by value: the serving operands of one document,
+/// detached from the store that produced them. This is the preamble the
+/// shard router gathers from a point's owner shard and then scatters to
+/// every other shard (protocol rule 3 above).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VecQuery {
+    /// The point's left-factor row — the exact scoring operand: every
+    /// score computed from it is `dot(left, right_t.row(j))`, bit-equal
+    /// to `Factored::entry`.
+    pub left: Vec<f64>,
+    /// The point's signed-embedding query view (`SignedEmbedding::
+    /// query_into`), used only for IVF cell bounds. `None` when the
+    /// serving side has no index — scans then run exact.
+    pub view: Option<Vec<f64>>,
+    /// Global document id to exclude from ranked results (the query
+    /// point itself, for self-queries). Honored by [`Query::TopKVec`];
+    /// ignored by [`Query::ScoreRow`]/[`Query::EntryVec`], which score
+    /// unconditionally.
+    pub exclude: Option<usize>,
+}
+
+impl VecQuery {
+    pub fn new(left: Vec<f64>) -> VecQuery {
+        VecQuery { left, view: None, exclude: None }
+    }
+
+    pub fn with_view(mut self, view: Vec<f64>) -> VecQuery {
+        self.view = Some(view);
+        self
+    }
+
+    pub fn excluding(mut self, id: usize) -> VecQuery {
+        self.exclude = Some(id);
+        self
+    }
+}
 
 #[derive(Clone, Debug, PartialEq)]
+#[non_exhaustive]
 pub enum Query {
     /// K̃_ij.
     Entry(usize, usize),
@@ -23,15 +103,50 @@ pub enum Query {
     TopKBatch(Vec<usize>, usize),
     /// Embedding of point i (left-factor row).
     Embed(usize),
+    /// Owner-preamble fetch (shard plane): the serving operands of the
+    /// listed **global** ids, each answered as a [`VecQuery`] with
+    /// `exclude = Some(id)`. Ids must all be owned by the serving side.
+    Vectors(Vec<usize>),
+    /// Up-to-k nearest neighbours per by-value query point, over the
+    /// serving side's documents only (global ids in the result). `k` is
+    /// not clamped here — "up to k" is the contract; the shard router
+    /// clamps once, globally, before scattering.
+    TopKVec(Vec<VecQuery>, usize),
+    /// Scores of one by-value query point against every document the
+    /// serving side holds, in local row order ([`VecQuery::exclude`] is
+    /// ignored). The shard router interleaves the per-shard segments
+    /// back into the global row.
+    ScoreRow(VecQuery),
+    /// Score of one by-value query point against the single **global**
+    /// document j: `dot(left, right_t.row(j))`, bit-equal to
+    /// `Factored::entry` when `left` is a left-factor row.
+    EntryVec(VecQuery, usize),
 }
 
 #[derive(Clone, Debug, PartialEq)]
+#[non_exhaustive]
 pub enum Response {
     Scalar(f64),
     Vector(Vec<f64>),
     Ranked(Vec<(usize, f64)>),
     /// One ranked list per query of a `TopKBatch`.
     RankedBatch(Vec<Vec<(usize, f64)>>),
+    /// One preamble per id of a [`Query::Vectors`] fetch.
+    Vectors(Vec<VecQuery>),
+    /// Ranked lists for a [`Query::TopKVec`] scatter, with the serving
+    /// side's scan counters (the wire has no metrics side-channel; the
+    /// router folds these into its own [`Metrics`]).
+    ///
+    /// [`Metrics`]: crate::coordinator::Metrics
+    RankedShard {
+        lists: Vec<Vec<(usize, f64)>>,
+        /// IVF cells scanned (candidates scored exactly), or queries ×
+        /// documents for an exact scan.
+        scanned: u64,
+        /// IVF cells pruned by the Cauchy–Schwarz cap; 0 for an exact
+        /// scan.
+        pruned: u64,
+    },
     /// Structured failure: the query was invalid (or the service is
     /// degraded); the message is the [`RouteError`] rendering. Produced
     /// by [`respond`] so serving loops never panic or drop a request.
@@ -39,8 +154,12 @@ pub enum Response {
 }
 
 #[derive(Debug)]
+#[non_exhaustive]
 pub enum RouteError {
     OutOfRange { index: usize, n: usize },
+    /// A by-value query's operand has the wrong dimension for this
+    /// store (protocol rule 3: payloads must be self-consistent).
+    BadVector { expected: usize, got: usize },
 }
 
 impl std::fmt::Display for RouteError {
@@ -49,17 +168,61 @@ impl std::fmt::Display for RouteError {
             RouteError::OutOfRange { index, n } => {
                 write!(f, "index {index} out of range for n={n}")
             }
+            RouteError::BadVector { expected, got } => {
+                write!(f, "query vector has dimension {got}, store expects {expected}")
+            }
         }
     }
 }
 
 impl std::error::Error for RouteError {}
 
+/// Versioned request envelope (protocol rules 1 and 4): `epoch` is the
+/// snapshot generation the router believes the target shard serves.
+#[derive(Clone, Debug, PartialEq)]
+#[non_exhaustive]
+pub struct Request {
+    pub epoch: u64,
+    pub query: Query,
+}
+
+impl Request {
+    pub fn new(epoch: u64, query: Query) -> Request {
+        Request { epoch, query }
+    }
+}
+
+/// Versioned reply envelope: `epoch` is the responder's *current*
+/// snapshot generation — on an epoch mismatch it tells the router what
+/// to retry with.
+#[derive(Clone, Debug, PartialEq)]
+#[non_exhaustive]
+pub struct Reply {
+    pub epoch: u64,
+    pub response: Response,
+}
+
+impl Reply {
+    pub fn new(epoch: u64, response: Response) -> Reply {
+        Reply { epoch, response }
+    }
+}
+
 /// Total (never-failing) variant of [`route`]: invalid queries come back
 /// as [`Response::Error`] instead of `Err`, so a serving loop can answer
 /// every request with a `Response` and never unwinds on bad input.
 pub fn respond(f: &Factored, q: &Query) -> Response {
     route(f, q).unwrap_or_else(|e| Response::Error(e.to_string()))
+}
+
+/// Dimension check for a by-value operand against this store's rank.
+fn check_dim(f: &Factored, vq: &VecQuery) -> Result<(), RouteError> {
+    let r = f.rank();
+    if vq.left.len() == r {
+        Ok(())
+    } else {
+        Err(RouteError::BadVector { expected: r, got: vq.left.len() })
+    }
 }
 
 pub fn route(f: &Factored, q: &Query) -> Result<Response, RouteError> {
@@ -98,6 +261,46 @@ pub fn route(f: &Factored, q: &Query) -> Result<Response, RouteError> {
         &Query::Embed(i) => {
             check(i)?;
             Ok(Response::Vector(f.embedding(i).to_vec()))
+        }
+        Query::Vectors(ids) => {
+            for &i in ids {
+                check(i)?;
+            }
+            // Bare-store preambles carry no embedding view (no index
+            // here); a `ShardWorker` with an index enabled fills it in.
+            let vqs = ids
+                .iter()
+                .map(|&i| VecQuery::new(f.left.row(i).to_vec()).excluding(i))
+                .collect();
+            Ok(Response::Vectors(vqs))
+        }
+        Query::TopKVec(vqs, k) => {
+            let mut row = vec![0.0; n];
+            let mut lists = Vec::with_capacity(vqs.len());
+            let mut scanned = 0u64;
+            for vq in vqs {
+                check_dim(f, vq)?;
+                // Same kernel as `Factored::row_into`: every score is
+                // still dot(left, right_t.row(j)) bit-for-bit, so the
+                // exact vec scan equals `Factored::top_k` /
+                // `scan_batch` on the owning store.
+                kernel::gemv_nt(&vq.left, &f.right_t, &mut row);
+                let excl = vq.exclude.unwrap_or(n); // n never matches
+                lists.push(index::select_top_k(&row, excl, *k));
+                scanned += row.len() as u64;
+            }
+            Ok(Response::RankedShard { lists, scanned, pruned: 0 })
+        }
+        Query::ScoreRow(vq) => {
+            check_dim(f, vq)?;
+            let mut row = vec![0.0; n];
+            kernel::gemv_nt(&vq.left, &f.right_t, &mut row);
+            Ok(Response::Vector(row))
+        }
+        Query::EntryVec(vq, j) => {
+            check_dim(f, vq)?;
+            check(*j)?;
+            Ok(Response::Scalar(dot(&vq.left, f.right_t.row(*j))))
         }
     }
 }
@@ -140,6 +343,9 @@ mod tests {
         assert!(route(&f, &Query::Entry(8, 0)).is_err());
         assert!(route(&f, &Query::Row(100)).is_err());
         assert!(route(&f, &Query::TopKBatch(vec![0, 8], 2)).is_err());
+        assert!(route(&f, &Query::Vectors(vec![8])).is_err());
+        let vq = VecQuery::new(vec![0.0; 3]);
+        assert!(route(&f, &Query::EntryVec(vq, 8)).is_err());
     }
 
     #[test]
@@ -166,6 +372,74 @@ mod tests {
     }
 
     #[test]
+    fn vec_plane_round_trip_is_bit_identical() {
+        // Vectors → TopKVec/ScoreRow/EntryVec against the same store
+        // must reproduce the id-based variants exactly: the preamble is
+        // the left-factor row, and every downstream score runs the same
+        // dot/gemv kernels.
+        let f = toy();
+        let vqs = match route(&f, &Query::Vectors(vec![1, 4, 6])).unwrap() {
+            Response::Vectors(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(vqs[0].left, f.left.row(1).to_vec());
+        assert_eq!(vqs[0].exclude, Some(1));
+        assert!(vqs[0].view.is_none());
+
+        match route(&f, &Query::TopKVec(vqs.clone(), 3)).unwrap() {
+            Response::RankedShard { lists, scanned, pruned } => {
+                for (t, &i) in [1usize, 4, 6].iter().enumerate() {
+                    assert_eq!(lists[t], f.top_k(i, 3), "query {i}");
+                }
+                assert_eq!(scanned, 24); // 3 queries × 8 docs, exact scan
+                assert_eq!(pruned, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        match route(&f, &Query::ScoreRow(vqs[1].clone())).unwrap() {
+            Response::Vector(row) => assert_eq!(row, f.row(4)),
+            other => panic!("{other:?}"),
+        }
+        match route(&f, &Query::EntryVec(vqs[2].clone(), 2)).unwrap() {
+            Response::Scalar(v) => assert_eq!(v, f.entry(6, 2)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn topk_vec_serves_up_to_k_without_clamping_input() {
+        // "Up to k": k exceeding the candidate count yields every
+        // candidate (minus the excluded self), ranked canonically.
+        let f = toy();
+        let vq = VecQuery::new(f.left.row(2).to_vec()).excluding(2);
+        match route(&f, &Query::TopKVec(vec![vq], 99)).unwrap() {
+            Response::RankedShard { lists, .. } => {
+                assert_eq!(lists[0].len(), 7);
+                assert_eq!(lists[0], f.top_k(2, 7));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_vector_dimension_is_rejected() {
+        let f = toy(); // rank 3
+        let vq = VecQuery::new(vec![0.0; 5]);
+        match route(&f, &Query::ScoreRow(vq)) {
+            Err(RouteError::BadVector { expected: 3, got: 5 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn envelope_round_trips_epoch() {
+        let req = Request::new(7, Query::Entry(0, 0));
+        assert_eq!(req.epoch, 7);
+        let rep = Reply::new(7, Response::Scalar(1.0));
+        assert_eq!(rep, Reply::new(7, Response::Scalar(1.0)));
+    }
+
+    #[test]
     fn respond_returns_structured_error_per_query_variant() {
         // Every query variant with an out-of-range index must come back
         // as Response::Error — never a panic, never a silent clamp.
@@ -177,6 +451,8 @@ mod tests {
             Query::TopK(99, 2),
             Query::TopKBatch(vec![0, 8], 2),
             Query::Embed(8),
+            Query::Vectors(vec![8]),
+            Query::EntryVec(VecQuery::new(vec![0.0; 3]), 8),
         ];
         for q in &bad {
             match respond(&f, q) {

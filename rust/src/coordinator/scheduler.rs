@@ -154,15 +154,37 @@ impl DriftMonitor {
         rng: &mut Rng,
     ) -> Result<f64, OracleError> {
         debug_assert!(n <= oracle.n() && n <= f.n());
-        let pairs: Vec<(usize, usize)> = (0..self.probe_pairs)
-            .map(|_| (rng.below(n), rng.below(n)))
-            .collect();
+        let pairs = self.draw_pairs(n, rng);
+        let approx: Vec<f64> = pairs.iter().map(|&(i, j)| f.entry(i, j)).collect();
+        self.probe_given(oracle, &pairs, &approx)
+    }
+
+    /// Draw one epoch's probe pairs, advancing `rng` exactly as
+    /// [`Self::try_probe`] would — the split half the sharded router
+    /// uses when the approximate entries come over the wire instead of
+    /// from a local store.
+    pub fn draw_pairs(&self, n: usize, rng: &mut Rng) -> Vec<(usize, usize)> {
+        (0..self.probe_pairs).map(|_| (rng.below(n), rng.below(n))).collect()
+    }
+
+    /// Finish a probe whose pairs were drawn by [`Self::draw_pairs`] and
+    /// whose approximate entries `approx[t] = K̃(pairs[t])` were computed
+    /// elsewhere (locally or gathered from shards — the values are
+    /// bit-equal either way, so the drift estimate is too). On `Err`,
+    /// `last_drift` is left untouched.
+    pub fn probe_given(
+        &mut self,
+        oracle: &dyn SimOracle,
+        pairs: &[(usize, usize)],
+        approx: &[f64],
+    ) -> Result<f64, OracleError> {
+        debug_assert_eq!(pairs.len(), approx.len());
         let mut exact = vec![0.0; pairs.len()];
-        oracle.try_eval_batch_into(&pairs, &mut exact)?;
+        oracle.try_eval_batch_into(pairs, &mut exact)?;
         let mut num = 0.0;
         let mut den = 0.0;
-        for (v, &(i, j)) in exact.iter().zip(&pairs) {
-            let d = v - f.entry(i, j);
+        for (t, &v) in exact.iter().enumerate() {
+            let d = v - approx[t];
             num += d * d;
             den += v * v;
         }

@@ -12,21 +12,22 @@
 //! Queries keep flowing the whole time: they read an `Arc` snapshot under
 //! a briefly-held lock, and a rebuild swaps the store atomically.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError, RwLock};
 use std::time::Instant;
 
 use crate::approx::{
     self, ApproxError, Extension, Factored, LandmarkPlan, LandmarkReservoir, SmsConfig,
 };
-use crate::index::{rerank_exact, topk_batch, IvfConfig, IvfIndex};
-use crate::sim::{CountingOracle, PrefixOracle, SimOracle};
+use crate::index::{rerank_exact, IvfConfig, IvfIndex};
+use crate::sim::{CountingOracle, FaultTolerantOracle, PrefixOracle, SimOracle};
 use crate::util::rng::Rng;
 
 use super::batcher::BatchingOracle;
 use super::metrics::Metrics;
-use super::router::{route, Query, Response, RouteError};
+use super::router::{Query, Reply, Request, Response};
 use super::scheduler::{DriftMonitor, RebuildPolicy};
+use super::service::{epoch_mismatch, Service, ServiceConfig, ServiceError, Snapshot};
 
 /// Lock-poisoning policy for the whole service, in one place: recover the
 /// guard and keep serving. Every shared structure here (the factored
@@ -35,7 +36,7 @@ use super::scheduler::{DriftMonitor, RebuildPolicy};
 /// consistent snapshot, so the data under a poisoned lock is still valid
 /// and refusing to serve it would turn one crashed caller into a wedged
 /// service. Tested by `poisoned_lock_does_not_wedge_the_service`.
-fn relock<T>(r: Result<T, PoisonError<T>>) -> T {
+pub(crate) fn relock<T>(r: Result<T, PoisonError<T>>) -> T {
     r.unwrap_or_else(PoisonError::into_inner)
 }
 
@@ -92,6 +93,7 @@ impl Method {
 
     /// Build from a fixed landmark plan, returning the factored store
     /// plus its out-of-sample [`Extension`] (the streaming insert path).
+    #[deprecated(note = "use try_build_with_plan, which returns a typed ApproxError")]
     pub fn build_with_plan(
         &self,
         oracle: &dyn SimOracle,
@@ -129,14 +131,26 @@ impl Method {
     }
 
     /// Build the factored approximation with `s1` landmarks.
+    #[deprecated(note = "use try_build, which returns a typed ApproxError")]
     pub fn build(
         &self,
         oracle: &dyn SimOracle,
         s1: usize,
         rng: &mut Rng,
     ) -> Result<Factored, String> {
+        self.try_build(oracle, s1, rng).map_err(String::from)
+    }
+
+    /// Fallible-typed twin of the deprecated `build`: draw the plan and
+    /// build the factored approximation with `s1` landmarks.
+    pub fn try_build(
+        &self,
+        oracle: &dyn SimOracle,
+        s1: usize,
+        rng: &mut Rng,
+    ) -> Result<Factored, ApproxError> {
         let plan = self.sample_plan(oracle.n(), s1, rng);
-        self.build_with_plan(oracle, &plan, rng).map(|(f, _)| f)
+        self.try_build_with_plan(oracle, &plan, rng).map(|(f, _)| f)
     }
 }
 
@@ -224,6 +238,14 @@ pub struct SimilarityService {
     /// re-scored through the oracle per query; 0 = rerank just the top-k).
     rerank: AtomicUsize,
     stream: Mutex<StreamState>,
+    /// Snapshot generation: bumped on every committed mutation (insert,
+    /// rebuild, `try_enable_index`). The epoch fence of the wire
+    /// protocol ([`Request::epoch`]) is checked against it.
+    epoch: AtomicU64,
+    /// Fault-tolerance knobs: when set, oracle gathers issued by inserts
+    /// run through the retrying [`FaultTolerantOracle`] (bit-identical
+    /// values, metered retries).
+    retry: Option<crate::sim::RetryConfig>,
     pub stats: BuildStats,
     pub metrics: Arc<Metrics>,
     method: Method,
@@ -233,6 +255,7 @@ pub struct SimilarityService {
 impl SimilarityService {
     /// Run the sublinear build through the batching pipeline, with
     /// streaming defaults scaled to `s1` (see [`StreamConfig`]).
+    #[deprecated(note = "use ServiceConfig::build / SimilarityService::from_config")]
     pub fn build(
         oracle: &dyn SimOracle,
         method: Method,
@@ -240,10 +263,12 @@ impl SimilarityService {
         batch: usize,
         rng: &mut Rng,
     ) -> Result<SimilarityService, String> {
-        Self::build_streaming(oracle, method, s1, batch, StreamConfig::default_for(s1), rng)
+        Self::from_config(oracle, &ServiceConfig::new(method, s1).batch(batch), rng)
+            .map_err(String::from)
     }
 
     /// `build` with explicit streaming knobs.
+    #[deprecated(note = "use ServiceConfig::build / SimilarityService::from_config")]
     pub fn build_streaming(
         oracle: &dyn SimOracle,
         method: Method,
@@ -252,47 +277,91 @@ impl SimilarityService {
         cfg: StreamConfig,
         rng: &mut Rng,
     ) -> Result<SimilarityService, String> {
+        Self::from_config(oracle, &ServiceConfig::new(method, s1).batch(batch).stream(cfg), rng)
+            .map_err(String::from)
+    }
+
+    /// Build from a validated [`ServiceConfig`] — the one typed entry
+    /// point the deprecated positional builders funnel into. Runs the
+    /// sublinear build through the batching pipeline (wrapped in the
+    /// retry layer when `cfg.retry` is set), then enables the index and
+    /// seeds the re-rank budget per the config.
+    pub fn from_config(
+        oracle: &dyn SimOracle,
+        cfg: &ServiceConfig,
+        rng: &mut Rng,
+    ) -> Result<SimilarityService, ServiceError> {
+        cfg.validate(oracle.n())?;
+        let stream = cfg.stream_or_default();
         let metrics = Arc::new(Metrics::new());
         let counter = CountingOracle::new(oracle);
         let t0 = Instant::now();
         let n = oracle.n();
-        let plan = method.sample_plan(n, s1, rng);
-        let (factored, extension) = {
-            let batched = BatchingOracle::new(&counter, batch, metrics.clone());
-            method.build_with_plan(&batched, &plan, rng)?
+        let plan = cfg.method.sample_plan(n, cfg.s1, rng);
+        let built = match &cfg.retry {
+            Some(rc) => {
+                let ft =
+                    FaultTolerantOracle::new(&counter, rc.clone()).with_metrics(metrics.clone());
+                let batched = BatchingOracle::new(&ft, cfg.batch, metrics.clone());
+                cfg.method.try_build_with_plan(&batched, &plan, rng)
+            }
+            None => {
+                let batched = BatchingOracle::new(&counter, cfg.batch, metrics.clone());
+                cfg.method.try_build_with_plan(&batched, &plan, rng)
+            }
         };
+        let (factored, extension) = built?;
         let stats = BuildStats {
-            method,
+            method: cfg.method,
             n,
-            s1,
+            s1: cfg.s1,
             oracle_calls: counter.calls(),
             build_seconds: t0.elapsed().as_secs_f64(),
             exact_calls: (n * n) as u64,
         };
-        Ok(SimilarityService {
+        let svc = SimilarityService {
             factored: RwLock::new(Arc::new(factored)),
             index: RwLock::new(None),
             rerank: AtomicUsize::new(0),
             stream: Mutex::new(StreamState {
                 extension,
                 reservoir: LandmarkReservoir::new(&plan, n),
-                monitor: DriftMonitor::new(cfg.probe_pairs, cfg.epoch),
-                policy: cfg.policy,
+                monitor: DriftMonitor::new(stream.probe_pairs, stream.epoch),
+                policy: stream.policy,
                 rng: rng.fork(),
                 n,
                 inserts_since_build: 0,
             }),
+            epoch: AtomicU64::new(0),
+            retry: cfg.retry.clone(),
             stats,
             metrics,
-            method,
-            batch,
-        })
+            method: cfg.method,
+            batch: cfg.batch,
+        };
+        if let Some(icfg) = cfg.index {
+            svc.try_enable_index(icfg)?;
+        }
+        if cfg.rerank > 0 {
+            svc.set_rerank(cfg.rerank);
+        }
+        Ok(svc)
     }
 
     /// Fold one appended document into the store (`id` must be the next
-    /// corpus index). O(s) oracle calls; see [`Self::insert_batch`].
+    /// corpus index). O(s) oracle calls; see [`Self::try_insert_batch`].
+    pub fn try_insert(
+        &self,
+        oracle: &dyn SimOracle,
+        id: usize,
+    ) -> Result<InsertReport, ServiceError> {
+        self.try_insert_batch(oracle, &[id])
+    }
+
+    /// Deprecated String-surface shim over [`Self::try_insert`].
+    #[deprecated(note = "use try_insert, which returns a typed ServiceError")]
     pub fn insert(&self, oracle: &dyn SimOracle, id: usize) -> Result<InsertReport, String> {
-        self.insert_batch(oracle, &[id])
+        self.try_insert(oracle, id).map_err(String::from)
     }
 
     /// Fold `m` appended documents into the store for exactly
@@ -307,11 +376,16 @@ impl SimilarityService {
     /// `oracle` must cover the grown corpus: `ids` are evaluated against
     /// the build-time landmarks, so it is the *full* oracle even when the
     /// service was built over a [`PrefixOracle`] view.
-    pub fn insert_batch(
+    ///
+    /// Errors are typed: malformed batches come back as
+    /// [`ServiceError::Invalid`], a failed landmark gather as the
+    /// underlying oracle error (store unchanged — the service keeps
+    /// serving the pre-insert snapshot).
+    pub fn try_insert_batch(
         &self,
         oracle: &dyn SimOracle,
         ids: &[usize],
-    ) -> Result<InsertReport, String> {
+    ) -> Result<InsertReport, ServiceError> {
         if ids.is_empty() {
             return Ok(InsertReport {
                 inserted: 0,
@@ -325,34 +399,44 @@ impl SimilarityService {
         let st = &mut *st;
         for (k, &id) in ids.iter().enumerate() {
             if id != st.n + k {
-                return Err(format!(
+                return Err(ServiceError::Invalid(format!(
                     "inserts must be contiguous: expected doc {}, got {id}",
                     st.n + k
-                ));
+                )));
             }
         }
         if oracle.n() < st.n + ids.len() {
-            return Err(format!(
+            return Err(ServiceError::Invalid(format!(
                 "oracle covers {} docs but the grown corpus needs {}",
                 oracle.n(),
                 st.n + ids.len()
-            ));
+            )));
         }
         // The O(m·s) landmark gather runs through the batcher *before*
         // the store lock is taken, so readers never wait on oracle
         // traffic; the append itself is a short O(m·r) critical section.
         // A failed gather aborts the insert with the store untouched —
-        // the service keeps serving the pre-insert snapshot.
+        // the service keeps serving the pre-insert snapshot. With a
+        // retry config the gather runs through the fault-tolerant layer
+        // (below the counter, so retried evaluations are metered).
         let counter = CountingOracle::new(oracle);
-        let gathered = {
-            let batched = BatchingOracle::new(&counter, self.batch, self.metrics.clone());
-            st.extension.try_extension_rows(&batched, ids)
+        let gathered = match &self.retry {
+            Some(rc) => {
+                let ft =
+                    FaultTolerantOracle::new(&counter, rc.clone()).with_metrics(self.metrics.clone());
+                let batched = BatchingOracle::new(&ft, self.batch, self.metrics.clone());
+                st.extension.try_extension_rows(&batched, ids)
+            }
+            None => {
+                let batched = BatchingOracle::new(&counter, self.batch, self.metrics.clone());
+                st.extension.try_extension_rows(&batched, ids)
+            }
         };
         let (left, right) = match gathered {
             Ok(rows) => rows,
             Err(e) => {
                 self.metrics.record_oracle_failure();
-                return Err(format!("insert aborted, store unchanged: {e}"));
+                return Err(ServiceError::from(e));
             }
         };
         let calls = counter.calls();
@@ -389,9 +473,16 @@ impl SimilarityService {
         if st.monitor.tick(ids.len()) {
             let snapshot = relock(self.factored.read()).clone();
             let probe_counter = CountingOracle::new(oracle);
-            let probed = st
-                .monitor
-                .try_probe(&probe_counter, &snapshot, st.n, &mut st.rng);
+            let probed = match &self.retry {
+                Some(rc) => {
+                    let ft = FaultTolerantOracle::new(&probe_counter, rc.clone())
+                        .with_metrics(self.metrics.clone());
+                    st.monitor.try_probe(&ft, &snapshot, st.n, &mut st.rng)
+                }
+                None => st
+                    .monitor
+                    .try_probe(&probe_counter, &snapshot, st.n, &mut st.rng),
+            };
             self.metrics.record_drift_probe(probe_counter.calls());
             match probed {
                 Ok(d) => drift = Some(d),
@@ -413,10 +504,22 @@ impl SimilarityService {
                     let grown = PrefixOracle::new(oracle, st.n);
                     let plan = st.reservoir.refreshed_plan(&mut st.rng);
                     let rebuild_counter = CountingOracle::new(&grown);
-                    let built = {
-                        let batched =
-                            BatchingOracle::new(&rebuild_counter, self.batch, self.metrics.clone());
-                        self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
+                    let built = match &self.retry {
+                        Some(rc) => {
+                            let ft = FaultTolerantOracle::new(&rebuild_counter, rc.clone())
+                                .with_metrics(self.metrics.clone());
+                            let batched =
+                                BatchingOracle::new(&ft, self.batch, self.metrics.clone());
+                            self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
+                        }
+                        None => {
+                            let batched = BatchingOracle::new(
+                                &rebuild_counter,
+                                self.batch,
+                                self.metrics.clone(),
+                            );
+                            self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
+                        }
                     };
                     match built {
                         Ok((fresh, next_ext)) => {
@@ -433,9 +536,10 @@ impl SimilarityService {
                             // leaves the whole previous snapshot
                             // serving.
                             let fresh_index = match relock(self.index.read()).as_ref() {
-                                Some(idx) => {
-                                    Some(Arc::new(IvfIndex::build(fresh.clone(), idx.config())?))
-                                }
+                                Some(idx) => Some(Arc::new(
+                                    IvfIndex::build(fresh.clone(), idx.config())
+                                        .map_err(ServiceError::Invalid)?,
+                                )),
                                 None => None,
                             };
                             st.extension = next_ext;
@@ -484,11 +588,15 @@ impl SimilarityService {
                     // Defensive only — mutators are serialized, so a
                     // diverged index means a logic bug elsewhere; fall
                     // back to a clean rebuild over the current snapshot.
-                    IvfIndex::build(snapshot, idx.config())?
+                    IvfIndex::build(snapshot, idx.config()).map_err(ServiceError::Invalid)?
                 };
                 *relock(self.index.write()) = Some(Arc::new(fresh));
             }
         }
+        // The mutation is committed: advance the snapshot generation so
+        // epoch-fenced transports (shard workers) stop answering for the
+        // pre-insert store.
+        self.epoch.fetch_add(1, Ordering::Relaxed);
         Ok(InsertReport {
             inserted: ids.len(),
             oracle_calls: calls,
@@ -498,42 +606,42 @@ impl SimilarityService {
         })
     }
 
-    pub fn query(&self, q: &Query) -> Result<Response, RouteError> {
-        self.metrics.record_query();
-        // Top-k queries go through the retrieval index when one is
-        // enabled (sublinear pruned scan, work counters in Metrics);
-        // everything else — and top-k before `enable_index` — routes
-        // against the factored store directly.
-        if let Some(idx) = self.index() {
-            let n = idx.n();
-            // Ids beyond the index snapshot fall through to the store
-            // scan below: during an insert the index briefly lags the
-            // store by the in-flight rows, and a just-appended document
-            // must not get a transient OutOfRange while `Row` serves it.
-            match q {
-                &Query::TopK(i, k) if i < n => {
-                    let (ranked, st) = idx.top_k_stats(i, k.min(n - 1));
-                    self.metrics.record_topk(1, st.cells_scanned, st.cells_pruned);
-                    return Ok(Response::Ranked(ranked));
-                }
-                Query::TopKBatch(ids, k) if ids.iter().all(|&i| i < n) => {
-                    let (lists, st) = topk_batch(&idx, ids, (*k).min(n - 1));
-                    self.metrics
-                        .record_topk(ids.len() as u64, st.cells_scanned, st.cells_pruned);
-                    return Ok(Response::RankedBatch(lists));
-                }
-                _ => {}
-            }
-        }
-        let f = relock(self.factored.read());
-        route(&f, q)
+    /// Deprecated String-surface shim over [`Self::try_insert_batch`].
+    #[deprecated(note = "use try_insert_batch, which returns a typed ServiceError")]
+    pub fn insert_batch(
+        &self,
+        oracle: &dyn SimOracle,
+        ids: &[usize],
+    ) -> Result<InsertReport, String> {
+        self.try_insert_batch(oracle, ids).map_err(String::from)
+    }
+
+    /// Route one query against the current snapshot. Delegates to
+    /// [`Snapshot::query_metered`], so the locked service and a detached
+    /// snapshot of it answer every query identically — the index
+    /// intercept (and its fall-through for ids the index snapshot does
+    /// not cover yet) lives there.
+    pub fn query(&self, q: &Query) -> Result<Response, ServiceError> {
+        Ok(self.snapshot().query_metered(q, Some(&self.metrics))?)
     }
 
     /// Total (never-failing) query entry point for serving loops: a bad
     /// request comes back as [`Response::Error`] instead of `Err`, so one
     /// malformed query can never unwind a serving thread.
     pub fn respond(&self, q: &Query) -> Response {
-        self.query(q).unwrap_or_else(|e| Response::Error(e.to_string()))
+        self.query(q).unwrap_or_else(Response::from)
+    }
+
+    /// Immutable, lock-free view of the current serving state (epoch,
+    /// store, index). The transport layer serves from snapshots; the
+    /// locked service only mediates mutation.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot::new(self.epoch.load(Ordering::Relaxed), self.factored(), self.index())
+    }
+
+    /// Current snapshot generation (bumped on every committed mutation).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
     }
 
     /// Build (or rebuild) the sublinear top-k retrieval index over the
@@ -542,12 +650,19 @@ impl SimilarityService {
     /// knob ([`Self::set_rerank`]). Takes the stream lock so it
     /// serializes with inserts/rebuilds — a racing insert can neither
     /// clobber the new config nor leave the index astride two stores.
-    pub fn enable_index(&self, cfg: IvfConfig) -> Result<(), String> {
+    pub fn try_enable_index(&self, cfg: IvfConfig) -> Result<(), ServiceError> {
         let _mutators = relock(self.stream.lock());
-        let idx = IvfIndex::build(self.factored(), cfg)?;
+        let idx = IvfIndex::build(self.factored(), cfg).map_err(ServiceError::Invalid)?;
         self.rerank.store(cfg.rerank, Ordering::Relaxed);
         *relock(self.index.write()) = Some(Arc::new(idx));
+        self.epoch.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Deprecated String-surface shim over [`Self::try_enable_index`].
+    #[deprecated(note = "use try_enable_index, which returns a typed ServiceError")]
+    pub fn enable_index(&self, cfg: IvfConfig) -> Result<(), String> {
+        self.try_enable_index(cfg).map_err(String::from)
     }
 
     /// Snapshot of the retrieval index, if enabled.
@@ -572,7 +687,7 @@ impl SimilarityService {
         oracle: &dyn SimOracle,
         ids: &[usize],
         k: usize,
-    ) -> Result<Vec<Vec<(usize, f64)>>, RouteError> {
+    ) -> Result<Vec<Vec<(usize, f64)>>, ServiceError> {
         let budget = self.rerank.load(Ordering::Relaxed).max(k);
         let mut lists = match self.query(&Query::TopKBatch(ids.to_vec(), budget))? {
             Response::RankedBatch(lists) => lists,
@@ -604,6 +719,27 @@ impl SimilarityService {
     }
 }
 
+impl Service for SimilarityService {
+    /// Serve one enveloped request with the epoch fence: a request
+    /// tagged for a different snapshot generation is rejected
+    /// deterministically (the reply still carries the serving epoch, so
+    /// routers resynchronize without parsing the error text).
+    fn serve(&self, req: &Request) -> Reply {
+        let epoch = self.epoch.load(Ordering::Relaxed);
+        let response = if req.epoch != epoch {
+            self.metrics.record_epoch_reject();
+            epoch_mismatch(epoch, req.epoch)
+        } else {
+            self.query(&req.query).unwrap_or_else(Response::from)
+        };
+        Reply::new(epoch, response)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -615,7 +751,9 @@ mod tests {
         let mut rng = Rng::new(1);
         let o = NearPsdOracle::new(60, 8, 0.3, &mut rng);
         for method in Method::ALL {
-            let svc = SimilarityService::build(&o, method, 12, 64, &mut rng)
+            let svc = ServiceConfig::new(method, 12)
+                .batch(64)
+                .build(&o, &mut rng)
                 .unwrap_or_else(|e| panic!("{} failed: {e}", method.name()));
             assert!(svc.stats.oracle_calls > 0);
             assert!(
@@ -639,7 +777,7 @@ mod tests {
             let o = NearPsdOracle::new(n, 6, 0.3, rng);
             let s1 = 4 + rng.below(8);
             for method in Method::ALL {
-                let svc = SimilarityService::build(&o, method, s1, 32, rng).unwrap();
+                let svc = ServiceConfig::new(method, s1).batch(32).build(&o, rng).unwrap();
                 let s2 = 2 * s1;
                 let bound = (2 * n * s2 + s2 * s2) as u64;
                 assert!(
@@ -656,7 +794,7 @@ mod tests {
     fn savings_reported() {
         let mut rng = Rng::new(3);
         let o = NearPsdOracle::new(100, 8, 0.3, &mut rng);
-        let svc = SimilarityService::build(&o, Method::SiCur, 10, 64, &mut rng).unwrap();
+        let svc = ServiceConfig::new(Method::SiCur, 10).batch(64).build(&o, &mut rng).unwrap();
         assert!(svc.stats.savings() > 0.5, "savings {}", svc.stats.savings());
     }
 
@@ -665,9 +803,9 @@ mod tests {
         use std::sync::atomic::Ordering::Relaxed;
         let mut rng = Rng::new(8);
         let o = NearPsdOracle::new(70, 6, 0.2, &mut rng);
-        let svc = SimilarityService::build(&o, Method::Nystrom, 16, 64, &mut rng).unwrap();
+        let svc = ServiceConfig::new(Method::Nystrom, 16).batch(64).build(&o, &mut rng).unwrap();
         let reference = svc.factored();
-        svc.enable_index(IvfConfig::default()).unwrap();
+        svc.try_enable_index(IvfConfig::default()).unwrap();
         match svc.query(&Query::TopK(5, 8)).unwrap() {
             Response::Ranked(r) => assert_eq!(r, reference.top_k(5, 8)),
             _ => panic!(),
@@ -703,12 +841,14 @@ mod tests {
             epoch: usize::MAX,
             policy: RebuildPolicy::default(),
         };
-        let svc =
-            SimilarityService::build_streaming(&prefix, Method::Nystrom, 12, 32, cfg, &mut rng)
-                .unwrap();
-        svc.enable_index(IvfConfig::default()).unwrap();
+        let svc = ServiceConfig::new(Method::Nystrom, 12)
+            .batch(32)
+            .stream(cfg)
+            .build(&prefix, &mut rng)
+            .unwrap();
+        svc.try_enable_index(IvfConfig::default()).unwrap();
         let ids: Vec<usize> = (50..60).collect();
-        svc.insert_batch(&o, &ids).unwrap();
+        svc.try_insert_batch(&o, &ids).unwrap();
         let idx = svc.index().unwrap();
         assert_eq!(idx.n(), 60, "index must follow the grown store");
         assert_eq!(idx.store().n(), svc.factored().n());
@@ -733,17 +873,18 @@ mod tests {
         let mut rng = Rng::new(11);
         let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
         let prefix = crate::sim::PrefixOracle::new(&o, 40);
-        let svc = SimilarityService::build(&prefix, Method::Nystrom, 8, 32, &mut rng).unwrap();
+        let svc =
+            ServiceConfig::new(Method::Nystrom, 8).batch(32).build(&prefix, &mut rng).unwrap();
         let pinned = svc.factored();
         let before = pinned.entry(0, 1);
-        svc.insert(&o, 40).unwrap();
+        svc.try_insert(&o, 40).unwrap();
         assert_eq!(pinned.n(), 40, "pinned snapshot must not see the append");
         assert_eq!(pinned.entry(0, 1), before);
         assert_eq!(svc.factored().n(), 41);
         assert_eq!(svc.factored().entry(0, 1), before, "CoW must preserve old rows");
         drop(pinned);
         // With the pin gone the next insert may append in place again.
-        svc.insert(&o, 41).unwrap();
+        svc.try_insert(&o, 41).unwrap();
         assert_eq!(svc.n(), 42);
     }
 
@@ -766,10 +907,11 @@ mod tests {
         let mut rng = Rng::new(12);
         let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
         let prefix = crate::sim::PrefixOracle::new(&o, 40);
-        let svc = SimilarityService::build(&prefix, Method::Nystrom, 8, 32, &mut rng).unwrap();
+        let svc =
+            ServiceConfig::new(Method::Nystrom, 8).batch(32).build(&prefix, &mut rng).unwrap();
         let bad = PanickingOracle { n: 50 };
         let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let _ = svc.insert(&bad, 40);
+            let _ = svc.try_insert(&bad, 40);
         }));
         assert!(unwound.is_err(), "the injected panic must surface");
         // The service is not wedged: state reads, queries, and a healthy
@@ -779,7 +921,7 @@ mod tests {
             Response::Scalar(v) => assert!(v.is_finite()),
             _ => panic!(),
         }
-        svc.insert(&o, 40).unwrap();
+        svc.try_insert(&o, 40).unwrap();
         assert_eq!(svc.n(), 41);
     }
 
@@ -787,7 +929,7 @@ mod tests {
     fn respond_never_errors_on_bad_queries() {
         let mut rng = Rng::new(13);
         let o = NearPsdOracle::new(30, 4, 0.3, &mut rng);
-        let svc = SimilarityService::build(&o, Method::Nystrom, 6, 32, &mut rng).unwrap();
+        let svc = ServiceConfig::new(Method::Nystrom, 6).batch(32).build(&o, &mut rng).unwrap();
         match svc.respond(&Query::Row(500)) {
             Response::Error(msg) => assert!(msg.contains("out of range")),
             other => panic!("expected structured error, got {other:?}"),
@@ -803,16 +945,23 @@ mod tests {
         let mut rng = Rng::new(4);
         let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
         let prefix = crate::sim::PrefixOracle::new(&o, 40);
-        let svc = SimilarityService::build(&prefix, Method::Nystrom, 8, 32, &mut rng).unwrap();
-        assert!(svc.insert(&o, 45).is_err(), "gap must be rejected");
-        assert!(svc.insert(&o, 39).is_err(), "existing doc must be rejected");
+        let svc =
+            ServiceConfig::new(Method::Nystrom, 8).batch(32).build(&prefix, &mut rng).unwrap();
+        assert!(
+            matches!(svc.try_insert(&o, 45), Err(ServiceError::Invalid(_))),
+            "gap must be rejected"
+        );
+        assert!(
+            matches!(svc.try_insert(&o, 39), Err(ServiceError::Invalid(_))),
+            "existing doc must be rejected"
+        );
         let long: Vec<usize> = (40..60).collect();
         assert!(
-            svc.insert_batch(&o, &long).is_err(),
+            matches!(svc.try_insert_batch(&o, &long), Err(ServiceError::Invalid(_))),
             "ids beyond the oracle must be rejected"
         );
         assert_eq!(svc.n(), 40, "failed inserts must not grow the store");
-        svc.insert(&o, 40).unwrap();
+        svc.try_insert(&o, 40).unwrap();
         assert_eq!(svc.n(), 41);
     }
 
@@ -826,11 +975,13 @@ mod tests {
             epoch: usize::MAX, // no probes: pin the pure insert cost
             policy: RebuildPolicy::default(),
         };
-        let svc =
-            SimilarityService::build_streaming(&prefix, Method::Nystrom, 8, 32, cfg, &mut rng)
-                .unwrap();
+        let svc = ServiceConfig::new(Method::Nystrom, 8)
+            .batch(32)
+            .stream(cfg)
+            .build(&prefix, &mut rng)
+            .unwrap();
         let ids: Vec<usize> = (48..60).collect();
-        let report = svc.insert_batch(&o, &ids).unwrap();
+        let report = svc.try_insert_batch(&o, &ids).unwrap();
         assert_eq!(report.inserted, 12);
         assert_eq!(report.oracle_calls, (12 * svc.per_insert_calls()) as u64);
         assert_eq!(svc.per_insert_calls(), 8);
@@ -844,5 +995,63 @@ mod tests {
             Response::Scalar(v) => assert!(v.is_finite()),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_string_shims_still_serve() {
+        // The pre-redesign String surface must keep working (and keep
+        // agreeing with the typed path) until the shims are dropped.
+        let mut rng = Rng::new(21);
+        let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
+        let prefix = crate::sim::PrefixOracle::new(&o, 40);
+        let svc = SimilarityService::build(&prefix, Method::Nystrom, 8, 32, &mut rng).unwrap();
+        svc.enable_index(IvfConfig::default()).unwrap();
+        svc.insert(&o, 40).unwrap();
+        svc.insert_batch(&o, &[41, 42]).unwrap();
+        assert_eq!(svc.n(), 43);
+        let err = svc.insert(&o, 99).unwrap_err();
+        assert!(err.contains("contiguous"), "shim must surface the typed message: {err}");
+        let cfg = StreamConfig::default_for(8);
+        let svc2 =
+            SimilarityService::build_streaming(&o, Method::Nystrom, 8, 32, cfg, &mut rng).unwrap();
+        assert_eq!(svc2.n(), 50);
+    }
+
+    #[test]
+    fn epoch_advances_on_commits_and_fences_requests() {
+        let mut rng = Rng::new(22);
+        let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
+        let prefix = crate::sim::PrefixOracle::new(&o, 40);
+        let svc =
+            ServiceConfig::new(Method::Nystrom, 8).batch(32).build(&prefix, &mut rng).unwrap();
+        assert_eq!(svc.epoch(), 0);
+        svc.try_insert(&o, 40).unwrap();
+        assert_eq!(svc.epoch(), 1, "a committed insert must bump the epoch");
+        svc.try_enable_index(IvfConfig::default()).unwrap();
+        assert_eq!(svc.epoch(), 2, "enabling the index must bump the epoch");
+        // A failed insert commits nothing and must not move the fence.
+        assert!(svc.try_insert(&o, 99).is_err());
+        assert_eq!(svc.epoch(), 2);
+        // The Service impl fences stale requests deterministically and
+        // advertises the serving epoch in the reply envelope.
+        let stale = svc.serve(&Request::new(0, Query::Entry(0, 1)));
+        assert_eq!(stale.epoch, 2);
+        match &stale.response {
+            Response::Error(msg) => assert!(msg.contains("epoch mismatch"), "{msg}"),
+            other => panic!("stale request must be rejected, got {other:?}"),
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(svc.metrics.epoch_rejects.load(Relaxed), 1);
+        let fresh = svc.serve(&Request::new(2, Query::Entry(0, 1)));
+        match &fresh.response {
+            Response::Scalar(v) => assert!(v.is_finite()),
+            other => panic!("current-epoch request must serve, got {other:?}"),
+        }
+        // The detached snapshot agrees with the locked service bit for
+        // bit on every query it can answer.
+        let snap = svc.snapshot();
+        assert_eq!(snap.epoch, 2);
+        assert_eq!(snap.query(&Query::Row(3)).unwrap(), svc.query(&Query::Row(3)).unwrap());
     }
 }

@@ -1,0 +1,653 @@
+//! Transport-agnostic service core: a pure request→response surface over
+//! one immutable `Arc<Factored>` + index snapshot ([`Snapshot`]), the
+//! [`Service`] trait every serving tier implements, and the pluggable
+//! [`Transport`] seam the shard router scatters through.
+//!
+//! The layering rule: **no locks in the trait surface**. A [`Service`]
+//! answers `Request → Reply` from whatever snapshot it currently holds;
+//! how it swaps snapshots (the `SimilarityService`'s RwLocks, a
+//! [`ShardWorker`](super::shard::ShardWorker)'s epoch-fenced `Arc` swap)
+//! is its own business and invisible to callers. A [`Transport`] moves
+//! envelopes — in-process today ([`DirectTransport`],
+//! [`ChannelTransport`]), a socket or persistence-backed peer later —
+//! and the wire protocol is documented in
+//! [`router`](super::router#protocol--the-versioned-shard-wire).
+//!
+//! This module also owns the typed public error surface
+//! ([`ServiceError`]) and the consolidated build configuration
+//! ([`ServiceConfig`]) the `Result<_, String>` builders deprecated in
+//! favor of.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::approx::{ApproxError, Factored};
+use crate::index::{topk_batch, IvfConfig, IvfIndex, SearchStats};
+use crate::sim::oracle::OracleError;
+use crate::sim::RetryConfig;
+use crate::util::rng::Rng;
+
+use super::metrics::Metrics;
+use super::router::{route, Query, Reply, Request, Response, RouteError, VecQuery};
+use super::server::{Method, SimilarityService, StreamConfig};
+
+/// Typed failure surface of the serving tier — what the deprecated
+/// `Result<_, String>` APIs flattened away. Wraps the layered errors
+/// ([`RouteError`], [`ApproxError`], [`OracleError`]) and adds the
+/// shard-plane failures the scatter-gather router can hit.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum ServiceError {
+    /// The query itself was invalid for the serving snapshot.
+    Route(RouteError),
+    /// A build/extension failed (oracle fault or numeric breakdown).
+    Approx(ApproxError),
+    /// Invalid configuration or arguments (the validation layer).
+    Invalid(String),
+    /// One shard failed the rows it owns: transport error, degraded
+    /// worker, or an error reply. Queries not touching the shard are
+    /// unaffected.
+    Shard { shard: usize, reason: String },
+    /// A reply was fenced off by the epoch protocol more times than the
+    /// bounded retry allows (a shard kept committing under the router).
+    Epoch { expected: u64, got: u64 },
+    /// The transport itself failed (closed channel, dead peer).
+    Transport(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Route(e) => write!(f, "{e}"),
+            ServiceError::Approx(e) => write!(f, "{e}"),
+            ServiceError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            ServiceError::Shard { shard, reason } => {
+                write!(f, "shard {shard} failed: {reason}")
+            }
+            ServiceError::Epoch { expected, got } => {
+                write!(f, "epoch mismatch after retries: expected {expected}, shard at {got}")
+            }
+            ServiceError::Transport(msg) => write!(f, "transport failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServiceError::Route(e) => Some(e),
+            ServiceError::Approx(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<RouteError> for ServiceError {
+    fn from(e: RouteError) -> ServiceError {
+        ServiceError::Route(e)
+    }
+}
+
+impl From<ApproxError> for ServiceError {
+    fn from(e: ApproxError) -> ServiceError {
+        ServiceError::Approx(e)
+    }
+}
+
+impl From<OracleError> for ServiceError {
+    fn from(e: OracleError) -> ServiceError {
+        ServiceError::Approx(ApproxError::Oracle(e))
+    }
+}
+
+/// Rendering for the deprecated String shims.
+impl From<ServiceError> for String {
+    fn from(e: ServiceError) -> String {
+        e.to_string()
+    }
+}
+
+/// `respond()`-style total serving: any service error renders as a
+/// structured [`Response::Error`] instead of unwinding a serving loop.
+impl From<ServiceError> for Response {
+    fn from(e: ServiceError) -> Response {
+        Response::Error(e.to_string())
+    }
+}
+
+/// Consolidated build configuration: one validated builder instead of
+/// the positional `build`/`build_streaming` parameter lists (method,
+/// landmark budget, batch, streaming knobs, index, re-rank budget,
+/// fault-tolerance knobs).
+///
+/// ```ignore
+/// let svc = ServiceConfig::new(Method::SmsNystrom, 32)
+///     .batch(128)
+///     .index(IvfConfig::default())
+///     .retry(RetryConfig::default())
+///     .build(&oracle, &mut rng)?;
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub method: Method,
+    /// Landmark budget (stage-1 landmarks; nested methods oversample).
+    pub s1: usize,
+    /// Batcher capacity for oracle gathers.
+    pub batch: usize,
+    /// Streaming knobs; defaults to [`StreamConfig::default_for`]`(s1)`.
+    pub stream: Option<StreamConfig>,
+    /// Build the sublinear top-k index right after the store.
+    pub index: Option<IvfConfig>,
+    /// Exact re-rank budget (overrides `index.rerank` when non-zero).
+    pub rerank: usize,
+    /// Wrap oracle gathers (build + inserts) in the fault-tolerant
+    /// retry layer. Retried gathers are bit-identical to fault-free
+    /// ones, so this changes cost accounting, never results.
+    pub retry: Option<RetryConfig>,
+}
+
+impl ServiceConfig {
+    pub fn new(method: Method, s1: usize) -> ServiceConfig {
+        ServiceConfig {
+            method,
+            s1,
+            batch: 64,
+            stream: None,
+            index: None,
+            rerank: 0,
+            retry: None,
+        }
+    }
+
+    pub fn batch(mut self, batch: usize) -> ServiceConfig {
+        self.batch = batch;
+        self
+    }
+
+    pub fn stream(mut self, cfg: StreamConfig) -> ServiceConfig {
+        self.stream = Some(cfg);
+        self
+    }
+
+    pub fn index(mut self, cfg: IvfConfig) -> ServiceConfig {
+        self.index = Some(cfg);
+        self
+    }
+
+    pub fn rerank(mut self, budget: usize) -> ServiceConfig {
+        self.rerank = budget;
+        self
+    }
+
+    pub fn retry(mut self, cfg: RetryConfig) -> ServiceConfig {
+        self.retry = Some(cfg);
+        self
+    }
+
+    /// The streaming knobs this config resolves to.
+    pub fn stream_or_default(&self) -> StreamConfig {
+        self.stream.unwrap_or_else(|| StreamConfig::default_for(self.s1))
+    }
+
+    /// Validate against a corpus of `n` documents.
+    pub fn validate(&self, n: usize) -> Result<(), ServiceError> {
+        if n == 0 {
+            return Err(ServiceError::Invalid("corpus is empty".into()));
+        }
+        if self.s1 == 0 {
+            return Err(ServiceError::Invalid("landmark budget s1 must be positive".into()));
+        }
+        if self.s1 > n {
+            return Err(ServiceError::Invalid(format!(
+                "landmark budget s1={} exceeds corpus size n={n}",
+                self.s1
+            )));
+        }
+        if self.batch == 0 {
+            return Err(ServiceError::Invalid("batch capacity must be positive".into()));
+        }
+        if let Some(s) = &self.stream {
+            if s.probe_pairs == 0 || s.epoch == 0 {
+                return Err(ServiceError::Invalid(
+                    "stream probe_pairs and epoch must be positive".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build an unsharded service — [`SimilarityService::from_config`].
+    pub fn build(
+        &self,
+        oracle: &dyn crate::sim::SimOracle,
+        rng: &mut Rng,
+    ) -> Result<SimilarityService, ServiceError> {
+        SimilarityService::from_config(oracle, self, rng)
+    }
+}
+
+/// One immutable serving state: a store snapshot, its (optional) index
+/// snapshot, and the epoch that versions them. Pure — every method is
+/// `&self` over `Arc`s, so a `Snapshot` is the lock-free serving core
+/// that both the in-process service and the shard workers answer from.
+#[derive(Clone)]
+pub struct Snapshot {
+    pub epoch: u64,
+    pub store: Arc<Factored>,
+    pub index: Option<Arc<IvfIndex>>,
+}
+
+impl Snapshot {
+    pub fn new(epoch: u64, store: Arc<Factored>, index: Option<Arc<IvfIndex>>) -> Snapshot {
+        Snapshot { epoch, store, index }
+    }
+
+    pub fn n(&self) -> usize {
+        self.store.n()
+    }
+
+    /// Serve one query from this snapshot. Top-k (by id or by value)
+    /// goes through the retrieval index when one is present — the
+    /// pruned scan is lossless, so results are bit-identical to the
+    /// exact store scan either way.
+    pub fn query(&self, q: &Query) -> Result<Response, RouteError> {
+        self.query_metered(q, None)
+    }
+
+    /// [`Self::query`] with the serving counters mirrored into
+    /// `metrics` (the intercept logic previously private to
+    /// `SimilarityService::query`).
+    pub fn query_metered(
+        &self,
+        q: &Query,
+        metrics: Option<&Metrics>,
+    ) -> Result<Response, RouteError> {
+        if let Some(m) = metrics {
+            m.record_query();
+        }
+        if let Some(idx) = &self.index {
+            let n = idx.n();
+            // Ids beyond the index snapshot fall through to the store
+            // scan below: during an insert the index briefly lags the
+            // store by the in-flight rows, and a just-appended document
+            // must not get a transient OutOfRange while `Row` serves it.
+            match q {
+                &Query::TopK(i, k) if i < n => {
+                    let (ranked, st) = idx.top_k_stats(i, k.min(n - 1));
+                    if let Some(m) = metrics {
+                        m.record_topk(1, st.cells_scanned, st.cells_pruned);
+                    }
+                    return Ok(Response::Ranked(ranked));
+                }
+                Query::TopKBatch(ids, k) if ids.iter().all(|&i| i < n) => {
+                    let (lists, st) = topk_batch(idx, ids, (*k).min(n - 1));
+                    if let Some(m) = metrics {
+                        m.record_topk(ids.len() as u64, st.cells_scanned, st.cells_pruned);
+                    }
+                    return Ok(Response::RankedBatch(lists));
+                }
+                Query::Vectors(ids) if ids.iter().all(|&i| i < n) => {
+                    // Owner preamble with the index's query view filled
+                    // in, so downstream `TopKVec` scatters can prune.
+                    let emb = idx.embedding();
+                    let mut out = Vec::with_capacity(ids.len());
+                    for &i in ids {
+                        let mut u = vec![0.0; emb.dim()];
+                        emb.query_into(i, &mut u);
+                        out.push(
+                            VecQuery::new(self.store.left.row(i).to_vec())
+                                .with_view(u)
+                                .excluding(i),
+                        );
+                    }
+                    return Ok(Response::Vectors(out));
+                }
+                Query::TopKVec(vqs, k) => {
+                    let r = self.store.rank();
+                    let d = idx.embedding().dim();
+                    let mut lists = Vec::with_capacity(vqs.len());
+                    let mut agg = SearchStats::default();
+                    for vq in vqs {
+                        if vq.left.len() != r {
+                            return Err(RouteError::BadVector { expected: r, got: vq.left.len() });
+                        }
+                        if let Some(v) = &vq.view {
+                            if v.len() != d {
+                                return Err(RouteError::BadVector { expected: d, got: v.len() });
+                            }
+                        }
+                        let excl = vq.exclude.filter(|&e| e < n);
+                        let (list, st) =
+                            idx.top_k_vec_stats(&vq.left, vq.view.as_deref(), excl, *k);
+                        agg.merge(&st);
+                        lists.push(list);
+                    }
+                    if let Some(m) = metrics {
+                        m.record_topk(vqs.len() as u64, agg.cells_scanned, agg.cells_pruned);
+                    }
+                    return Ok(Response::RankedShard {
+                        lists,
+                        scanned: agg.cells_scanned,
+                        pruned: agg.cells_pruned,
+                    });
+                }
+                _ => {}
+            }
+        }
+        route(&self.store, q)
+    }
+
+    /// Serve one enveloped request: epoch fence, then a total
+    /// (never-failing) response. This is [`Service::serve`] for a bare
+    /// snapshot.
+    pub fn serve_metered(&self, req: &Request, metrics: Option<&Metrics>) -> Reply {
+        if req.epoch != self.epoch {
+            return Reply::new(self.epoch, epoch_mismatch(self.epoch, req.epoch));
+        }
+        let resp = self
+            .query_metered(&req.query, metrics)
+            .unwrap_or_else(|e| Response::Error(e.to_string()));
+        Reply::new(self.epoch, resp)
+    }
+}
+
+/// The deterministic rejection a serving side gives a request tagged
+/// with a stale (or future) epoch — protocol rule 1 in
+/// [`router`](super::router). The reply envelope carries the *current*
+/// epoch so the router can refresh and retry.
+pub fn epoch_mismatch(serving: u64, requested: u64) -> Response {
+    Response::Error(format!(
+        "epoch mismatch: request tagged {requested}, serving epoch {serving}"
+    ))
+}
+
+/// A serving endpoint: answers enveloped requests from its current
+/// snapshot. No locks in the surface — implementations swap snapshots
+/// internally ([`Snapshot`] trivially, `SimilarityService` under its
+/// RwLocks, `ShardWorker` by epoch-fenced `Arc` swap).
+pub trait Service: Send + Sync {
+    /// Answer one request. Total: errors come back as
+    /// [`Response::Error`] in the reply, never a panic or a dropped
+    /// request.
+    fn serve(&self, req: &Request) -> Reply;
+
+    /// The snapshot generation currently served; requests must be
+    /// tagged with it to pass the epoch fence.
+    fn epoch(&self) -> u64;
+}
+
+impl Service for Snapshot {
+    fn serve(&self, req: &Request) -> Reply {
+        self.serve_metered(req, None)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// How envelopes reach a [`Service`]. In-process backends below; the
+/// trait is the seam where a socket (serialize the envelope, fence on
+/// the far side) or a persistence-backed replica plugs in without
+/// touching the router.
+pub trait Transport: Send + Sync {
+    /// Deliver one request, return the reply. `Err` means the transport
+    /// itself failed (dead peer, closed channel) — an *error reply* from
+    /// a live service comes back as `Ok(reply)` with a
+    /// [`Response::Error`] payload.
+    fn call(&self, req: Request) -> Result<Reply, ServiceError>;
+}
+
+/// Zero-cost in-process transport: a direct virtual call into the
+/// service. The conformance baseline every other backend must match
+/// bit-for-bit.
+pub struct DirectTransport {
+    svc: Arc<dyn Service>,
+}
+
+impl DirectTransport {
+    pub fn new(svc: Arc<dyn Service>) -> DirectTransport {
+        DirectTransport { svc }
+    }
+}
+
+impl Transport for DirectTransport {
+    fn call(&self, req: Request) -> Result<Reply, ServiceError> {
+        Ok(self.svc.serve(&req))
+    }
+}
+
+/// In-process channel transport: requests cross an mpsc channel to a
+/// dedicated worker thread that owns the service, replies come back on
+/// a per-call channel — the same request/reply hop a socket backend
+/// makes, minus serialization. Dropping the transport closes the
+/// request channel and joins the worker.
+pub struct ChannelTransport {
+    tx: Mutex<Option<mpsc::Sender<(Request, mpsc::Sender<Reply>)>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ChannelTransport {
+    pub fn spawn(svc: Arc<dyn Service>) -> ChannelTransport {
+        let (tx, rx) = mpsc::channel::<(Request, mpsc::Sender<Reply>)>();
+        let worker = std::thread::spawn(move || {
+            while let Ok((req, reply_tx)) = rx.recv() {
+                // A caller that gave up (send error) is not our problem.
+                let _ = reply_tx.send(svc.serve(&req));
+            }
+        });
+        ChannelTransport {
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn call(&self, req: Request) -> Result<Reply, ServiceError> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let tx = guard
+                .as_ref()
+                .ok_or_else(|| ServiceError::Transport("channel transport closed".into()))?;
+            tx.send((req, reply_tx))
+                .map_err(|_| ServiceError::Transport("service worker exited".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| ServiceError::Transport("service worker dropped the request".into()))
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        // Close the request channel first so the worker's recv() ends,
+        // then join it — no detached thread left behind.
+        if let Ok(mut tx) = self.tx.lock() {
+            tx.take();
+        }
+        if let Ok(mut w) = self.worker.lock() {
+            if let Some(h) = w.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Which in-process [`Transport`] a sharded service wires its workers
+/// behind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Direct virtual calls (lowest overhead, the bit-identity
+    /// baseline).
+    Direct,
+    /// One channel + worker thread per shard (the request/reply hop a
+    /// remote backend makes).
+    Channel,
+}
+
+/// Wire a service behind the chosen in-process transport.
+pub fn connect(kind: TransportKind, svc: Arc<dyn Service>) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Direct => Box::new(DirectTransport::new(svc)),
+        TransportKind::Channel => Box::new(ChannelTransport::spawn(svc)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::sim::synthetic::NearPsdOracle;
+
+    fn toy_snapshot(epoch: u64, index: bool) -> Snapshot {
+        let mut rng = Rng::new(7);
+        let store = Arc::new(Factored::from_z(Mat::gaussian(12, 4, &mut rng)));
+        let idx = if index {
+            Some(Arc::new(IvfIndex::build(store.clone(), IvfConfig::default()).unwrap()))
+        } else {
+            None
+        };
+        Snapshot::new(epoch, store, idx)
+    }
+
+    #[test]
+    fn snapshot_serves_all_variants_like_route() {
+        let s = toy_snapshot(0, false);
+        for q in [
+            Query::Entry(1, 2),
+            Query::Row(3),
+            Query::TopK(0, 4),
+            Query::TopKBatch(vec![1, 5], 3),
+            Query::Embed(2),
+            Query::Vectors(vec![4]),
+        ] {
+            assert_eq!(
+                s.query(&q).unwrap(),
+                route(&s.store, &q).unwrap(),
+                "{q:?} must match the bare route"
+            );
+        }
+    }
+
+    #[test]
+    fn indexed_snapshot_matches_exact_scan_and_fills_views() {
+        let s = toy_snapshot(0, true);
+        let exact = s.store.top_k(3, 5);
+        match s.query(&Query::TopK(3, 5)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r, exact),
+            other => panic!("{other:?}"),
+        }
+        // Preambles now carry the embedding view…
+        let vqs = match s.query(&Query::Vectors(vec![3])).unwrap() {
+            Response::Vectors(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert!(vqs[0].view.is_some());
+        assert_eq!(vqs[0].left, s.store.left.row(3).to_vec());
+        // …and the by-value pruned scan still equals the exact one.
+        match s.query(&Query::TopKVec(vqs, 5)).unwrap() {
+            Response::RankedShard { lists, .. } => assert_eq!(lists[0], exact),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn epoch_fence_rejects_deterministically() {
+        let s = toy_snapshot(3, false);
+        let req = Request::new(2, Query::Entry(0, 0));
+        let a = s.serve(&req);
+        let b = s.serve(&req);
+        assert_eq!(a, b, "rejection must be deterministic");
+        assert_eq!(a.epoch, 3, "reply carries the serving epoch");
+        match a.response {
+            Response::Error(msg) => assert!(msg.contains("epoch mismatch"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        let ok = s.serve(&Request::new(3, Query::Entry(0, 0)));
+        assert_eq!(ok.epoch, 3);
+        assert!(matches!(ok.response, Response::Scalar(_)));
+    }
+
+    #[test]
+    fn transports_are_bit_identical_to_direct_calls() {
+        let s = Arc::new(toy_snapshot(1, true));
+        let direct = connect(TransportKind::Direct, s.clone());
+        let channel = connect(TransportKind::Channel, s.clone());
+        for q in [
+            Query::Entry(0, 7),
+            Query::Row(2),
+            Query::TopK(5, 4),
+            Query::TopKBatch(vec![0, 11], 3),
+            Query::Embed(9),
+        ] {
+            let want = s.serve(&Request::new(1, q.clone()));
+            let d = direct.call(Request::new(1, q.clone())).unwrap();
+            let c = channel.call(Request::new(1, q.clone())).unwrap();
+            assert_eq!(d, want, "{q:?} over direct transport");
+            assert_eq!(c, want, "{q:?} over channel transport");
+        }
+    }
+
+    #[test]
+    fn channel_transport_reports_closed_peer() {
+        let s = Arc::new(toy_snapshot(0, false));
+        let t = ChannelTransport::spawn(s);
+        t.tx.lock().unwrap().take(); // simulate a dead peer
+        match t.call(Request::new(0, Query::Entry(0, 0))) {
+            Err(ServiceError::Transport(msg)) => assert!(msg.contains("closed"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn service_config_validates() {
+        let cfg = ServiceConfig::new(Method::Nystrom, 8);
+        assert!(cfg.validate(20).is_ok());
+        assert!(cfg.validate(0).is_err(), "empty corpus");
+        assert!(cfg.validate(4).is_err(), "s1 > n");
+        assert!(ServiceConfig::new(Method::Nystrom, 0).validate(20).is_err());
+        assert!(ServiceConfig::new(Method::Nystrom, 8).batch(0).validate(20).is_err());
+        let bad_stream = ServiceConfig::new(Method::Nystrom, 8)
+            .stream(StreamConfig { probe_pairs: 0, epoch: 4, policy: Default::default() });
+        assert!(bad_stream.validate(20).is_err());
+    }
+
+    #[test]
+    fn service_config_builds_with_index_and_rerank() {
+        let mut rng = Rng::new(21);
+        let o = NearPsdOracle::new(40, 6, 0.3, &mut rng);
+        let svc = ServiceConfig::new(Method::Nystrom, 8)
+            .batch(32)
+            .index(IvfConfig::default())
+            .rerank(5)
+            .retry(RetryConfig::default())
+            .build(&o, &mut rng)
+            .unwrap();
+        assert!(svc.index().is_some(), "index must be enabled by the config");
+        match svc.query(&Query::TopK(3, 4)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r, svc.factored().top_k(3, 4)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn service_error_displays_every_layer() {
+        let e = ServiceError::from(RouteError::OutOfRange { index: 9, n: 4 });
+        assert!(e.to_string().contains("out of range"));
+        let e = ServiceError::from(OracleError::Transient("net blip".into()));
+        assert!(e.to_string().contains("net blip"));
+        let e = ServiceError::Shard { shard: 2, reason: "gone".into() };
+        assert!(e.to_string().contains("shard 2"));
+        let e = ServiceError::Epoch { expected: 4, got: 6 };
+        assert!(e.to_string().contains("epoch"));
+        let s: String = ServiceError::Invalid("nope".into()).into();
+        assert!(s.contains("nope"));
+        match Response::from(ServiceError::Transport("down".into())) {
+            Response::Error(msg) => assert!(msg.contains("down")),
+            other => panic!("{other:?}"),
+        }
+    }
+}

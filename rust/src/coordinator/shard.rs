@@ -1,0 +1,1126 @@
+//! Multi-shard scatter-gather serving: N shard workers, each owning a
+//! round-robin slice of the corpus (its rows of the factored store, its
+//! IVF cells, its own epoch-fenced snapshot), behind the routing tier
+//! [`ShardedService`] that scatters by-value queries over a pluggable
+//! [`Transport`] and merges per-shard top-k under the shared canonical
+//! order.
+//!
+//! # Topology
+//!
+//! ```text
+//!                 ┌────────────────────────────┐
+//!   Query ──────▶ │ ShardedService (router)    │
+//!                 │  · global ids, global rng  │
+//!                 │  · extension / drift state │
+//!                 └──┬────────┬────────┬───────┘
+//!          Transport │        │        │   Request { epoch, query }
+//!                 ┌──▼──┐  ┌──▼──┐  ┌──▼──┐
+//!                 │ W0  │  │ W1  │  │ W2  │  ShardWorker s owns global
+//!                 │     │  │     │  │     │  ids { g : g mod S == s }
+//!                 └─────┘  └─────┘  └─────┘  (local row t ↔ s + t·S)
+//! ```
+//!
+//! # Why the merge is exact
+//!
+//! Every serving score — sharded or not — is the same float sequence
+//! `dot(left.row(i), right_t.row(j))`; a shard's store holds verbatim
+//! copies of its global rows, so per-shard scores are bit-equal to the
+//! single-store ones. For top-k, every member of the global top-k is by
+//! definition in its owner shard's local top-k (the local candidate set
+//! is a subset), so concatenating the S local "up to k" lists and
+//! sorting under the one canonical comparator (score descending via
+//! `total_cmp`, index ascending on ties — the order `Factored::top_k`,
+//! `select_top_k` and the IVF accumulator all rank by) reproduces the
+//! global list *bit-identically*, ties included. Pruned per-shard IVF
+//! scans stay lossless because each shard's signed embedding is a slice
+//! of ONE global canonicalization ([`SignedEmbedding::select`]) and
+//! keeps the global Kreĭn gap, so the Cauchy–Schwarz cell caps still
+//! dominate every true score.
+//!
+//! The wire protocol (epoch fencing, by-value payloads with global ids,
+//! `#[non_exhaustive]` versioning) is documented in
+//! [`router`](super::router#protocol--the-versioned-shard-wire).
+//! Mutations never ride the wire: inserts and rebuild commits go through
+//! typed [`ShardWorker`] handle methods — the seam where a socket or
+//! persistence backend slots in later.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::approx::{Extension, Factored, LandmarkReservoir};
+use crate::index::{IvfConfig, IvfIndex, SignedEmbedding};
+use crate::sim::{CountingOracle, FaultTolerantOracle, PrefixOracle, RetryConfig, SimOracle};
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+use super::batcher::BatchingOracle;
+use super::metrics::Metrics;
+use super::router::{Query, Reply, Request, Response, RouteError, VecQuery};
+use super::scheduler::{DriftMonitor, RebuildPolicy};
+use super::server::{relock, BuildStats, InsertReport, Method};
+use super::service::{
+    connect, epoch_mismatch, Service, ServiceConfig, ServiceError, Snapshot, Transport,
+    TransportKind,
+};
+
+/// Epoch-fence retries per shard call before surfacing
+/// [`ServiceError::Epoch`] — a shard that keeps committing under the
+/// router this many times in one call is misbehaving, not busy.
+const EPOCH_RETRIES: usize = 3;
+
+/// Consecutive failed calls to one shard before the router records a
+/// breaker trip ([`Metrics::breaker_trips`]). The router keeps trying —
+/// one success (or [`ShardedService::reset_shard`]) re-arms the breaker.
+const BREAKER_THRESHOLD: u64 = 3;
+
+/// Round-robin ownership map: global document `g` lives on shard
+/// `g mod S` at local row `g / S`. Pure arithmetic — both sides of the
+/// wire derive the same map from the shard count alone, so no ownership
+/// table ever needs to be exchanged or kept in sync.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub shards: usize,
+}
+
+impl Partition {
+    pub fn new(shards: usize) -> Partition {
+        assert!(shards > 0, "at least one shard");
+        Partition { shards }
+    }
+
+    /// Shard owning global id `g`.
+    pub fn owner(&self, g: usize) -> usize {
+        g % self.shards
+    }
+
+    /// Local row of global id `g` on its owner shard.
+    pub fn local(&self, g: usize) -> usize {
+        g / self.shards
+    }
+
+    /// Local row of `g` on `shard`, if that shard owns it.
+    pub fn local_on(&self, g: usize, shard: usize) -> Option<usize> {
+        (g % self.shards == shard).then(|| g / self.shards)
+    }
+
+    /// Global id of local row `t` on `shard`.
+    pub fn global(&self, shard: usize, t: usize) -> usize {
+        shard + t * self.shards
+    }
+
+    /// Global ids owned by `shard` in a corpus of `n`, in local order.
+    pub fn ids(&self, shard: usize, n: usize) -> Vec<usize> {
+        (shard..n).step_by(self.shards).collect()
+    }
+}
+
+/// One shard: owns its slice of the corpus as a [`Snapshot`] (store rows
+/// + IVF cells + epoch) swapped atomically on commit, and serves the
+/// by-value wire queries with global↔local id translation. Implements
+/// [`Service`], so it sits behind any [`Transport`].
+///
+/// The inherent methods ([`Self::commit`], [`Self::set_available`]) are
+/// the **control plane**: typed, never on the wire enum. A future socket
+/// backend replaces these with its own replication/persistence protocol
+/// while the data plane above stays byte-for-byte the same.
+pub struct ShardWorker {
+    shard: usize,
+    parts: Partition,
+    state: RwLock<Snapshot>,
+    available: AtomicBool,
+}
+
+impl ShardWorker {
+    pub fn new(shard: usize, parts: Partition, snap: Snapshot) -> ShardWorker {
+        ShardWorker {
+            shard,
+            parts,
+            state: RwLock::new(snap),
+            available: AtomicBool::new(true),
+        }
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The snapshot currently served (an `Arc`-cheap clone).
+    pub fn snapshot(&self) -> Snapshot {
+        relock(self.state.read()).clone()
+    }
+
+    /// Documents this shard owns right now.
+    pub fn n(&self) -> usize {
+        relock(self.state.read()).n()
+    }
+
+    /// Control plane: atomically swap in a new snapshot (store + index +
+    /// epoch together, so readers never see them astride two
+    /// generations). The router drives one commit per corpus mutation.
+    pub fn commit(&self, snap: Snapshot) {
+        *relock(self.state.write()) = snap;
+    }
+
+    /// Control plane: take the shard out of (or back into) service.
+    /// While down it answers every request with an error reply — queries
+    /// touching its rows fail; the rest of the fleet keeps serving.
+    pub fn set_available(&self, up: bool) {
+        self.available.store(up, Ordering::Relaxed);
+    }
+
+    pub fn is_available(&self) -> bool {
+        self.available.load(Ordering::Relaxed)
+    }
+
+    /// Serve one wire query against `snap`, translating global ids to
+    /// local rows inbound and local rows to global ids outbound
+    /// (protocol rule 3: everything on the wire is global).
+    fn serve_query(&self, snap: &Snapshot, q: &Query) -> Response {
+        let p = self.parts;
+        match q {
+            Query::Vectors(gids) => {
+                let mut locals = Vec::with_capacity(gids.len());
+                for &g in gids {
+                    match p.local_on(g, self.shard) {
+                        Some(t) if t < snap.n() => locals.push(t),
+                        _ => {
+                            return Response::Error(format!(
+                                "shard {} does not serve doc {g}",
+                                self.shard
+                            ))
+                        }
+                    }
+                }
+                match snap.query(&Query::Vectors(locals)) {
+                    Ok(Response::Vectors(mut vqs)) => {
+                        // Exclusions travel as global ids; the local ids
+                        // the snapshot filled in are meaningless off-shard.
+                        for (vq, &g) in vqs.iter_mut().zip(gids) {
+                            vq.exclude = Some(g);
+                        }
+                        Response::Vectors(vqs)
+                    }
+                    Ok(other) => other,
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Query::TopKVec(vqs, k) => {
+                let local: Vec<VecQuery> = vqs
+                    .iter()
+                    .map(|vq| {
+                        let mut v = vq.clone();
+                        // A global exclusion this shard does not own
+                        // excludes nothing here — the id is not among
+                        // our candidates anyway.
+                        v.exclude = vq.exclude.and_then(|g| p.local_on(g, self.shard));
+                        v
+                    })
+                    .collect();
+                match snap.query(&Query::TopKVec(local, *k)) {
+                    Ok(Response::RankedShard { lists, scanned, pruned }) => {
+                        let lists = lists
+                            .into_iter()
+                            .map(|l| {
+                                l.into_iter()
+                                    .map(|(t, s)| (p.global(self.shard, t), s))
+                                    .collect()
+                            })
+                            .collect();
+                        Response::RankedShard { lists, scanned, pruned }
+                    }
+                    Ok(other) => other,
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Query::ScoreRow(_) => {
+                // Scores come back in local row order; the router
+                // interleaves segments (global = shard + t·S) itself.
+                match snap.query(q) {
+                    Ok(r) => r,
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Query::EntryVec(vq, g) => match p.local_on(*g, self.shard) {
+                Some(t) if t < snap.n() => match snap.query(&Query::EntryVec(vq.clone(), t)) {
+                    Ok(r) => r,
+                    Err(e) => Response::Error(e.to_string()),
+                },
+                _ => Response::Error(format!("shard {} does not serve doc {g}", self.shard)),
+            },
+            // Id-based queries assume a whole-corpus view and stay off
+            // the shard wire (protocol rule 3); unknown future variants
+            // get the same structured rejection (rule 4).
+            other => Response::Error(format!("query not supported on the shard wire: {other:?}")),
+        }
+    }
+}
+
+impl Service for ShardWorker {
+    fn serve(&self, req: &Request) -> Reply {
+        let snap = self.snapshot();
+        if !self.is_available() {
+            return Reply::new(
+                snap.epoch,
+                Response::Error(format!("shard {} unavailable", self.shard)),
+            );
+        }
+        if req.epoch != snap.epoch {
+            return Reply::new(snap.epoch, epoch_mismatch(snap.epoch, req.epoch));
+        }
+        Reply::new(snap.epoch, self.serve_query(&snap, &req.query))
+    }
+
+    fn epoch(&self) -> u64 {
+        relock(self.state.read()).epoch
+    }
+}
+
+/// Router-held streaming state — the global twin of the unsharded
+/// service's stream lock. One rng, one extension, one drift monitor for
+/// the whole fleet, so the maintenance path consumes the *same* rng and
+/// oracle sequences as a single-shard service (rebuild equivalence is
+/// tested bit-for-bit).
+struct ShardStream {
+    extension: Extension,
+    reservoir: LandmarkReservoir,
+    monitor: DriftMonitor,
+    policy: RebuildPolicy,
+    rng: Rng,
+    n: usize,
+    inserts_since_build: usize,
+}
+
+/// The routing tier: holds one [`ShardWorker`] per shard behind a
+/// [`Transport`], scatters queries, merges replies, and drives the
+/// global mutation path (inserts, drift probes, rebuild commits).
+pub struct ShardedService {
+    parts: Partition,
+    workers: Vec<Arc<ShardWorker>>,
+    links: Vec<Box<dyn Transport>>,
+    /// Epoch the router last observed per shard (refreshed from reply
+    /// envelopes on a fence rejection).
+    observed: Vec<AtomicU64>,
+    /// Snapshot generation of the last commit the router drove.
+    commit_epoch: AtomicU64,
+    /// Consecutive failed calls per shard (the router-side breaker).
+    failures: Vec<AtomicU64>,
+    stream: Mutex<ShardStream>,
+    index_cfg: Option<IvfConfig>,
+    method: Method,
+    batch: usize,
+    retry: Option<RetryConfig>,
+    pub stats: BuildStats,
+    pub metrics: Arc<Metrics>,
+}
+
+/// Slice shard `s`'s snapshot out of a global store (+ the globally
+/// canonicalized embedding when indexing): verbatim row copies, so every
+/// per-shard score is bit-equal to the single-store one. Empty shards
+/// (more shards than documents) get no index — nothing to scan.
+fn shard_snapshot(
+    parts: Partition,
+    s: usize,
+    global: &Factored,
+    emb: Option<&SignedEmbedding>,
+    icfg: Option<IvfConfig>,
+    epoch: u64,
+) -> Result<Snapshot, ServiceError> {
+    let ids = parts.ids(s, global.n());
+    let store = Arc::new(Factored {
+        left: global.left.select_rows(&ids),
+        right_t: global.right_t.select_rows(&ids),
+        symmetric: global.symmetric,
+    });
+    let index = match (emb, icfg) {
+        (Some(e), Some(c)) if !ids.is_empty() => Some(Arc::new(
+            IvfIndex::build_with_embedding(store.clone(), e.select(&ids), c)
+                .map_err(ServiceError::Invalid)?,
+        )),
+        _ => None,
+    };
+    Ok(Snapshot::new(epoch, store, index))
+}
+
+fn unexpected(shard: usize, got: &Response) -> ServiceError {
+    ServiceError::Shard {
+        shard,
+        reason: format!("unexpected reply: {got:?}"),
+    }
+}
+
+impl ShardedService {
+    /// Build the fleet: run the *global* sublinear build (same oracle and
+    /// rng sequence as [`SimilarityService::from_config`] — the stores
+    /// are bit-identical), canonicalize the signed embedding once over
+    /// the global store when indexing, then slice both per shard and
+    /// wire each worker behind `kind`.
+    ///
+    /// [`SimilarityService::from_config`]:
+    /// super::server::SimilarityService::from_config
+    pub fn build(
+        oracle: &dyn SimOracle,
+        cfg: &ServiceConfig,
+        shards: usize,
+        kind: TransportKind,
+        rng: &mut Rng,
+    ) -> Result<ShardedService, ServiceError> {
+        if shards == 0 {
+            return Err(ServiceError::Invalid("shard count must be positive".into()));
+        }
+        cfg.validate(oracle.n())?;
+        let stream = cfg.stream_or_default();
+        let metrics = Arc::new(Metrics::new());
+        let counter = CountingOracle::new(oracle);
+        let t0 = Instant::now();
+        let n = oracle.n();
+        let plan = cfg.method.sample_plan(n, cfg.s1, rng);
+        let built = match &cfg.retry {
+            Some(rc) => {
+                let ft =
+                    FaultTolerantOracle::new(&counter, rc.clone()).with_metrics(metrics.clone());
+                let batched = BatchingOracle::new(&ft, cfg.batch, metrics.clone());
+                cfg.method.try_build_with_plan(&batched, &plan, rng)
+            }
+            None => {
+                let batched = BatchingOracle::new(&counter, cfg.batch, metrics.clone());
+                cfg.method.try_build_with_plan(&batched, &plan, rng)
+            }
+        };
+        let (global, extension) = built?;
+        let stats = BuildStats {
+            method: cfg.method,
+            n,
+            s1: cfg.s1,
+            oracle_calls: counter.calls(),
+            build_seconds: t0.elapsed().as_secs_f64(),
+            exact_calls: (n * n) as u64,
+        };
+        let parts = Partition::new(shards);
+        let emb = match cfg.index {
+            Some(_) => {
+                Some(SignedEmbedding::canonicalize(&global).map_err(ServiceError::Invalid)?)
+            }
+            None => None,
+        };
+        let mut workers = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let snap = shard_snapshot(parts, s, &global, emb.as_ref(), cfg.index, 0)?;
+            workers.push(Arc::new(ShardWorker::new(s, parts, snap)));
+        }
+        let links = workers
+            .iter()
+            .map(|w| connect(kind, w.clone() as Arc<dyn Service>))
+            .collect();
+        Ok(ShardedService {
+            parts,
+            observed: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            commit_epoch: AtomicU64::new(0),
+            failures: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            workers,
+            links,
+            stream: Mutex::new(ShardStream {
+                extension,
+                reservoir: LandmarkReservoir::new(&plan, n),
+                monitor: DriftMonitor::new(stream.probe_pairs, stream.epoch),
+                policy: stream.policy,
+                rng: rng.fork(),
+                n,
+                inserts_since_build: 0,
+            }),
+            index_cfg: cfg.index,
+            method: cfg.method,
+            batch: cfg.batch,
+            retry: cfg.retry.clone(),
+            stats,
+            metrics,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Handle to one shard worker (control plane: availability, direct
+    /// snapshot inspection in tests).
+    pub fn worker(&self, s: usize) -> &Arc<ShardWorker> {
+        &self.workers[s]
+    }
+
+    /// Documents currently served across the fleet.
+    pub fn n(&self) -> usize {
+        relock(self.stream.lock()).n
+    }
+
+    /// Snapshot generation of the last commit the router drove.
+    pub fn epoch(&self) -> u64 {
+        self.commit_epoch.load(Ordering::Relaxed)
+    }
+
+    /// Most recent drift estimate (0 before the first probe).
+    pub fn last_drift(&self) -> f64 {
+        relock(self.stream.lock()).monitor.last_drift
+    }
+
+    /// Exact Δ evaluations one inserted document costs right now.
+    pub fn per_insert_calls(&self) -> usize {
+        relock(self.stream.lock()).extension.per_insert_calls()
+    }
+
+    /// Re-arm shard `s`'s breaker and mark its worker available again.
+    pub fn reset_shard(&self, s: usize) {
+        self.failures[s].store(0, Ordering::Relaxed);
+        self.workers[s].set_available(true);
+    }
+
+    /// One epoch-fenced call to shard `s`: tag the request with the
+    /// last-observed epoch, refresh from the reply envelope and retry
+    /// (bounded) on a fence rejection, convert error replies into
+    /// [`ServiceError::Shard`] and meter the router-side breaker.
+    fn call(&self, s: usize, q: Query) -> Result<Response, ServiceError> {
+        let requested = self.observed[s].load(Ordering::Relaxed);
+        let mut epoch = requested;
+        let mut last_got = requested;
+        for _ in 0..EPOCH_RETRIES {
+            self.metrics.record_shard_calls(1);
+            let reply = match self.links[s].call(Request::new(epoch, q.clone())) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.shard_failed(s);
+                    return Err(e);
+                }
+            };
+            if reply.epoch != epoch {
+                // Fenced: the shard serves a different snapshot
+                // generation. Adopt its advertised epoch and retry.
+                self.metrics.record_epoch_reject();
+                self.observed[s].store(reply.epoch, Ordering::Relaxed);
+                last_got = reply.epoch;
+                epoch = reply.epoch;
+                continue;
+            }
+            return match reply.response {
+                Response::Error(reason) => {
+                    self.shard_failed(s);
+                    Err(ServiceError::Shard { shard: s, reason })
+                }
+                resp => {
+                    self.failures[s].store(0, Ordering::Relaxed);
+                    Ok(resp)
+                }
+            };
+        }
+        Err(ServiceError::Epoch { expected: requested, got: last_got })
+    }
+
+    fn shard_failed(&self, s: usize) {
+        self.metrics.record_shard_failure();
+        if self.failures[s].fetch_add(1, Ordering::Relaxed) + 1 == BREAKER_THRESHOLD {
+            self.metrics.record_breaker_trip();
+        }
+    }
+
+    /// Scatter one query to every shard concurrently (one in-flight
+    /// request per shard), failing on the first per-shard error in shard
+    /// order — deterministic for every worker count.
+    fn scatter(&self, q: &Query) -> Result<Vec<Response>, ServiceError> {
+        pool::fan_out(self.workers.len(), |s| self.call(s, q.clone()))
+            .into_iter()
+            .collect()
+    }
+
+    /// Fetch the by-value preamble of one global id from its owner.
+    fn fetch_one(&self, i: usize) -> Result<VecQuery, ServiceError> {
+        let owner = self.parts.owner(i);
+        match self.call(owner, Query::Vectors(vec![i]))? {
+            Response::Vectors(mut v) if v.len() == 1 => Ok(v.pop().unwrap()),
+            other => Err(unexpected(owner, &other)),
+        }
+    }
+
+    /// Fetch preambles for many global ids — one `Vectors` call per
+    /// owner shard — reassembled in input order.
+    fn fetch_many(&self, ids: &[usize]) -> Result<Vec<VecQuery>, ServiceError> {
+        let mut by_owner: Vec<Vec<usize>> = vec![Vec::new(); self.workers.len()];
+        for (t, &i) in ids.iter().enumerate() {
+            by_owner[self.parts.owner(i)].push(t);
+        }
+        let mut out: Vec<Option<VecQuery>> = ids.iter().map(|_| None).collect();
+        for (s, pos) in by_owner.iter().enumerate() {
+            if pos.is_empty() {
+                continue;
+            }
+            let gids: Vec<usize> = pos.iter().map(|&t| ids[t]).collect();
+            match self.call(s, Query::Vectors(gids))? {
+                Response::Vectors(vqs) if vqs.len() == pos.len() => {
+                    for (&t, vq) in pos.iter().zip(vqs) {
+                        out[t] = Some(vq);
+                    }
+                }
+                other => return Err(unexpected(s, &other)),
+            }
+        }
+        Ok(out.into_iter().map(Option::unwrap).collect())
+    }
+
+    /// Scatter a `TopKVec` batch and merge the per-shard "up to k" lists
+    /// into global top-k lists under the canonical comparator. Exactness
+    /// argument in the module docs.
+    fn topk_scatter(
+        &self,
+        vqs: Vec<VecQuery>,
+        k: usize,
+    ) -> Result<(Vec<Vec<(usize, f64)>>, u64, u64), ServiceError> {
+        let nq = vqs.len();
+        let replies = self.scatter(&Query::TopKVec(vqs, k))?;
+        let mut merged: Vec<Vec<(usize, f64)>> = (0..nq).map(|_| Vec::new()).collect();
+        let (mut scanned, mut pruned) = (0u64, 0u64);
+        for (s, resp) in replies.into_iter().enumerate() {
+            match resp {
+                Response::RankedShard { lists, scanned: sc, pruned: pr } => {
+                    if lists.len() != nq {
+                        return Err(ServiceError::Shard {
+                            shard: s,
+                            reason: format!("returned {} lists for {nq} queries", lists.len()),
+                        });
+                    }
+                    scanned += sc;
+                    pruned += pr;
+                    for (t, l) in lists.into_iter().enumerate() {
+                        merged[t].extend(l);
+                    }
+                }
+                other => return Err(unexpected(s, &other)),
+            }
+        }
+        for l in &mut merged {
+            l.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            l.truncate(k);
+        }
+        Ok((merged, scanned, pruned))
+    }
+
+    /// Interleave per-shard score segments (local row order) back into
+    /// one global row: `out[s + t·S] = seg_s[t]`.
+    fn gather_row(&self, n: usize, segs: Vec<Response>) -> Result<Vec<f64>, ServiceError> {
+        let mut out = vec![0.0; n];
+        for (s, resp) in segs.into_iter().enumerate() {
+            match resp {
+                Response::Vector(seg) => {
+                    for (t, v) in seg.into_iter().enumerate() {
+                        out[self.parts.global(s, t)] = v;
+                    }
+                }
+                other => return Err(unexpected(s, &other)),
+            }
+        }
+        Ok(out)
+    }
+
+    /// K̃_ij through the data plane (owner preamble + owner-of-j score);
+    /// bit-equal to `Factored::entry` on the unsharded store.
+    fn entry(&self, i: usize, j: usize) -> Result<f64, ServiceError> {
+        let vq = self.fetch_one(i)?;
+        let owner = self.parts.owner(j);
+        match self.call(owner, Query::EntryVec(vq, j))? {
+            Response::Scalar(v) => Ok(v),
+            other => Err(unexpected(owner, &other)),
+        }
+    }
+
+    /// Route one query through the fleet. Every variant answers
+    /// bit-identically to a single-shard service over the same build
+    /// (`tests/sharding.rs` pins this for S ∈ {1, 2, 3}).
+    pub fn query(&self, q: &Query) -> Result<Response, ServiceError> {
+        self.metrics.record_query();
+        let n = self.n();
+        let check = |i: usize| {
+            if i < n {
+                Ok(())
+            } else {
+                Err(ServiceError::Route(RouteError::OutOfRange { index: i, n }))
+            }
+        };
+        match q {
+            &Query::Entry(i, j) => {
+                check(i)?;
+                check(j)?;
+                Ok(Response::Scalar(self.entry(i, j)?))
+            }
+            &Query::Row(i) => {
+                check(i)?;
+                let vq = self.fetch_one(i)?;
+                let segs = self.scatter(&Query::ScoreRow(vq))?;
+                Ok(Response::Vector(self.gather_row(n, segs)?))
+            }
+            &Query::TopK(i, k) => {
+                check(i)?;
+                let vq = self.fetch_one(i)?;
+                let (mut lists, scanned, pruned) = self.topk_scatter(vec![vq], k.min(n - 1))?;
+                self.metrics.record_topk(1, scanned, pruned);
+                Ok(Response::Ranked(lists.pop().unwrap()))
+            }
+            Query::TopKBatch(ids, k) => {
+                for &i in ids {
+                    check(i)?;
+                }
+                let vqs = self.fetch_many(ids)?;
+                let (lists, scanned, pruned) = self.topk_scatter(vqs, (*k).min(n - 1))?;
+                self.metrics.record_topk(ids.len() as u64, scanned, pruned);
+                Ok(Response::RankedBatch(lists))
+            }
+            &Query::Embed(i) => {
+                check(i)?;
+                Ok(Response::Vector(self.fetch_one(i)?.left))
+            }
+            Query::Vectors(ids) => {
+                for &i in ids {
+                    check(i)?;
+                }
+                Ok(Response::Vectors(self.fetch_many(ids)?))
+            }
+            Query::TopKVec(vqs, k) => {
+                let (lists, scanned, pruned) = self.topk_scatter(vqs.clone(), *k)?;
+                self.metrics.record_topk(vqs.len() as u64, scanned, pruned);
+                Ok(Response::RankedShard { lists, scanned, pruned })
+            }
+            Query::ScoreRow(vq) => {
+                let segs = self.scatter(&Query::ScoreRow(vq.clone()))?;
+                Ok(Response::Vector(self.gather_row(n, segs)?))
+            }
+            Query::EntryVec(vq, j) => {
+                check(*j)?;
+                let owner = self.parts.owner(*j);
+                match self.call(owner, Query::EntryVec(vq.clone(), *j))? {
+                    Response::Scalar(v) => Ok(Response::Scalar(v)),
+                    other => Err(unexpected(owner, &other)),
+                }
+            }
+        }
+    }
+
+    /// Total query entry point: errors render as [`Response::Error`].
+    pub fn respond(&self, q: &Query) -> Response {
+        self.query(q).unwrap_or_else(Response::from)
+    }
+
+    /// Fold one appended document into the fleet; see
+    /// [`Self::try_insert_batch`].
+    pub fn try_insert(
+        &self,
+        oracle: &dyn SimOracle,
+        id: usize,
+    ) -> Result<InsertReport, ServiceError> {
+        self.try_insert_batch(oracle, &[id])
+    }
+
+    /// The sharded twin of `SimilarityService::try_insert_batch`: same
+    /// validation, same oracle gather (global extension), same rng
+    /// stream for reservoir/drift/rebuild — then the committed rows
+    /// scatter to their owner shards (every shard folds *all* rows into
+    /// its index gap accounting; only owned rows are appended) under one
+    /// epoch bump. A shard marked unavailable fails the insert up front
+    /// with every store unchanged — commits are all-or-nothing.
+    pub fn try_insert_batch(
+        &self,
+        oracle: &dyn SimOracle,
+        ids: &[usize],
+    ) -> Result<InsertReport, ServiceError> {
+        if ids.is_empty() {
+            return Ok(InsertReport {
+                inserted: 0,
+                oracle_calls: 0,
+                drift: None,
+                rebuilt: false,
+                degraded: None,
+            });
+        }
+        let mut st = relock(self.stream.lock());
+        let st = &mut *st;
+        for (k, &id) in ids.iter().enumerate() {
+            if id != st.n + k {
+                return Err(ServiceError::Invalid(format!(
+                    "inserts must be contiguous: expected doc {}, got {id}",
+                    st.n + k
+                )));
+            }
+        }
+        if oracle.n() < st.n + ids.len() {
+            return Err(ServiceError::Invalid(format!(
+                "oracle covers {} docs but the grown corpus needs {}",
+                oracle.n(),
+                st.n + ids.len()
+            )));
+        }
+        if let Some(s) = self.workers.iter().position(|w| !w.is_available()) {
+            return Err(ServiceError::Shard {
+                shard: s,
+                reason: "unavailable for insert commit".into(),
+            });
+        }
+        let counter = CountingOracle::new(oracle);
+        let gathered = match &self.retry {
+            Some(rc) => {
+                let ft =
+                    FaultTolerantOracle::new(&counter, rc.clone()).with_metrics(self.metrics.clone());
+                let batched = BatchingOracle::new(&ft, self.batch, self.metrics.clone());
+                st.extension.try_extension_rows(&batched, ids)
+            }
+            None => {
+                let batched = BatchingOracle::new(&counter, self.batch, self.metrics.clone());
+                st.extension.try_extension_rows(&batched, ids)
+            }
+        };
+        let (left, right) = match gathered {
+            Ok(rows) => rows,
+            Err(e) => {
+                self.metrics.record_oracle_failure();
+                return Err(ServiceError::from(e));
+            }
+        };
+        let calls = counter.calls();
+        // Commit: each shard appends its owned rows; every shard's index
+        // widens its Kreĭn gap by ALL appended rows (the residual bound
+        // is a property of the global canonical form, so per-shard
+        // pruning stays lossless for queries about any document).
+        let next = self.commit_epoch.load(Ordering::Relaxed) + 1;
+        for (s, w) in self.workers.iter().enumerate() {
+            let snap = w.snapshot();
+            let pos: Vec<usize> = ids
+                .iter()
+                .enumerate()
+                .filter(|&(_, &g)| self.parts.owner(g) == s)
+                .map(|(t, _)| t)
+                .collect();
+            let (l, r) = (left.select_rows(&pos), right.select_rows(&pos));
+            let mut store = (*snap.store).clone();
+            st.extension.append_rows(&mut store, &l, &r);
+            let store = Arc::new(store);
+            let index = snap.index.as_ref().map(|idx| {
+                Arc::new(idx.extended_with_gap_rows(store.clone(), &l, &r, &left, &right))
+            });
+            w.commit(Snapshot::new(next, store, index));
+            self.observed[s].store(next, Ordering::Relaxed);
+        }
+        self.commit_epoch.store(next, Ordering::Relaxed);
+        self.metrics.record_inserts(ids.len() as u64, calls);
+        st.n += ids.len();
+        st.inserts_since_build += ids.len();
+        for &id in ids {
+            st.reservoir.observe(id, &mut st.rng);
+        }
+        let mut drift = None;
+        let mut rebuilt = false;
+        let mut degraded = None;
+        if st.monitor.tick(ids.len()) {
+            // Same probe as the unsharded monitor, split in two: the rng
+            // draws the pairs, the data plane reconstructs the approx
+            // entries (bit-equal dots), the oracle evaluates in the same
+            // order. A shard failure skips the epoch, not the insert.
+            let pairs = st.monitor.draw_pairs(st.n, &mut st.rng);
+            let mut approx = Vec::with_capacity(pairs.len());
+            let mut fetch_err = None;
+            for &(i, j) in &pairs {
+                match self.entry(i, j) {
+                    Ok(v) => approx.push(v),
+                    Err(e) => {
+                        fetch_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            match fetch_err {
+                Some(e) => {
+                    self.metrics.record_degraded_epoch();
+                    degraded = Some(format!("drift probe failed, epoch skipped: {e}"));
+                }
+                None => {
+                    let probe_counter = CountingOracle::new(oracle);
+                    let probed = match &self.retry {
+                        Some(rc) => {
+                            let ft = FaultTolerantOracle::new(&probe_counter, rc.clone())
+                                .with_metrics(self.metrics.clone());
+                            st.monitor.probe_given(&ft, &pairs, &approx)
+                        }
+                        None => st.monitor.probe_given(&probe_counter, &pairs, &approx),
+                    };
+                    self.metrics.record_drift_probe(probe_counter.calls());
+                    match probed {
+                        Ok(d) => drift = Some(d),
+                        Err(e) => {
+                            self.metrics.record_oracle_failure();
+                            self.metrics.record_degraded_epoch();
+                            degraded = Some(format!("drift probe failed, epoch skipped: {e}"));
+                        }
+                    }
+                }
+            }
+            if let Some(d) = drift {
+                if st.policy.should_rebuild(d, st.inserts_since_build) {
+                    let grown = PrefixOracle::new(oracle, st.n);
+                    let plan = st.reservoir.refreshed_plan(&mut st.rng);
+                    let rebuild_counter = CountingOracle::new(&grown);
+                    let built = match &self.retry {
+                        Some(rc) => {
+                            let ft = FaultTolerantOracle::new(&rebuild_counter, rc.clone())
+                                .with_metrics(self.metrics.clone());
+                            let batched =
+                                BatchingOracle::new(&ft, self.batch, self.metrics.clone());
+                            self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
+                        }
+                        None => {
+                            let batched = BatchingOracle::new(
+                                &rebuild_counter,
+                                self.batch,
+                                self.metrics.clone(),
+                            );
+                            self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
+                        }
+                    };
+                    match built {
+                        Ok((fresh, next_ext)) => {
+                            if let Some(s) = self.workers.iter().position(|w| !w.is_available()) {
+                                // Pre-flight: rebuild commits are
+                                // all-or-nothing across the fleet.
+                                self.metrics.record_degraded_epoch();
+                                degraded = Some(format!(
+                                    "rebuild failed, serving previous snapshot: shard {s} unavailable"
+                                ));
+                            } else {
+                                let emb = match self.index_cfg {
+                                    Some(_) => Some(
+                                        SignedEmbedding::canonicalize(&fresh)
+                                            .map_err(ServiceError::Invalid)?,
+                                    ),
+                                    None => None,
+                                };
+                                // Build every shard's snapshot before
+                                // swapping any, so an index failure on
+                                // one shard aborts with the whole
+                                // previous generation still serving.
+                                let commit = self.commit_epoch.load(Ordering::Relaxed) + 1;
+                                let mut snaps = Vec::with_capacity(self.workers.len());
+                                for s in 0..self.workers.len() {
+                                    snaps.push(shard_snapshot(
+                                        self.parts,
+                                        s,
+                                        &fresh,
+                                        emb.as_ref(),
+                                        self.index_cfg,
+                                        commit,
+                                    )?);
+                                }
+                                for (s, (w, snap)) in
+                                    self.workers.iter().zip(snaps).enumerate()
+                                {
+                                    w.commit(snap);
+                                    self.observed[s].store(commit, Ordering::Relaxed);
+                                }
+                                self.commit_epoch.store(commit, Ordering::Relaxed);
+                                st.extension = next_ext;
+                                st.inserts_since_build = 0;
+                                self.metrics.record_rebuild();
+                                rebuilt = true;
+                            }
+                        }
+                        Err(e) => {
+                            self.metrics.record_oracle_failure();
+                            self.metrics.record_degraded_epoch();
+                            degraded =
+                                Some(format!("rebuild failed, serving previous snapshot: {e}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(InsertReport {
+            inserted: ids.len(),
+            oracle_calls: calls,
+            drift,
+            rebuilt,
+            degraded,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::synthetic::NearPsdOracle;
+
+    fn fleet(
+        n: usize,
+        shards: usize,
+        kind: TransportKind,
+        index: bool,
+        seed: u64,
+    ) -> (NearPsdOracle, ShardedService) {
+        let mut rng = Rng::new(seed);
+        let o = NearPsdOracle::new(n, 6, 0.3, &mut rng);
+        let mut cfg = ServiceConfig::new(Method::Nystrom, 8.min(n)).batch(32);
+        if index {
+            cfg = cfg.index(IvfConfig::default());
+        }
+        let mut build_rng = Rng::new(seed + 1);
+        let svc = ShardedService::build(&o, &cfg, shards, kind, &mut build_rng).unwrap();
+        (o, svc)
+    }
+
+    #[test]
+    fn partition_round_trips_ids() {
+        let p = Partition::new(3);
+        for g in 0..20 {
+            let (s, t) = (p.owner(g), p.local(g));
+            assert_eq!(p.global(s, t), g);
+            assert_eq!(p.local_on(g, s), Some(t));
+            assert_eq!(p.local_on(g, (s + 1) % 3), None);
+        }
+        assert_eq!(p.ids(1, 8), vec![1, 4, 7]);
+        assert_eq!(p.ids(2, 2), Vec::<usize>::new());
+        // More shards than documents: trailing shards own nothing.
+        assert_eq!(Partition::new(5).ids(4, 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn shards_partition_the_store_by_rows() {
+        let (_o, svc) = fleet(20, 3, TransportKind::Direct, false, 1);
+        let total: usize = (0..3).map(|s| svc.worker(s).n()).sum();
+        assert_eq!(total, 20);
+        // Worker rows are verbatim copies of their global rows.
+        let w1 = svc.worker(1).snapshot();
+        match svc.query(&Query::Embed(1)).unwrap() {
+            Response::Vector(v) => assert_eq!(v, w1.store.left.row(0).to_vec()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_entry_and_row_match_each_other() {
+        let (_o, svc) = fleet(18, 3, TransportKind::Direct, false, 2);
+        let row = match svc.query(&Query::Row(5)).unwrap() {
+            Response::Vector(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(row.len(), 18);
+        for j in [0usize, 7, 17] {
+            match svc.query(&Query::Entry(5, j)).unwrap() {
+                Response::Scalar(v) => assert_eq!(v, row[j], "entry (5,{j})"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_translates_ids_and_rejects_foreign_docs() {
+        let (_o, svc) = fleet(12, 3, TransportKind::Direct, false, 3);
+        let w = svc.worker(1);
+        let epoch = relock(w.state.read()).epoch;
+        // Owned doc: preamble comes back with the GLOBAL id excluded.
+        let r = w.serve(&Request::new(epoch, Query::Vectors(vec![4])));
+        match r.response {
+            Response::Vectors(vqs) => assert_eq!(vqs[0].exclude, Some(4)),
+            other => panic!("{other:?}"),
+        }
+        // Foreign doc: structured rejection, not a panic.
+        let r = w.serve(&Request::new(epoch, Query::Vectors(vec![5])));
+        assert!(matches!(r.response, Response::Error(_)));
+        // Id-based queries stay off the shard wire.
+        let r = w.serve(&Request::new(epoch, Query::Row(4)));
+        match r.response {
+            Response::Error(msg) => assert!(msg.contains("not supported"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn epoch_fence_refresh_and_bounded_retry() {
+        let mut rng = Rng::new(4);
+        let o = NearPsdOracle::new(16, 6, 0.3, &mut rng);
+        let prefix = PrefixOracle::new(&o, 12);
+        let cfg = ServiceConfig::new(Method::Nystrom, 8).batch(32);
+        let mut build_rng = Rng::new(5);
+        let svc =
+            ShardedService::build(&prefix, &cfg, 2, TransportKind::Direct, &mut build_rng).unwrap();
+        // A committed insert bumps every shard's epoch; the router's
+        // observed view follows and queries keep serving.
+        svc.try_insert(&o, 12).unwrap();
+        assert_eq!(svc.epoch(), 1);
+        assert!(matches!(svc.query(&Query::Entry(0, 12)).unwrap(), Response::Scalar(_)));
+        // Commit out from under the router: the first call is fenced,
+        // the router adopts the advertised epoch and the retry serves.
+        let w = svc.worker(0);
+        let mut snap = w.snapshot();
+        snap.epoch += 5;
+        w.commit(snap);
+        assert!(matches!(svc.query(&Query::Embed(0)).unwrap(), Response::Vector(_)));
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(svc.metrics.epoch_rejects.load(Relaxed) >= 1);
+    }
+
+    #[test]
+    fn downed_shard_fails_its_rows_not_the_service() {
+        let mut rng = Rng::new(6);
+        let o = NearPsdOracle::new(16, 6, 0.3, &mut rng);
+        let prefix = PrefixOracle::new(&o, 12);
+        let cfg = ServiceConfig::new(Method::Nystrom, 8).batch(32);
+        let mut build_rng = Rng::new(7);
+        let svc =
+            ShardedService::build(&prefix, &cfg, 3, TransportKind::Direct, &mut build_rng).unwrap();
+        svc.worker(1).set_available(false);
+        // Rows owned by live shards keep serving…
+        assert!(matches!(svc.query(&Query::Embed(0)).unwrap(), Response::Vector(_)));
+        assert!(matches!(svc.query(&Query::Entry(0, 3)).unwrap(), Response::Scalar(_)));
+        // …rows on the downed shard fail with a typed shard error…
+        match svc.query(&Query::Embed(4)) {
+            Err(ServiceError::Shard { shard: 1, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        // …and so do scatters that need every shard.
+        assert!(svc.query(&Query::TopK(0, 3)).is_err());
+        // Inserts are refused up front (stores unchanged on every shard).
+        match svc.try_insert(&o, 12) {
+            Err(ServiceError::Shard { shard: 1, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(svc.n(), 12);
+        // Repeated failures trip the router-side breaker; reset re-arms.
+        for _ in 0..3 {
+            let _ = svc.query(&Query::Embed(4));
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(svc.metrics.breaker_trips.load(Relaxed) >= 1);
+        svc.reset_shard(1);
+        assert!(matches!(svc.query(&Query::Embed(4)).unwrap(), Response::Vector(_)));
+        svc.try_insert(&o, 12).unwrap();
+        assert_eq!(svc.n(), 13);
+    }
+
+    #[test]
+    fn more_shards_than_documents_still_serves() {
+        let (_o, svc) = fleet(3, 5, TransportKind::Direct, true, 6);
+        assert_eq!(svc.worker(4).n(), 0);
+        match svc.query(&Query::TopK(0, 5)).unwrap() {
+            Response::Ranked(r) => assert_eq!(r.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        match svc.query(&Query::Row(2)).unwrap() {
+            Response::Vector(v) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_range_is_typed_before_any_scatter() {
+        let (_o, svc) = fleet(10, 2, TransportKind::Direct, false, 7);
+        for q in [Query::Entry(10, 0), Query::Row(10), Query::TopK(10, 2), Query::Embed(10)] {
+            match svc.query(&q) {
+                Err(ServiceError::Route(RouteError::OutOfRange { index: 10, n: 10 })) => {}
+                other => panic!("{q:?}: {other:?}"),
+            }
+        }
+        match svc.respond(&Query::Row(10)) {
+            Response::Error(msg) => assert!(msg.contains("out of range"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -157,6 +157,33 @@ pub fn dense_rows(f: &Factored, rows: std::ops::Range<usize>) -> Mat {
     out
 }
 
+/// Band renderer over a sharded fleet: the same dense K̃[rows, ·] block,
+/// but every row pulled through the shard data plane (`Query::Row` —
+/// owner preamble, `ScoreRow` scatter, interleaved gather). Bit-identical
+/// to [`dense_rows`] on the equivalent single store, since per-shard
+/// scores are the same factor dots over verbatim row copies. A degraded
+/// shard fails the band (typed), never silently zero-fills it.
+pub fn dense_rows_sharded(
+    svc: &super::shard::ShardedService,
+    rows: std::ops::Range<usize>,
+) -> std::result::Result<Mat, super::service::ServiceError> {
+    use super::router::{Query, Response};
+    let n = svc.n();
+    assert!(rows.end <= n, "band out of range");
+    let mut out = Mat::zeros(rows.len(), n);
+    for (r, i) in rows.enumerate() {
+        match svc.query(&Query::Row(i))? {
+            Response::Vector(v) => out.data[r * n..(r + 1) * n].copy_from_slice(&v),
+            other => {
+                return Err(super::service::ServiceError::Invalid(format!(
+                    "row query returned unexpected reply: {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +225,25 @@ mod tests {
                 assert_eq!(serial.get(r, j), f.entry(i, j), "({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn sharded_band_matches_in_process_band() {
+        use crate::coordinator::server::Method;
+        use crate::coordinator::service::{ServiceConfig, TransportKind};
+        use crate::coordinator::shard::ShardedService;
+        use crate::sim::synthetic::NearPsdOracle;
+        let mut rng = Rng::new(9);
+        let o = NearPsdOracle::new(24, 5, 0.2, &mut rng);
+        let cfg = ServiceConfig::new(Method::Nystrom, 8).batch(32);
+        // Same seed for both builds: the global stores are bit-identical,
+        // so the sharded band must match the in-process band exactly.
+        let single = cfg.build(&o, &mut Rng::new(10)).unwrap();
+        let fleet =
+            ShardedService::build(&o, &cfg, 3, TransportKind::Channel, &mut Rng::new(10)).unwrap();
+        let want = dense_rows(&single.factored(), 4..14);
+        let got = dense_rows_sharded(&fleet, 4..14).unwrap();
+        assert_eq!(want.data, got.data, "sharded band must be bit-identical");
     }
 
     #[test]

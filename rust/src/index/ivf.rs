@@ -25,8 +25,10 @@
 use std::sync::Arc;
 
 use crate::approx::Factored;
-use crate::linalg::kernel::dot_f32;
+use crate::linalg::kernel::{self, dot_f32};
 use crate::linalg::{dot, Mat};
+
+use super::batch as index;
 use crate::tasks::cluster::kmeans;
 use crate::util::rng::Rng;
 
@@ -267,11 +269,30 @@ impl IvfIndex {
     /// quantize (O(n·cells·d) per Lloyd iteration on the pool), cap each
     /// cell. Never touches the oracle.
     pub fn build(store: Arc<Factored>, cfg: IvfConfig) -> Result<IvfIndex, String> {
+        if store.n() == 0 {
+            return Err("cannot index an empty store".into());
+        }
+        let emb = SignedEmbedding::canonicalize(&store)?;
+        Self::build_with_embedding(store, emb, cfg)
+    }
+
+    /// [`Self::build`] over a caller-supplied signed embedding — the
+    /// shard path: the embedding is canonicalized **once** over the
+    /// global store and sliced per shard (`SignedEmbedding::select`), so
+    /// every shard prunes under the global maps and the global `gap`.
+    /// Clustering runs over the supplied rows only; the cell structure
+    /// may differ from a whole-corpus build, but both pruned scans are
+    /// lossless, so served rankings cannot.
+    pub fn build_with_embedding(
+        store: Arc<Factored>,
+        emb: SignedEmbedding,
+        cfg: IvfConfig,
+    ) -> Result<IvfIndex, String> {
         let n = store.n();
         if n == 0 {
             return Err("cannot index an empty store".into());
         }
-        let emb = SignedEmbedding::canonicalize(&store)?;
+        assert_eq!(emb.n(), n, "embedding rows must match the store");
         let want = if cfg.cells == 0 {
             (n as f64).sqrt().ceil() as usize
         } else {
@@ -335,22 +356,50 @@ impl IvfIndex {
         let n = self.store.n();
         assert!(i < n, "query {i} out of range for n={n}");
         let k = k.min(n.saturating_sub(1));
+        let mut u = vec![0.0; self.emb.dim()];
+        self.emb.query_into(i, &mut u);
+        self.top_k_vec_stats(self.store.left.row(i), Some(&u), Some(i), k)
+    }
+
+    /// By-value twin of [`Self::top_k_stats`] — the shard serving core.
+    /// `li` is the query's left-factor row (every score is the exact
+    /// `dot(li, right_t.row(j))`), `view` its signed-embedding query
+    /// view for the cell bounds, `exclude` a **local** row to omit
+    /// (`None` excludes nothing). Without a view the scan runs exact
+    /// (the bounds need `u`; losslessness makes the results identical
+    /// either way). `top_k_stats(i, k)` delegates here with the locally
+    /// computed view and `exclude = Some(i)` — same float sequence,
+    /// same results, bit for bit.
+    pub fn top_k_vec_stats(
+        &self,
+        li: &[f64],
+        view: Option<&[f64]>,
+        exclude: Option<usize>,
+        k: usize,
+    ) -> (Vec<(usize, f64)>, SearchStats) {
+        let n = self.store.n();
+        let k = k.min(n); // TopAcc capacity guard; candidates ≤ n anyway
         let mut stats = SearchStats::default();
-        if !self.cfg.prune {
-            // Exact fallback: the same full scan `Factored::top_k` runs.
-            stats.cells_scanned = self.cells.len() as u64;
-            stats.scored = n.saturating_sub(1) as u64;
-            return (self.store.top_k(i, k), stats);
-        }
+        let u = match view {
+            Some(u) if self.cfg.prune => u,
+            _ => {
+                // Exact fallback: the same full scan `Factored::top_k`
+                // runs (`select_top_k` is its selection, verbatim).
+                stats.cells_scanned = self.cells.len() as u64;
+                let excl = exclude.filter(|&e| e < n);
+                stats.scored = (n - excl.map_or(0, |_| 1)) as u64;
+                let mut row = vec![0.0; n];
+                kernel::gemv_nt(li, &self.store.right_t, &mut row);
+                return (index::select_top_k(&row, excl.unwrap_or(n), k), stats);
+            }
+        };
         if k == 0 {
             return (Vec::new(), stats);
         }
-        let mut u = vec![0.0; self.emb.dim()];
-        self.emb.query_into(i, &mut u);
-        let unorm = dot(&u, &u).sqrt();
+        let unorm = dot(u, u).sqrt();
         // The f32 fast scan keeps an f32 query view and an extra margin
         // coefficient; both are None on the default f64 path.
-        let uq = self.fast.as_ref().map(|_| to_f32(&u));
+        let uq = self.fast.as_ref().map(|_| to_f32(u));
         let coeff = self.fast.as_ref().map(|fs| f32_margin_coeff(fs.dim));
         // Per-cell caps, scanned best-first. The relative slack (scaled
         // to the magnitudes in play, not the possibly-cancelling cap
@@ -379,10 +428,10 @@ impl IvfIndex {
                         if c32.is_finite() {
                             c32 + coeff.unwrap() * unorm * cnorm
                         } else {
-                            dot(&u, &cell.centroid)
+                            dot(u, &cell.centroid)
                         }
                     }
-                    _ => dot(&u, &cell.centroid),
+                    _ => dot(u, &cell.centroid),
                 };
                 let raw = center + unorm * cell.radius + self.emb.gap;
                 let slack =
@@ -391,7 +440,6 @@ impl IvfIndex {
             })
             .collect();
         order.sort_by(|a, b| b.0.total_cmp(&a.0));
-        let li = self.store.left.row(i);
         let mut best = TopAcc::new(k);
         for (pos, &(bound, c)) in order.iter().enumerate() {
             // Strictly below the kth score only: a cell whose cap *ties*
@@ -424,7 +472,7 @@ impl IvfIndex {
                     let ns = &fs.norms[c];
                     for (t, &j) in self.cells[c].members.iter().enumerate() {
                         let j = j as usize;
-                        if j == i {
+                        if Some(j) == exclude {
                             continue;
                         }
                         let s32 = dot_f32(uq, &block[t * fs.dim..(t + 1) * fs.dim]) as f64;
@@ -439,7 +487,7 @@ impl IvfIndex {
                 _ => {
                     for &j in &self.cells[c].members {
                         let j = j as usize;
-                        if j == i {
+                        if Some(j) == exclude {
                             continue;
                         }
                         stats.scored += 1;
@@ -468,14 +516,34 @@ impl IvfIndex {
     /// a grown asymmetric store can exceed the build-time one, and the
     /// cap must stay valid until the drift rebuild re-canonicalizes.
     pub fn extended(&self, store: Arc<Factored>, left: &Mat, right: &Mat) -> IvfIndex {
+        self.extended_with_gap_rows(store, left, right, left, right)
+    }
+
+    /// [`Self::extended`] with the residual accounting decoupled from
+    /// the appended rows — the shard path. A broadcast insert hands
+    /// every shard the **full** batch's factor rows (`gap_left`/
+    /// `gap_right`) so each slice's cross-Grams — and therefore its
+    /// pruning `gap` — track the *global* grown store exactly, while
+    /// only the shard's own rows (`left`/`right`) are embedded and
+    /// appended to cells. Unsharded inserts are the special case where
+    /// both row sets coincide.
+    pub fn extended_with_gap_rows(
+        &self,
+        store: Arc<Factored>,
+        left: &Mat,
+        right: &Mat,
+        gap_left: &Mat,
+        gap_right: &Mat,
+    ) -> IvfIndex {
         assert_eq!(
             store.n(),
             self.store.n() + left.rows,
             "grown store does not match the appended rows"
         );
         assert_eq!(left.rows, right.rows, "appended row-count mismatch");
+        assert_eq!(gap_left.rows, gap_right.rows, "gap row-count mismatch");
         let mut emb = self.emb.clone();
-        emb.extend_gap(left, right);
+        emb.extend_gap(gap_left, gap_right);
         let mut cells = self.cells.clone();
         let mut fast = self.fast.clone();
         let new_rows = emb.embed_rows(left, right);

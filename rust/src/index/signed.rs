@@ -227,6 +227,28 @@ impl SignedEmbedding {
         }
     }
 
+    /// Slice of this embedding covering only the listed database rows —
+    /// the shard-local view. The frozen map, the cross-Grams, the
+    /// truncation mass and therefore `gap` are the **global** ones,
+    /// deliberately: a per-slice canonicalization would bound only the
+    /// slice's own asymmetric residual, which is not a valid
+    /// Cauchy–Schwarz cap for query documents living on other shards.
+    /// With the global maps and gap, a shard's pruned scan over its
+    /// slice is lossless for any query row of the global store.
+    pub fn select(&self, ids: &[usize]) -> SignedEmbedding {
+        SignedEmbedding {
+            emb: self.emb.select_rows(ids),
+            split: self.split,
+            map_left: self.map_left.clone(),
+            map_right: self.map_right.clone(),
+            gll: self.gll.clone(),
+            glr: self.glr.clone(),
+            grr: self.grr.clone(),
+            trunc: self.trunc,
+            gap: self.gap,
+        }
+    }
+
     /// Fold appended factor rows into the residual accounting: the
     /// factor cross-Grams grow exactly (Gᵀ sums are additive over rows),
     /// so the grown store's antisymmetric Frobenius residual is

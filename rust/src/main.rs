@@ -11,7 +11,7 @@
 //! Workloads: psd | twitter | stsb | mrpc | rte | coref
 
 use simmat::approx::{self, SmsConfig};
-use simmat::coordinator::{Method, Query, Response, SimilarityService};
+use simmat::coordinator::{Method, Query, Response, ServiceConfig};
 use simmat::data::{CorefSpec, CorpusPreset, GluePreset};
 use simmat::linalg::{eigh, Mat};
 use simmat::runtime::{default_artifacts_dir, shared_runtime, Runtime};
@@ -90,8 +90,7 @@ fn main() -> anyhow::Result<()> {
             let n = k.rows;
             let s = args.get_usize("s", n / 6);
             let oracle = DenseOracle::new(k.clone());
-            let svc = SimilarityService::build(&oracle, method, s, 64, &mut rng)
-                .map_err(|e| anyhow::anyhow!(e))?;
+            let svc = ServiceConfig::new(method, s).batch(64).build(&oracle, &mut rng)?;
             println!(
                 "{} on '{workload}' (n={n}, s={s}): {} oracle calls, {:.1}% saved, {:.2}s build",
                 method.name(),
@@ -138,14 +137,9 @@ fn main() -> anyhow::Result<()> {
             let k = load_workload(workload, scale)?;
             let n = k.rows;
             let oracle = DenseOracle::new(k);
-            let svc = SimilarityService::build(
-                &oracle,
-                method_of(args.get_str("method", "SiCUR"))?,
-                n / 6,
-                64,
-                &mut rng,
-            )
-            .map_err(|e| anyhow::anyhow!(e))?;
+            let svc = ServiceConfig::new(method_of(args.get_str("method", "SiCUR"))?, n / 6)
+                .batch(64)
+                .build(&oracle, &mut rng)?;
             let t0 = std::time::Instant::now();
             let mut acc = 0.0;
             for q in 0..queries {

@@ -133,6 +133,20 @@ where
     })
 }
 
+/// One scoped task per index in `0..n`, results in index order — the
+/// scatter half of the shard router's scatter-gather. Unlike the
+/// work-splitting helpers this always runs one task *per index*
+/// (`split(n, n, 1)` yields singleton ranges): a shard fan-out wants one
+/// in-flight request per shard, not balanced chunks. Inherits
+/// `map_chunks`' pin propagation and panic re-raising.
+pub fn fan_out<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    map_chunks(n, n, 1, |r| f(r.start))
+}
+
 /// Fork-join over disjoint mutable row-chunks of `data` (`width` elements
 /// per row): `f` receives `(first_row, rows_slice)` for each chunk. Chunk
 /// starts are aligned to `align` rows. Runs inline when a single chunk
@@ -237,6 +251,21 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fan_out_runs_one_task_per_index_in_order() {
+        let live = AtomicUsize::new(0);
+        let out = fan_out(5, |i| {
+            live.fetch_add(1, Ordering::Relaxed);
+            i * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30, 40]);
+        assert_eq!(live.load(Ordering::Relaxed), 5);
+        // A worker pin narrows the work-splitting helpers but not the
+        // fan-out width — one in-flight task per shard either way.
+        with_workers(1, || assert_eq!(fan_out(3, |i| i), vec![0, 1, 2]));
+        assert_eq!(fan_out(0, |i| i), Vec::<usize>::new());
+    }
 
     #[test]
     fn split_covers_and_aligns() {

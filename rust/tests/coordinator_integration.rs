@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use simmat::coordinator::{
-    schedule, BatchService, Method, Query, Response, SampleMode, SimilarityService,
+    schedule, BatchService, Method, Query, Response, SampleMode, ServiceConfig,
 };
 use simmat::index::IvfConfig;
 use simmat::linalg::Mat;
@@ -94,7 +94,7 @@ fn service_methods_rank_quality_on_indefinite_matrix() {
     let err_of = |method: Method, rng: &mut Rng| {
         let mut total = 0.0;
         for _ in 0..3 {
-            let svc = SimilarityService::build(&o, method, 36, 64, rng).unwrap();
+            let svc = ServiceConfig::new(method, 36).batch(64).build(&o, rng).unwrap();
             total += simmat::approx::rel_fro_error(&k, &svc.factored()) / 3.0;
         }
         total
@@ -116,7 +116,8 @@ fn similarity_service_concurrent_clients_exact_responses_and_metrics() {
     let mut rng = Rng::new(21);
     let n = 80;
     let o = NearPsdOracle::new(n, 8, 0.4, &mut rng);
-    let svc = Arc::new(SimilarityService::build(&o, Method::SmsNystrom, 20, 64, &mut rng).unwrap());
+    let svc =
+        Arc::new(ServiceConfig::new(Method::SmsNystrom, 20).batch(64).build(&o, &mut rng).unwrap());
     let reference = svc.factored().clone();
     let mut handles = Vec::new();
     for t in 0..THREADS {
@@ -157,8 +158,9 @@ fn indexed_topk_under_concurrent_clients_counts_and_answers_exactly() {
     let mut rng = Rng::new(31);
     let n = 90;
     let o = NearPsdOracle::new(n, 8, 0.3, &mut rng);
-    let svc = Arc::new(SimilarityService::build(&o, Method::Nystrom, 20, 64, &mut rng).unwrap());
-    svc.enable_index(IvfConfig::default()).unwrap();
+    let svc =
+        Arc::new(ServiceConfig::new(Method::Nystrom, 20).batch(64).build(&o, &mut rng).unwrap());
+    svc.try_enable_index(IvfConfig::default()).unwrap();
     let reference = svc.factored();
     let cells = svc.index().unwrap().cells() as u64;
     let mut handles = Vec::new();
@@ -241,7 +243,7 @@ fn sublinear_build_invariant_holds_for_every_pool_size() {
     for w in [1, 2, 8] {
         let calls = simmat::util::pool::with_workers(w, || {
             let mut rng = Rng::new(9);
-            let svc = SimilarityService::build(&o, Method::SiCur, 10, 32, &mut rng).unwrap();
+            let svc = ServiceConfig::new(Method::SiCur, 10).batch(32).build(&o, &mut rng).unwrap();
             svc.stats.oracle_calls
         });
         counts.push(calls);
@@ -268,7 +270,7 @@ fn batched_build_metrics_exact_after_gather_dedup() {
     for w in [1, 2, 8] {
         let svc = simmat::util::pool::with_workers(w, || {
             let mut rng = Rng::new(17);
-            SimilarityService::build(&o, Method::SmsNystrom, s1, 32, &mut rng).unwrap()
+            ServiceConfig::new(Method::SmsNystrom, s1).batch(32).build(&o, &mut rng).unwrap()
         });
         assert_eq!(svc.stats.oracle_calls, want, "workers={w}");
         assert_eq!(

@@ -13,7 +13,7 @@
 
 use simmat::approx::ApproxError;
 use simmat::coordinator::{
-    Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig,
+    Method, Query, RebuildPolicy, Response, ServiceConfig, ServiceError, StreamConfig,
 };
 use simmat::index::{IvfConfig, IvfIndex};
 use simmat::sim::synthetic::NearPsdOracle;
@@ -47,7 +47,7 @@ fn transient_faults_yield_bit_identical_builds_for_every_method() {
     for method in Method::ALL {
         let plan = method.sample_plan(64, 10, &mut Rng::new(41));
         let (clean, _) = method
-            .build_with_plan(&base, &plan, &mut Rng::new(42))
+            .try_build_with_plan(&base, &plan, &mut Rng::new(42))
             .unwrap_or_else(|e| panic!("{} clean build: {e}", method.name()));
         for workers in [1usize, 4] {
             pool::with_workers(workers, || {
@@ -82,7 +82,7 @@ fn ivf_topk_is_identical_under_transient_faults() {
     let base = NearPsdOracle::new(72, 8, 0.2, &mut rng);
     let plan = Method::Nystrom.sample_plan(72, 12, &mut Rng::new(46));
     let (clean, _) = Method::Nystrom
-        .build_with_plan(&base, &plan, &mut Rng::new(47))
+        .try_build_with_plan(&base, &plan, &mut Rng::new(47))
         .unwrap();
     for workers in [1usize, 4] {
         pool::with_workers(workers, || {
@@ -122,7 +122,10 @@ fn persistent_outage_during_rebuild_serves_stale_snapshot() {
             min_inserts: 1,
         },
     };
-    let svc = SimilarityService::build_streaming(&prefix, Method::Nystrom, 8, 32, cfg, &mut rng)
+    let svc = ServiceConfig::new(Method::Nystrom, 8)
+        .batch(32)
+        .stream(cfg)
+        .build(&prefix, &mut rng)
         .unwrap();
     // Rate-0 transient mode: the wrapper only counts pairs; the outage
     // switch is the sole fault source. The insert spends 8 docs x 8
@@ -131,7 +134,7 @@ fn persistent_outage_during_rebuild_serves_stale_snapshot() {
     let flaky = FlakyOracle::new(&full, FaultMode::Transient { rate: 0.0 }, 0, 0);
     flaky.outage_after_pairs(64 + 16);
     let ids: Vec<usize> = (40..48).collect();
-    let report = svc.insert_batch(&flaky, &ids).unwrap();
+    let report = svc.try_insert_batch(&flaky, &ids).unwrap();
     assert_eq!(report.inserted, 8);
     assert_eq!(report.oracle_calls, 64);
     assert!(report.drift.is_some(), "the probe ran before the outage");
@@ -153,8 +156,11 @@ fn persistent_outage_during_rebuild_serves_stale_snapshot() {
     assert!(health.contains("degraded_epochs=1"), "{health}");
     // With the backend still dark, a further insert aborts cleanly and
     // leaves the store untouched.
-    let err = svc.insert(&flaky, 48).unwrap_err();
-    assert!(err.contains("insert aborted"), "{err}");
+    let err = svc.try_insert(&flaky, 48).unwrap_err();
+    assert!(
+        matches!(err, ServiceError::Approx(ApproxError::Oracle(_))),
+        "the aborted insert must surface the oracle fault: {err}"
+    );
     assert_eq!(svc.n(), 48);
     assert_eq!(svc.metrics.oracle_failures.load(Relaxed), 2);
 }
@@ -174,13 +180,16 @@ fn probe_outage_skips_the_epoch() {
             min_inserts: 1,
         },
     };
-    let svc = SimilarityService::build_streaming(&prefix, Method::Nystrom, 8, 32, cfg, &mut rng)
+    let svc = ServiceConfig::new(Method::Nystrom, 8)
+        .batch(32)
+        .stream(cfg)
+        .build(&prefix, &mut rng)
         .unwrap();
     let flaky = FlakyOracle::new(&full, FaultMode::Transient { rate: 0.0 }, 0, 0);
     // Die halfway through the probe: extension (64 pairs) succeeds.
     flaky.outage_after_pairs(64 + 8);
     let ids: Vec<usize> = (40..48).collect();
-    let report = svc.insert_batch(&flaky, &ids).unwrap();
+    let report = svc.try_insert_batch(&flaky, &ids).unwrap();
     assert_eq!(report.inserted, 8);
     assert!(report.drift.is_none(), "failed probe must not report drift");
     assert!(!report.rebuilt);
@@ -209,7 +218,7 @@ fn nan_quarantine_rejects_corrupt_similarities() {
     // Same schedule, but the corruption heals after one failure: the
     // quarantined sub-batches are re-bought and the build is exact.
     let (clean, _) = Method::Nystrom
-        .build_with_plan(&base, &plan, &mut Rng::new(52))
+        .try_build_with_plan(&base, &plan, &mut Rng::new(52))
         .unwrap();
     let flaky2 = FlakyOracle::new(&base, FaultMode::CorruptNan { rate: 0.2 }, 9, 1);
     let ft2 = FaultTolerantOracle::new(&flaky2, RetryConfig::default());

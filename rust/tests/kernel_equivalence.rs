@@ -227,7 +227,7 @@ fn fast_scan_top_k_is_bit_identical_for_all_methods() {
         ..IvfConfig::default()
     };
     for method in Method::ALL {
-        let f = Arc::new(method.build(&o, 24, &mut rng).unwrap());
+        let f = Arc::new(method.try_build(&o, 24, &mut rng).unwrap());
         let fast = IvfIndex::build(f.clone(), cfg).unwrap();
         for w in [1, 4] {
             pool::with_workers(w, || {

@@ -3,7 +3,7 @@
 //! same code paths as the benches but on tiny inputs.
 
 use simmat::approx::{self, SmsConfig};
-use simmat::coordinator::{Method, Query, Response, SimilarityService};
+use simmat::coordinator::{Method, Query, Response, ServiceConfig};
 use simmat::data::{self, CorpusPreset, CorefSpec};
 use simmat::runtime::{shared_runtime_subset, CorefPjrtOracle, WmdPjrtOracle};
 use simmat::sim::{CountingOracle, DenseOracle, SimOracle, Symmetrized};
@@ -107,7 +107,10 @@ fn similarity_service_over_pjrt_oracle() {
     );
     let oracle = CorefPjrtOracle::new(rt, corpus.mentions.clone()).unwrap();
     let svc =
-        SimilarityService::build(&oracle, Method::SiCur, oracle.n() / 5, 64, &mut rng).unwrap();
+        ServiceConfig::new(Method::SiCur, oracle.n() / 5)
+            .batch(64)
+            .build(&oracle, &mut rng)
+            .unwrap();
     assert!(svc.stats.savings() > 0.3, "savings {}", svc.stats.savings());
     // Entries served from factors agree with direct factored access.
     match svc.query(&Query::Entry(0, 1)).unwrap() {

@@ -1,0 +1,248 @@
+//! Transport/sharding conformance: the pinned invariant of the sharded
+//! serving tier. For every `Query` variant, a fleet of S shard workers
+//! behind any in-process transport answers **bit-identically** to a
+//! single-shard service over the same build — same oracle, same rng
+//! seed, therefore the same global factored store. The suite runs the
+//! full matrix: direct calls vs the channel transport, S ∈ {1, 2, 3}
+//! (override with `SIMMAT_SHARDS=1,3`), index off and on, before and
+//! after streaming inserts and a policy-triggered rebuild. Degradation
+//! is pinned too: a dead oracle or a downed worker fails the affected
+//! rows with a typed error while the rest of the fleet keeps serving.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use simmat::coordinator::{
+    connect, Method, Query, RebuildPolicy, Reply, Request, Response, RouteError, ServiceConfig,
+    ServiceError, ShardedService, SimilarityService, StreamConfig, TransportKind,
+};
+use simmat::index::IvfConfig;
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{FaultMode, FlakyOracle, PrefixOracle};
+use simmat::util::rng::Rng;
+
+const SEED: u64 = 77;
+
+/// Shard counts under test: all of {1, 2, 3} by default, or the
+/// comma-separated list in `SIMMAT_SHARDS` (the CI matrix leg).
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("SIMMAT_SHARDS") {
+        Ok(v) => v
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| t.trim().parse().expect("SIMMAT_SHARDS must list shard counts"))
+            .collect(),
+        Err(_) => vec![1, 2, 3],
+    }
+}
+
+fn config(index: bool) -> ServiceConfig {
+    let cfg = ServiceConfig::new(Method::SmsNystrom, 10).batch(32);
+    if index {
+        cfg.index(IvfConfig::default())
+    } else {
+        cfg
+    }
+}
+
+/// One of every `Query` variant, with the by-value operands fetched
+/// from the reference service so both sides score the same payload.
+fn catalogue(svc: &SimilarityService, n: usize) -> Vec<Query> {
+    let vq = match svc.query(&Query::Vectors(vec![5])).unwrap() {
+        Response::Vectors(mut v) => v.pop().unwrap(),
+        other => panic!("unexpected response {other:?}"),
+    };
+    vec![
+        Query::Entry(0, n - 1),
+        Query::Entry(7, 7),
+        Query::Row(4),
+        Query::Row(n - 1),
+        Query::TopK(3, 5),
+        // Oversized k must clamp identically on both sides.
+        Query::TopK(n - 1, 4 * n),
+        Query::TopKBatch(vec![0, 9, 17, n - 2], 4),
+        Query::Embed(6),
+        Query::Vectors(vec![2, 11, n - 1]),
+        Query::TopKVec(vec![vq.clone()], 6),
+        Query::ScoreRow(vq.clone()),
+        Query::EntryVec(vq, 13),
+    ]
+}
+
+/// Compare two responses for bit-identity. `RankedShard` compares lists
+/// only: the scan counters are metrics, not results, and legitimately
+/// depend on how the cells are cut across shards.
+fn assert_same(want: Response, got: Response, ctx: &str) {
+    match (want, got) {
+        (
+            Response::RankedShard { lists: a, .. },
+            Response::RankedShard { lists: b, .. },
+        ) => assert_eq!(a, b, "{ctx}"),
+        (want, got) => assert_eq!(want, got, "{ctx}"),
+    }
+}
+
+#[test]
+fn every_variant_bit_identical_across_transports_and_shard_counts() {
+    let n = 30;
+    for index in [false, true] {
+        let mut rng = Rng::new(3);
+        let o = NearPsdOracle::new(n, 6, 0.3, &mut rng);
+        let svc = config(index).build(&o, &mut Rng::new(SEED)).unwrap();
+        let queries = catalogue(&svc, n);
+        for shards in shard_counts() {
+            for kind in [TransportKind::Direct, TransportKind::Channel] {
+                let fleet =
+                    ShardedService::build(&o, &config(index), shards, kind, &mut Rng::new(SEED))
+                        .unwrap();
+                for q in &queries {
+                    let want = svc.query(q).unwrap();
+                    let got = fleet.query(q).unwrap();
+                    let ctx =
+                        format!("query {q:?} diverged (index={index}, shards={shards}, {kind:?})");
+                    assert_same(want, got, &ctx);
+                }
+                // Out-of-range ids are typed identically — and rejected
+                // before any scatter reaches a worker.
+                let before = fleet.metrics.shard_calls.load(Relaxed);
+                let err = fleet.query(&Query::Entry(0, n)).unwrap_err();
+                assert!(
+                    matches!(err, ServiceError::Route(RouteError::OutOfRange { index, n: m })
+                        if index == n && m == n),
+                    "expected a typed range error, got: {err}"
+                );
+                assert_eq!(fleet.metrics.shard_calls.load(Relaxed), before);
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_inserts_and_rebuild_stay_bit_identical() {
+    let n = 36;
+    let n0 = 28;
+    let mut rng = Rng::new(5);
+    let o = NearPsdOracle::new(n, 6, 0.3, &mut rng);
+    let prefix = PrefixOracle::new(&o, n0);
+    for index in [false, true] {
+        let cfg = config(index).stream(StreamConfig {
+            probe_pairs: 8,
+            epoch: 4,
+            // Any measured drift rebuilds once an insert landed, so the
+            // second batch below exercises the full rebuild path.
+            policy: RebuildPolicy { drift_threshold: -1.0, min_inserts: 1 },
+        });
+        for shards in shard_counts() {
+            let svc = cfg.build(&prefix, &mut Rng::new(SEED)).unwrap();
+            let fleet = ShardedService::build(
+                &prefix,
+                &cfg,
+                shards,
+                TransportKind::Channel,
+                &mut Rng::new(SEED),
+            )
+            .unwrap();
+            // First batch: below the drift epoch, no probe yet.
+            let a: Vec<usize> = (n0..n0 + 2).collect();
+            let ra = svc.try_insert_batch(&o, &a).unwrap();
+            let fa = fleet.try_insert_batch(&o, &a).unwrap();
+            assert_eq!((ra.drift, ra.rebuilt), (fa.drift, fa.rebuilt));
+            assert_eq!(ra.oracle_calls, fa.oracle_calls, "shards={shards}");
+            assert!(!fa.rebuilt);
+            // Second batch trips the probe and the always-rebuild
+            // policy; both sides consume identical rng/oracle streams,
+            // so the drift estimates and rebuilt stores are bit-equal.
+            let b: Vec<usize> = (n0 + 2..n0 + 4).collect();
+            let rb = svc.try_insert_batch(&o, &b).unwrap();
+            let fb = fleet.try_insert_batch(&o, &b).unwrap();
+            assert_eq!(rb.drift, fb.drift, "index={index}, shards={shards}");
+            assert!(rb.rebuilt && fb.rebuilt, "the policy must have fired on both sides");
+            assert_eq!(fleet.n(), n0 + 4);
+            assert_eq!(fleet.epoch(), 3, "two insert commits plus the rebuild commit");
+            for q in [
+                Query::Entry(1, n0 + 3),
+                Query::Row(n0 + 2),
+                Query::TopK(n0 + 1, 6),
+                Query::TopKBatch(vec![0, n0 + 3], 5),
+                Query::Embed(n0),
+            ] {
+                let ctx = format!(
+                    "post-rebuild query {q:?} diverged (index={index}, shards={shards})"
+                );
+                assert_same(svc.query(&q).unwrap(), fleet.query(&q).unwrap(), &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn snapshot_behind_channel_transport_matches_direct_calls() {
+    let mut rng = Rng::new(7);
+    let o = NearPsdOracle::new(24, 6, 0.3, &mut rng);
+    let svc = config(true).build(&o, &mut Rng::new(11)).unwrap();
+    let snap = Arc::new(svc.snapshot());
+    let epoch = svc.epoch();
+    let direct = connect(TransportKind::Direct, snap.clone());
+    let channel = connect(TransportKind::Channel, snap);
+    for q in [
+        Query::Entry(0, 5),
+        Query::Row(3),
+        Query::TopK(2, 4),
+        Query::TopKBatch(vec![1, 8], 3),
+        Query::Embed(9),
+    ] {
+        let want = Reply::new(epoch, svc.query(&q).unwrap());
+        assert_eq!(direct.call(Request::new(epoch, q.clone())).unwrap(), want);
+        assert_eq!(channel.call(Request::new(epoch, q.clone())).unwrap(), want);
+    }
+    // The epoch fence rejects deterministically, identically over both
+    // hops, and advertises the serving epoch for the router's retry.
+    let stale = Request::new(epoch + 3, Query::Entry(0, 0));
+    let a = direct.call(stale.clone()).unwrap();
+    let b = channel.call(stale).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.epoch, epoch);
+    match a.response {
+        Response::Error(msg) => assert!(msg.contains("epoch mismatch"), "{msg}"),
+        other => panic!("the fence must answer with a structured error, got {other:?}"),
+    }
+}
+
+#[test]
+fn shard_outage_degrades_rows_not_the_service() {
+    let mut rng = Rng::new(13);
+    let o = NearPsdOracle::new(24, 6, 0.3, &mut rng);
+    let prefix = PrefixOracle::new(&o, 20);
+    let cfg = ServiceConfig::new(Method::Nystrom, 8).batch(32);
+    let fleet =
+        ShardedService::build(&prefix, &cfg, 3, TransportKind::Channel, &mut Rng::new(21)).unwrap();
+    // A backend that dies on its first evaluation: the gather aborts
+    // with a typed oracle error and nothing commits anywhere.
+    let dead = FlakyOracle::new(&o, FaultMode::Transient { rate: 0.0 }, 0, 0);
+    dead.outage_after_pairs(0);
+    let err = fleet.try_insert(&dead, 20).unwrap_err();
+    assert!(matches!(err, ServiceError::Approx(_)), "gather failure must stay typed: {err}");
+    assert_eq!(fleet.n(), 20);
+    assert_eq!(fleet.epoch(), 0, "a failed gather must not advance the fleet epoch");
+    // One worker goes dark: queries owned by live shards keep serving,
+    // queries touching shard 1 fail with a typed shard error.
+    fleet.worker(1).set_available(false);
+    match fleet.query(&Query::Embed(0)).unwrap() {
+        Response::Vector(_) => {}
+        other => panic!("live-owner query must serve: {other:?}"),
+    }
+    let err = fleet.query(&Query::Embed(1)).unwrap_err();
+    assert!(matches!(err, ServiceError::Shard { shard: 1, .. }), "{err}");
+    assert!(fleet.query(&Query::Row(0)).is_err(), "a full-row scatter touches shard 1");
+    // Inserts refuse up front — a commit can never be half-applied.
+    let err = fleet.try_insert(&o, 20).unwrap_err();
+    assert!(matches!(err, ServiceError::Shard { shard: 1, .. }), "{err}");
+    assert_eq!(fleet.n(), 20);
+    assert!(fleet.metrics.shard_failures.load(Relaxed) >= 2);
+    // Healed and reset, the fleet serves and grows again.
+    fleet.worker(1).set_available(true);
+    fleet.reset_shard(1);
+    fleet.try_insert(&o, 20).unwrap();
+    assert_eq!(fleet.n(), 21);
+    assert!(matches!(fleet.query(&Query::Entry(20, 1)).unwrap(), Response::Scalar(_)));
+}

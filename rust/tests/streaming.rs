@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use simmat::approx::{rel_fro_error, LandmarkPlan};
 use simmat::coordinator::{
-    Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig,
+    Method, Query, RebuildPolicy, Response, ServiceConfig, StreamConfig,
 };
 use simmat::sim::synthetic::NearPsdOracle;
 use simmat::sim::{CountingOracle, PrefixOracle, SimOracle};
@@ -41,7 +41,7 @@ fn insert_cost_and_agreement_per_method() {
         let mut build_rng = Rng::new(200);
         let plan = method.sample_plan(n0, s1, &mut build_rng);
         let prefix = PrefixOracle::new(&full, n0);
-        let (mut f, ext) = method.build_with_plan(&prefix, &plan, &mut build_rng).unwrap();
+        let (mut f, ext) = method.try_build_with_plan(&prefix, &plan, &mut build_rng).unwrap();
         assert_eq!(
             ext.per_insert_calls(),
             documented_insert_calls(method, &plan),
@@ -62,7 +62,7 @@ fn insert_cost_and_agreement_per_method() {
         // Extended-then-queried must agree with a from-scratch build on
         // the grown corpus using the same landmark plan.
         let mut scratch_rng = Rng::new(300);
-        let (f2, _) = method.build_with_plan(&full, &plan, &mut scratch_rng).unwrap();
+        let (f2, _) = method.try_build_with_plan(&full, &plan, &mut scratch_rng).unwrap();
         match method {
             Method::StaCurShared | Method::StaCurIndependent => {
                 // StaCUR freezes the n/s factor and the calibration
@@ -99,11 +99,14 @@ fn service_insert_budget_is_exact_for_every_method() {
             epoch: usize::MAX, // no probes: pin the pure insert cost
             policy: RebuildPolicy::default(),
         };
-        let svc = SimilarityService::build_streaming(&prefix, method, 8, 32, cfg, &mut rng)
+        let svc = ServiceConfig::new(method, 8)
+            .batch(32)
+            .stream(cfg)
+            .build(&prefix, &mut rng)
             .unwrap_or_else(|e| panic!("{} failed: {e}", method.name()));
         let counter = CountingOracle::new(&full);
         let ids: Vec<usize> = (50..60).collect();
-        let report = svc.insert_batch(&counter, &ids).unwrap();
+        let report = svc.try_insert_batch(&counter, &ids).unwrap();
         let want = (ids.len() * svc.per_insert_calls()) as u64;
         assert_eq!(report.oracle_calls, want, "{}", method.name());
         assert_eq!(counter.calls(), want, "{}: no hidden oracle traffic", method.name());
@@ -138,7 +141,10 @@ fn drift_rebuild_fires_and_improves_accuracy() {
             min_inserts: 8,
         },
     };
-    let svc = SimilarityService::build_streaming(&prefix, Method::SmsNystrom, s1, 64, cfg, &mut rng)
+    let svc = ServiceConfig::new(Method::SmsNystrom, s1)
+        .batch(64)
+        .stream(cfg)
+        .build(&prefix, &mut rng)
         .unwrap();
     let mut peak_before_rebuild = 0.0f64;
     let mut rebuilt = false;
@@ -146,7 +152,7 @@ fn drift_rebuild_fires_and_improves_accuracy() {
     while id < n {
         let hi = (id + 5).min(n);
         let ids: Vec<usize> = (id..hi).collect();
-        let report = svc.insert_batch(full, &ids).unwrap();
+        let report = svc.try_insert_batch(full, &ids).unwrap();
         if let Some(d) = report.drift {
             if !rebuilt {
                 peak_before_rebuild = peak_before_rebuild.max(d);
@@ -170,17 +176,13 @@ fn drift_rebuild_fires_and_improves_accuracy() {
         epoch: usize::MAX,
         policy: RebuildPolicy::default(),
     };
-    let frozen = SimilarityService::build_streaming(
-        &prefix,
-        Method::SmsNystrom,
-        s1,
-        64,
-        frozen_cfg,
-        &mut rng2,
-    )
-    .unwrap();
+    let frozen = ServiceConfig::new(Method::SmsNystrom, s1)
+        .batch(64)
+        .stream(frozen_cfg)
+        .build(&prefix, &mut rng2)
+        .unwrap();
     let ids: Vec<usize> = (n0..n).collect();
-    frozen.insert_batch(full, &ids).unwrap();
+    frozen.try_insert_batch(full, &ids).unwrap();
     let err_frozen = rel_fro_error(&k, &frozen.factored());
     assert!(
         err_rebuilt < err_frozen,
@@ -208,7 +210,11 @@ fn queries_keep_flowing_during_inserts_and_rebuilds() {
         },
     };
     let svc = Arc::new(
-        SimilarityService::build_streaming(&prefix, Method::SiCur, s1, 64, cfg, &mut rng).unwrap(),
+        ServiceConfig::new(Method::SiCur, s1)
+            .batch(64)
+            .stream(cfg)
+            .build(&prefix, &mut rng)
+            .unwrap(),
     );
     let stop = Arc::new(AtomicBool::new(false));
     let mut readers = Vec::new();
@@ -233,7 +239,7 @@ fn queries_keep_flowing_during_inserts_and_rebuilds() {
     while id < n {
         let hi = (id + 4).min(n);
         let ids: Vec<usize> = (id..hi).collect();
-        svc.insert_batch(full, &ids).unwrap();
+        svc.try_insert_batch(full, &ids).unwrap();
         id = hi;
     }
     stop.store(true, Relaxed);

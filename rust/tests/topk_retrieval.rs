@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use simmat::approx::Factored;
 use simmat::coordinator::{
-    Method, Query, RebuildPolicy, Response, SimilarityService, StreamConfig,
+    Method, Query, RebuildPolicy, Response, ServiceConfig, StreamConfig,
 };
 use simmat::index::{select_top_k, IvfConfig, IvfIndex};
 use simmat::linalg::Mat;
@@ -32,7 +32,7 @@ fn pruning_disabled_is_bit_identical_to_exact_scan_for_all_methods() {
         ..IvfConfig::default()
     };
     for method in Method::ALL {
-        let f = Arc::new(method.build(&o, 16, &mut rng).unwrap());
+        let f = Arc::new(method.try_build(&o, 16, &mut rng).unwrap());
         let idx = IvfIndex::build(f.clone(), cfg).unwrap();
         for i in (0..80).step_by(3) {
             for k in [1, 5, 17] {
@@ -55,7 +55,7 @@ fn pruned_search_loses_nothing_for_all_methods() {
         let n = 50 + rng.below(50);
         let o = NearPsdOracle::new(n, 6, 0.4, rng);
         for method in Method::ALL {
-            let f = Arc::new(method.build(&o, 12, rng).unwrap());
+            let f = Arc::new(method.try_build(&o, 12, rng).unwrap());
             let idx = IvfIndex::build(f.clone(), IvfConfig::default()).unwrap();
             for i in (0..n).step_by(11) {
                 assert_eq!(idx.top_k(i, 10), f.top_k(i, 10), "{} q{i}", method.name());
@@ -81,7 +81,7 @@ fn recall_at_10_vs_exact_oracle_scan_on_synthetic_workloads() {
     for (name, oracle) in workloads {
         let n = oracle.n();
         let k_exact = oracle.materialize();
-        let f = Arc::new(Method::SmsNystrom.build(oracle, 100, &mut rng).unwrap());
+        let f = Arc::new(Method::SmsNystrom.try_build(oracle, 100, &mut rng).unwrap());
         let idx = IvfIndex::build(f, IvfConfig::default()).unwrap();
         let queries: Vec<usize> = (0..n).step_by(9).collect();
         let mut recall = 0.0;
@@ -106,8 +106,11 @@ fn rerank_improves_head_and_returns_exact_scores() {
     let o = NearPsdOracle::new(200, 6, 0.1, &mut rng);
     let k_exact = o.dense().clone();
     // A deliberately coarse store so the index alone makes head mistakes.
-    let svc = SimilarityService::build(&o, Method::Nystrom, 14, 64, &mut rng).unwrap();
-    svc.enable_index(IvfConfig::default()).unwrap();
+    let svc = ServiceConfig::new(Method::Nystrom, 14)
+        .batch(64)
+        .build(&o, &mut rng)
+        .unwrap();
+    svc.try_enable_index(IvfConfig::default()).unwrap();
     svc.set_rerank(40);
     let queries: Vec<usize> = (0..200).step_by(17).collect();
     let plain = match svc.query(&Query::TopKBatch(queries.clone(), 10)).unwrap() {
@@ -156,10 +159,13 @@ fn index_stays_consistent_across_rebuild_swap_under_concurrent_readers() {
         },
     };
     let svc = Arc::new(
-        SimilarityService::build_streaming(&prefix, Method::SmsNystrom, s1, 64, cfg, &mut rng)
+        ServiceConfig::new(Method::SmsNystrom, s1)
+            .batch(64)
+            .stream(cfg)
+            .build(&prefix, &mut rng)
             .unwrap(),
     );
-    svc.enable_index(IvfConfig::default()).unwrap();
+    svc.try_enable_index(IvfConfig::default()).unwrap();
     let stop = Arc::new(AtomicBool::new(false));
     let mut readers = Vec::new();
     for t in 0..4u64 {
@@ -189,7 +195,7 @@ fn index_stays_consistent_across_rebuild_swap_under_concurrent_readers() {
     while id < n {
         let hi = (id + 5).min(n);
         let ids: Vec<usize> = (id..hi).collect();
-        svc.insert_batch(full, &ids).unwrap();
+        svc.try_insert_batch(full, &ids).unwrap();
         id = hi;
     }
     stop.store(true, Relaxed);

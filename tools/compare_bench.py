@@ -59,6 +59,7 @@ TRACKED = [
     ("BENCH_topk.json", "prune_rate", "higher"),
     ("BENCH_streaming.json", "drift_overhead_ratio", "lower"),
     ("BENCH_fault.json", "overhead_1pct", "lower"),
+    ("BENCH_shard.json", "merge_overhead_ratio", "lower"),
 ]
 
 FREEZE_FIRST = "baseline is provisional — freeze first"

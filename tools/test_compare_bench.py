@@ -34,6 +34,7 @@ GOOD = {
     "BENCH_topk.json": {"speedup": 8.0, "recall_at_k": 0.97, "prune_rate": 0.6},
     "BENCH_streaming.json": {"drift_overhead_ratio": 0.3},
     "BENCH_fault.json": {"overhead_1pct": 1.3},
+    "BENCH_shard.json": {"merge_overhead_ratio": 2.5},
 }
 
 
