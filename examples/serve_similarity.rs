@@ -78,5 +78,10 @@ fn main() -> anyhow::Result<()> {
         h.join().unwrap();
     }
     println!("exact-path batcher: {}", service.metrics.summary());
+
+    // --- telemetry scrape: every counter in Prometheus exposition ---
+    // (`scrape_json()` is the machine-readable twin of the same capture.)
+    println!("\n-- service telemetry scrape --");
+    print!("{}", svc.scrape());
     Ok(())
 }

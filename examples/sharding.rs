@@ -112,4 +112,11 @@ fn main() {
     assert_eq!(fleet.n(), n0 + 21);
     println!("after reset the fleet grows again: n = {}", fleet.n());
     println!("health: {}", fleet.metrics.health_summary());
+
+    // --- telemetry: one scrape covers the router and every shard ---
+    // Per-shard health travels over the wire as `Query::Telemetry`
+    // (epoch-exempt, off the breaker path), so the gauges below stay
+    // truthful even when a worker is dark or the router's view is stale.
+    println!("\n-- fleet telemetry scrape --");
+    print!("{}", fleet.scrape());
 }

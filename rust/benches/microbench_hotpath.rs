@@ -16,6 +16,7 @@ use simmat::coordinator::{
 use simmat::index::{scan_batch, topk_batch, IvfConfig, IvfIndex};
 use simmat::linalg::kernel;
 use simmat::linalg::{eigh, Mat};
+use simmat::obs::{self, TelemetryConfig};
 use simmat::runtime::{default_artifacts_dir, Runtime};
 use simmat::sim::synthetic::NearPsdOracle;
 use simmat::sim::wmd::{sinkhorn_cost_naive, Doc, SinkhornCfg, WmdOracle};
@@ -737,6 +738,75 @@ fn main() {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_shard.json"));
     std::fs::write(&shard_path, shard_json).unwrap();
     rep.line(format!("- wrote {}", shard_path.display()));
+
+    // ---- Observability: span overhead, telemetry-on vs -off serving ----
+    // Disabled telemetry must be free on the hot path (one relaxed
+    // atomic load per span site — pinned at ≤ 250 ns with generous
+    // slack), and enabling it must cost the sharded top-k path at most
+    // 5%. The tracked metric is `telemetry_overhead_ratio` =
+    // qps_off / qps_on on the sharding bench above; ratios are taken
+    // over per-sample minima so a cold outlier can't fake a regression.
+    rep.line("");
+    rep.line("## Observability");
+    let obs_spans_per_call = 1000usize;
+    let obs_off = bench(Duration::from_millis(200), 10, || {
+        for _ in 0..obs_spans_per_call {
+            std::hint::black_box(obs::span("bench.noop"));
+        }
+    });
+    let disabled_span_ns = obs_off.mean_ns / obs_spans_per_call as f64;
+    assert!(
+        disabled_span_ns <= 250.0,
+        "disabled span site costs {disabled_span_ns:.1} ns — telemetry-off is no longer free"
+    );
+    let obs_rec = obs::configure(TelemetryConfig::on()).unwrap();
+    let obs_on = bench(Duration::from_millis(200), 10, || {
+        for _ in 0..obs_spans_per_call {
+            std::hint::black_box(obs::span("bench.span"));
+        }
+    });
+    obs::configure(TelemetryConfig::off());
+    let span_ns = (obs_on.mean_ns / obs_spans_per_call as f64).max(1e-9);
+    let spans_per_sec = 1e9 / span_ns;
+    assert!(obs_rec.dropped() > 0, "the span bench should have churned the ring");
+    rep.line(format!(
+        "- span site: disabled {disabled_span_ns:.1} ns, enabled {span_ns:.0} ns \
+         ({spans_per_sec:.2e} spans/s into a {}-slot ring)",
+        obs_rec.capacity()
+    ));
+    // Telemetry-off vs -on over the scatter-gather serving path (the
+    // fleet and query batch from the sharding section above).
+    let obs_qoff = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(sh_fleet.query(&sh_q).unwrap());
+    });
+    let _obs_rec2 = obs::configure(TelemetryConfig::on()).unwrap();
+    let obs_qon = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(sh_fleet.query(&sh_q).unwrap());
+    });
+    obs::configure(TelemetryConfig::off());
+    let obs_qps_off = sh_queries.len() as f64 / (obs_qoff.mean_ns / 1e9);
+    let obs_qps_on = sh_queries.len() as f64 / (obs_qon.mean_ns / 1e9);
+    let obs_ratio = obs_qon.min_ns / obs_qoff.min_ns.max(1.0);
+    rep.line(format!(
+        "- sharded top-{sh_k} x{}: telemetry off {obs_qps_off:.0} q/s, on {obs_qps_on:.0} q/s, \
+         overhead {obs_ratio:.3}x",
+        sh_queries.len(),
+    ));
+    assert!(
+        obs_ratio <= 1.05,
+        "telemetry-on overhead {obs_ratio:.3}x blew the 5% budget on the sharded top-k path"
+    );
+    let obs_json = format!(
+        "{{\n  \"bench\": \"obs\",\n  \"disabled_span_ns\": {disabled_span_ns:.2},\n  \
+         \"spans_per_sec\": {spans_per_sec:.0},\n  \"qps_off\": {obs_qps_off:.1},\n  \
+         \"qps_on\": {obs_qps_on:.1},\n  \"telemetry_overhead_ratio\": {obs_ratio:.3}\n}}\n"
+    );
+    let obs_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_obs.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_obs.json"));
+    std::fs::write(&obs_path, obs_json).unwrap();
+    rep.line(format!("- wrote {}", obs_path.display()));
 
     // ---- PJRT per-artifact execution latency ----
     if let Some(dir) = default_artifacts_dir() {

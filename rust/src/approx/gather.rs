@@ -18,6 +18,7 @@
 //! `tests/eval_economy.rs` and the microbench smoke check).
 
 use crate::linalg::Mat;
+use crate::obs;
 use crate::sim::{OracleError, SimOracle};
 
 /// Plan for the C = K·S1 / W2 = S2ᵀKS2 block pair of a two-stage build.
@@ -81,6 +82,14 @@ impl GatherPlan {
     /// `Err` and no partial blocks are observed. Identical sharding and
     /// assembly — on `Ok` the blocks are bit-identical to `execute`'s.
     pub fn try_execute(&self, oracle: &dyn SimOracle) -> Result<GatherBlocks, OracleError> {
+        // Stage-level attribution: the plan's exact predicted spend. The
+        // accounting-exact figure rides on the oracle-boundary spans of
+        // the batching layer underneath (see `obs::span`).
+        let mut span = obs::span("gather.plan");
+        span.add_calls(self.predicted_calls(oracle.n()) as u64);
+        span.attr("s1", self.s1.len() as u64);
+        span.attr("s2", self.s2.len() as u64);
+        span.attr("reused_cols", (self.s2.len() - self.misses.len()) as u64);
         let columns = oracle.try_columns(&self.s1)?;
         let miss_cols: Vec<usize> = self.misses.iter().map(|&c| self.s2[c]).collect();
         // s2 x |misses| block of entries C cannot provide.
@@ -141,6 +150,10 @@ pub fn try_column_blocks(
     b: &[usize],
 ) -> Result<(Mat, Mat), OracleError> {
     let (union, a_pos, b_pos) = union_with_positions(a, b);
+    let mut span = obs::span("gather.columns");
+    span.add_calls((oracle.n() * union.len()) as u64);
+    span.attr("union_cols", union.len() as u64);
+    span.attr("reused_cols", (a.len() + b.len() - union.len()) as u64);
     let block = oracle.try_columns(&union)?;
     Ok((block.select_cols(&a_pos), block.select_cols(&b_pos)))
 }

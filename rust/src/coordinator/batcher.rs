@@ -15,6 +15,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::obs;
 use crate::sim::{OracleError, SimOracle};
 
 use super::metrics::Metrics;
@@ -65,6 +66,8 @@ impl SimOracle for BatchingOracle<'_> {
     fn eval_batch_into(&self, pairs: &[(usize, usize)], out: &mut [f64]) {
         debug_assert_eq!(pairs.len(), out.len());
         for (chunk, ochunk) in pairs.chunks(self.batch).zip(out.chunks_mut(self.batch)) {
+            let mut span = obs::oracle_span("oracle.flush");
+            span.add_calls(chunk.len() as u64);
             let t0 = Instant::now();
             self.inner.eval_batch_into(chunk, ochunk);
             self.metrics.record_batch(chunk.len(), self.batch);
@@ -83,6 +86,8 @@ impl SimOracle for BatchingOracle<'_> {
     ) -> Result<(), OracleError> {
         debug_assert_eq!(pairs.len(), out.len());
         for (chunk, ochunk) in pairs.chunks(self.batch).zip(out.chunks_mut(self.batch)) {
+            let mut span = obs::oracle_span("oracle.flush");
+            span.add_calls(chunk.len() as u64);
             let t0 = Instant::now();
             self.inner.try_eval_batch_into(chunk, ochunk)?;
             self.metrics.record_batch(chunk.len(), self.batch);
@@ -220,10 +225,13 @@ fn worker_loop<O: SimOracle>(
         }
         // Execute the batch.
         let pairs: Vec<(usize, usize)> = pending.iter().map(|r| r.pair).collect();
+        let mut span = obs::oracle_span("oracle.flush");
+        span.add_calls(pairs.len() as u64);
         let t0 = Instant::now();
         let vals = oracle.eval_batch(&pairs);
         metrics.record_batch(pairs.len(), batch);
         metrics.record_latency(t0.elapsed());
+        drop(span);
         for (req, val) in pending.drain(..).zip(vals) {
             let _ = req.reply.send(val); // receiver may have given up
         }

@@ -139,6 +139,60 @@ impl Metrics {
         self.epoch_rejects.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Every scalar counter as `(name, value)`, in a stable order. This
+    /// is the single enumeration the telemetry layer builds on
+    /// (`obs::MetricsSnapshot`, the Prometheus/JSON scrapes): adding a
+    /// counter here is all it takes for it to show up in every export.
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        vec![
+            ("oracle_calls", ld(&self.oracle_calls)),
+            ("batches", ld(&self.batches)),
+            ("padded_slots", ld(&self.padded_slots)),
+            ("total_slots", ld(&self.total_slots)),
+            ("queries", ld(&self.queries)),
+            ("inserts", ld(&self.inserts)),
+            ("insert_calls", ld(&self.insert_calls)),
+            ("drift_probes", ld(&self.drift_probes)),
+            ("probe_calls", ld(&self.probe_calls)),
+            ("rebuilds", ld(&self.rebuilds)),
+            ("topk_queries", ld(&self.topk_queries)),
+            ("cells_scanned", ld(&self.cells_scanned)),
+            ("cells_pruned", ld(&self.cells_pruned)),
+            ("rerank_calls", ld(&self.rerank_calls)),
+            ("oracle_failures", ld(&self.oracle_failures)),
+            ("oracle_retries", ld(&self.oracle_retries)),
+            ("degraded_epochs", ld(&self.degraded_epochs)),
+            ("breaker_trips", ld(&self.breaker_trips)),
+            ("shard_calls", ld(&self.shard_calls)),
+            ("shard_failures", ld(&self.shard_failures)),
+            ("epoch_rejects", ld(&self.epoch_rejects)),
+        ]
+    }
+
+    /// Histogram bucket upper bounds in µs (the overflow bucket is
+    /// implied above the last bound).
+    pub fn latency_bucket_bounds() -> &'static [u64] {
+        &BUCKETS_US
+    }
+
+    /// Per-bucket observation counts, `bounds.len() + 1` entries (the
+    /// last is the overflow bucket).
+    pub fn latency_bucket_counts(&self) -> Vec<u64> {
+        self.latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    pub fn latency_sum_us(&self) -> u64 {
+        self.latency_sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn latency_count(&self) -> u64 {
+        self.latency_count.load(Ordering::Relaxed)
+    }
+
     pub fn mean_latency_us(&self) -> f64 {
         let c = self.latency_count.load(Ordering::Relaxed);
         if c == 0 {
@@ -147,7 +201,14 @@ impl Metrics {
         self.latency_sum_us.load(Ordering::Relaxed) as f64 / c as f64
     }
 
-    /// Approximate quantile from the histogram (upper bound of the bucket).
+    /// Approximate quantile from the histogram, with
+    /// **upper-bound-of-bucket** semantics: the returned value is the
+    /// upper bound of the first bucket whose cumulative count reaches
+    /// `max(1, ceil(q · total))` observations — an overestimate by at
+    /// most one bucket width, never an underestimate. `q = 0.0` is the
+    /// minimum-style answer (the first *non-empty* bucket's upper
+    /// bound); `q = 1.0` the maximum-style one. Observations past the
+    /// last bound report the 1_000_000µs overflow sentinel.
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
         let total: u64 = self
             .latency_buckets
@@ -157,7 +218,10 @@ impl Metrics {
         if total == 0 {
             return 0;
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        // The max(1) keeps q = 0.0 anchored to an actual observation:
+        // without it the target is 0 and the very first bucket's bound
+        // comes back even when that bucket is empty.
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
         let mut seen = 0;
         for (i, b) in self.latency_buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
@@ -317,5 +381,74 @@ mod tests {
         }
         assert!(m.latency_quantile_us(0.5) <= m.latency_quantile_us(0.95));
         assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn quantile_zero_reports_first_nonempty_bucket() {
+        // Upper-bound-of-bucket semantics: every observation sits in the
+        // (250, 500] bucket, so q = 0.0 must answer 500 — the smallest
+        // bound covering a real observation — not the 50µs bound of the
+        // empty first bucket (the pre-fix behavior).
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.0), 0); // empty histogram
+        m.record_latency(Duration::from_micros(300));
+        m.record_latency(Duration::from_micros(400));
+        assert_eq!(m.latency_quantile_us(0.0), 500);
+        assert_eq!(m.latency_quantile_us(1.0), 500);
+        // A later observation moves the max, not the min.
+        m.record_latency(Duration::from_micros(3000));
+        assert_eq!(m.latency_quantile_us(0.0), 500);
+        assert_eq!(m.latency_quantile_us(1.0), 5000);
+        // Past the last bound: the overflow sentinel.
+        m.record_latency(Duration::from_micros(900_000));
+        assert_eq!(m.latency_quantile_us(1.0), 1_000_000);
+    }
+
+    #[test]
+    fn counters_enumeration_covers_every_field() {
+        let m = Metrics::new();
+        m.record_batch(5, 8);
+        m.record_query();
+        m.record_inserts(2, 40);
+        m.record_drift_probe(16);
+        m.record_rebuild();
+        m.record_topk(1, 3, 7);
+        m.record_rerank(9);
+        m.record_oracle_failure();
+        m.record_oracle_retries(2);
+        m.record_degraded_epoch();
+        m.record_breaker_trip();
+        m.record_shard_calls(3);
+        m.record_shard_failure();
+        m.record_epoch_reject();
+        let counters = m.counters();
+        assert_eq!(counters.len(), 21);
+        let names: std::collections::HashSet<&str> =
+            counters.iter().map(|&(n, _)| n).collect();
+        assert_eq!(names.len(), counters.len(), "duplicate counter names");
+        // Every record_* above must have landed in some enumerated value.
+        for (name, expect) in [
+            ("oracle_calls", 5),
+            ("queries", 1),
+            ("insert_calls", 40),
+            ("probe_calls", 16),
+            ("rebuilds", 1),
+            ("cells_pruned", 7),
+            ("rerank_calls", 9),
+            ("oracle_retries", 2),
+            ("breaker_trips", 1),
+            ("shard_calls", 3),
+            ("epoch_rejects", 1),
+        ] {
+            let got = counters.iter().find(|&&(n, _)| n == name).unwrap().1;
+            assert_eq!(got, expect, "{name}");
+        }
+        // Histogram accessors agree with the recording path.
+        m.record_latency(Duration::from_micros(75));
+        assert_eq!(m.latency_count(), 1);
+        assert_eq!(m.latency_sum_us(), 75);
+        let buckets = m.latency_bucket_counts();
+        assert_eq!(buckets.len(), Metrics::latency_bucket_bounds().len() + 1);
+        assert_eq!(buckets.iter().sum::<u64>(), 1);
     }
 }

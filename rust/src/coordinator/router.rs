@@ -47,6 +47,13 @@
 //!    protocol revision, not an API break. Peers must keep a wildcard
 //!    arm and answer unknown queries with `Response::Error` rather than
 //!    panicking.
+//! 5. **Control-plane scrape.** [`Query::Telemetry`] is the one
+//!    non-data query on the wire: it asks the serving side for its
+//!    [`ShardHealth`] (document count, snapshot epoch, index cell
+//!    count). It is epoch-*exempt* — a health probe must succeed even
+//!    while the router's epoch view is stale, so workers answer it
+//!    before the epoch fence. The bare store router answers it too
+//!    (epoch 0, no cells), so every serving loop supports scraping.
 
 use crate::approx::Factored;
 use crate::index;
@@ -121,6 +128,24 @@ pub enum Query {
     /// document j: `dot(left, right_t.row(j))`, bit-equal to
     /// `Factored::entry` when `left` is a left-factor row.
     EntryVec(VecQuery, usize),
+    /// Control-plane health scrape (protocol rule 5): answered with
+    /// [`Response::Telemetry`] before the epoch fence, so it succeeds
+    /// even when the router's epoch view is stale. Carries no payload —
+    /// the serving side describes itself.
+    Telemetry,
+}
+
+/// Point-in-time health of one serving side, answered to a
+/// [`Query::Telemetry`] scrape. The shard router gathers one per shard
+/// so a single scrape reports the whole fleet (`ShardedService::scrape`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardHealth {
+    /// Documents served (local row count).
+    pub n: usize,
+    /// Snapshot epoch currently served. 0 for a bare store.
+    pub epoch: u64,
+    /// IVF cells in the serving index; 0 when scans run exact.
+    pub cells: usize,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -147,6 +172,8 @@ pub enum Response {
         /// scan.
         pruned: u64,
     },
+    /// One serving side's health, answering [`Query::Telemetry`].
+    Telemetry(ShardHealth),
     /// Structured failure: the query was invalid (or the service is
     /// degraded); the message is the [`RouteError`] rendering. Produced
     /// by [`respond`] so serving loops never panic or drop a request.
@@ -302,6 +329,12 @@ pub fn route(f: &Factored, q: &Query) -> Result<Response, RouteError> {
             check(*j)?;
             Ok(Response::Scalar(dot(&vq.left, f.right_t.row(*j))))
         }
+        Query::Telemetry => {
+            // A bare store has no epoch or index; serving layers that do
+            // (`Snapshot`, `ShardWorker`) intercept this query and fill
+            // in theirs.
+            Ok(Response::Telemetry(ShardHealth { n, epoch: 0, cells: 0 }))
+        }
     }
 }
 
@@ -427,6 +460,17 @@ mod tests {
         let vq = VecQuery::new(vec![0.0; 5]);
         match route(&f, &Query::ScoreRow(vq)) {
             Err(RouteError::BadVector { expected: 3, got: 5 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn telemetry_scrape_describes_bare_store() {
+        let f = toy();
+        match route(&f, &Query::Telemetry).unwrap() {
+            Response::Telemetry(h) => {
+                assert_eq!(h, ShardHealth { n: 8, epoch: 0, cells: 0 });
+            }
             other => panic!("{other:?}"),
         }
     }

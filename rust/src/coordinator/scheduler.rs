@@ -9,6 +9,7 @@
 //! O(n·s) rebuild on the pool.
 
 use crate::approx::{Factored, LandmarkPlan};
+use crate::obs;
 use crate::sim::{OracleError, SimOracle};
 use crate::util::rng::Rng;
 
@@ -180,7 +181,15 @@ impl DriftMonitor {
     ) -> Result<f64, OracleError> {
         debug_assert_eq!(pairs.len(), approx.len());
         let mut exact = vec![0.0; pairs.len()];
-        oracle.try_eval_batch_into(pairs, &mut exact)?;
+        // Oracle-boundary span: probes hit the raw (or retrying) oracle
+        // directly, never the batcher, so the requested pair count enters
+        // the Δ accounting here; a fault-tolerant wrapper's re-buys ride
+        // its own `oracle.retry` spans.
+        let mut span = obs::oracle_span("drift.probe");
+        span.add_calls(pairs.len() as u64);
+        let gathered = oracle.try_eval_batch_into(pairs, &mut exact);
+        drop(span);
+        gathered?;
         let mut num = 0.0;
         let mut den = 0.0;
         for (t, &v) in exact.iter().enumerate() {

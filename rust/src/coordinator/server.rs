@@ -20,6 +20,7 @@ use crate::approx::{
     self, ApproxError, Extension, Factored, LandmarkPlan, LandmarkReservoir, SmsConfig,
 };
 use crate::index::{rerank_exact, IvfConfig, IvfIndex};
+use crate::obs;
 use crate::sim::{CountingOracle, FaultTolerantOracle, PrefixOracle, SimOracle};
 use crate::util::rng::Rng;
 
@@ -395,6 +396,10 @@ impl SimilarityService {
                 degraded: None,
             });
         }
+        // Stage-level attribution: the exact insert spend lands on this
+        // span's counters at the end; the accounting-exact Δ figure rides
+        // on the batcher's `oracle.flush` spans underneath.
+        let mut ispan = obs::span("insert");
         let mut st = relock(self.stream.lock());
         let st = &mut *st;
         for (k, &id) in ids.iter().enumerate() {
@@ -504,6 +509,9 @@ impl SimilarityService {
                     let grown = PrefixOracle::new(oracle, st.n);
                     let plan = st.reservoir.refreshed_plan(&mut st.rng);
                     let rebuild_counter = CountingOracle::new(&grown);
+                    // Stage span only: the rebuild's Δ spend enters the
+                    // accounting through the batcher's flush spans.
+                    let mut rspan = obs::span("rebuild");
                     let built = match &self.retry {
                         Some(rc) => {
                             let ft = FaultTolerantOracle::new(&rebuild_counter, rc.clone())
@@ -521,6 +529,8 @@ impl SimilarityService {
                             self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
                         }
                     };
+                    rspan.add_calls(rebuild_counter.calls());
+                    drop(rspan);
                     match built {
                         Ok((fresh, next_ext)) => {
                             let fresh = Arc::new(fresh);
@@ -597,6 +607,9 @@ impl SimilarityService {
         // epoch-fenced transports (shard workers) stop answering for the
         // pre-insert store.
         self.epoch.fetch_add(1, Ordering::Relaxed);
+        ispan.add_calls(calls);
+        ispan.attr("inserted", ids.len() as u64);
+        ispan.attr("rebuilt", u64::from(rebuilt));
         Ok(InsertReport {
             inserted: ids.len(),
             oracle_calls: calls,
@@ -622,6 +635,7 @@ impl SimilarityService {
     /// intercept (and its fall-through for ids the index snapshot does
     /// not cover yet) lives there.
     pub fn query(&self, q: &Query) -> Result<Response, ServiceError> {
+        let _span = obs::span("query");
         Ok(self.snapshot().query_metered(q, Some(&self.metrics))?)
     }
 
@@ -693,7 +707,14 @@ impl SimilarityService {
             Response::RankedBatch(lists) => lists,
             _ => unreachable!("TopKBatch always yields RankedBatch"),
         };
+        // Oracle-boundary span: re-rank evaluations hit the raw oracle
+        // (not the batcher), so their exact Δ count enters the
+        // accounting sum here.
+        let mut span = obs::oracle_span("rerank.exact");
         let calls = rerank_exact(oracle, ids, &mut lists, k, budget);
+        span.add_calls(calls);
+        span.attr("queries", ids.len() as u64);
+        drop(span);
         self.metrics.record_rerank(calls);
         Ok(lists)
     }
@@ -717,6 +738,35 @@ impl SimilarityService {
     pub fn last_drift(&self) -> f64 {
         relock(self.stream.lock()).monitor.last_drift
     }
+
+    /// Prometheus text scrape: every [`Metrics`] counter, the latency
+    /// histogram, and the serving gauges (epoch, documents, index
+    /// cells). One capture — the counters and gauges are a consistent
+    /// point-in-time view of this service.
+    pub fn scrape(&self) -> String {
+        let snap = obs::MetricsSnapshot::capture(&self.metrics);
+        let h = self.snapshot().health();
+        let mut out = obs::prometheus(&snap);
+        out.push_str(&format!(
+            "# TYPE simmat_epoch gauge\nsimmat_epoch {}\n\
+             # TYPE simmat_docs gauge\nsimmat_docs {}\n\
+             # TYPE simmat_index_cells gauge\nsimmat_index_cells {}\n",
+            h.epoch, h.n, h.cells
+        ));
+        out
+    }
+
+    /// JSON twin of [`Self::scrape`], round-trippable through
+    /// [`obs::from_json`] (the gauges ride alongside the snapshot).
+    pub fn scrape_json(&self) -> String {
+        let snap = obs::MetricsSnapshot::capture(&self.metrics);
+        let h = self.snapshot().health();
+        let body = obs::to_json(&snap);
+        format!(
+            "{{\"epoch\": {}, \"docs\": {}, \"index_cells\": {}, \"metrics\": {body}}}",
+            h.epoch, h.n, h.cells
+        )
+    }
 }
 
 impl Service for SimilarityService {
@@ -726,7 +776,11 @@ impl Service for SimilarityService {
     /// routers resynchronize without parsing the error text).
     fn serve(&self, req: &Request) -> Reply {
         let epoch = self.epoch.load(Ordering::Relaxed);
-        let response = if req.epoch != epoch {
+        // Health scrapes skip the fence (wire protocol rule 5): a stale
+        // epoch view must never block an operator's probe.
+        let response = if matches!(req.query, Query::Telemetry) {
+            self.query(&req.query).unwrap_or_else(Response::from)
+        } else if req.epoch != epoch {
             self.metrics.record_epoch_reject();
             epoch_mismatch(epoch, req.epoch)
         } else {

@@ -24,12 +24,13 @@ use std::thread::JoinHandle;
 
 use crate::approx::{ApproxError, Factored};
 use crate::index::{topk_batch, IvfConfig, IvfIndex, SearchStats};
+use crate::obs;
 use crate::sim::oracle::OracleError;
 use crate::sim::RetryConfig;
 use crate::util::rng::Rng;
 
 use super::metrics::Metrics;
-use super::router::{route, Query, Reply, Request, Response, RouteError, VecQuery};
+use super::router::{route, Query, Reply, Request, Response, RouteError, ShardHealth, VecQuery};
 use super::server::{Method, SimilarityService, StreamConfig};
 
 /// Typed failure surface of the serving tier — what the deprecated
@@ -247,6 +248,16 @@ impl Snapshot {
         self.store.n()
     }
 
+    /// The health payload this snapshot reports to a
+    /// [`Query::Telemetry`] scrape.
+    pub fn health(&self) -> ShardHealth {
+        ShardHealth {
+            n: self.n(),
+            epoch: self.epoch,
+            cells: self.index.as_ref().map_or(0, |idx| idx.cells()),
+        }
+    }
+
     /// Serve one query from this snapshot. Top-k (by id or by value)
     /// goes through the retrieval index when one is present — the
     /// pruned scan is lossless, so results are bit-identical to the
@@ -266,6 +277,12 @@ impl Snapshot {
         if let Some(m) = metrics {
             m.record_query();
         }
+        // Control-plane scrape: answered from snapshot state, with the
+        // epoch and index this layer holds (the bare-store route would
+        // report epoch 0 / no cells).
+        if matches!(q, Query::Telemetry) {
+            return Ok(Response::Telemetry(self.health()));
+        }
         if let Some(idx) = &self.index {
             let n = idx.n();
             // Ids beyond the index snapshot fall through to the store
@@ -274,14 +291,22 @@ impl Snapshot {
             // must not get a transient OutOfRange while `Row` serves it.
             match q {
                 &Query::TopK(i, k) if i < n => {
+                    let mut span = obs::span("ivf.scan");
                     let (ranked, st) = idx.top_k_stats(i, k.min(n - 1));
+                    span.attr("queries", 1);
+                    span.attr("cells_scanned", st.cells_scanned);
+                    span.attr("cells_pruned", st.cells_pruned);
                     if let Some(m) = metrics {
                         m.record_topk(1, st.cells_scanned, st.cells_pruned);
                     }
                     return Ok(Response::Ranked(ranked));
                 }
                 Query::TopKBatch(ids, k) if ids.iter().all(|&i| i < n) => {
+                    let mut span = obs::span("ivf.scan");
                     let (lists, st) = topk_batch(idx, ids, (*k).min(n - 1));
+                    span.attr("queries", ids.len() as u64);
+                    span.attr("cells_scanned", st.cells_scanned);
+                    span.attr("cells_pruned", st.cells_pruned);
                     if let Some(m) = metrics {
                         m.record_topk(ids.len() as u64, st.cells_scanned, st.cells_pruned);
                     }
@@ -304,6 +329,7 @@ impl Snapshot {
                     return Ok(Response::Vectors(out));
                 }
                 Query::TopKVec(vqs, k) => {
+                    let mut span = obs::span("ivf.scan");
                     let r = self.store.rank();
                     let d = idx.embedding().dim();
                     let mut lists = Vec::with_capacity(vqs.len());
@@ -323,6 +349,9 @@ impl Snapshot {
                         agg.merge(&st);
                         lists.push(list);
                     }
+                    span.attr("queries", vqs.len() as u64);
+                    span.attr("cells_scanned", agg.cells_scanned);
+                    span.attr("cells_pruned", agg.cells_pruned);
                     if let Some(m) = metrics {
                         m.record_topk(vqs.len() as u64, agg.cells_scanned, agg.cells_pruned);
                     }
@@ -342,6 +371,12 @@ impl Snapshot {
     /// (never-failing) response. This is [`Service::serve`] for a bare
     /// snapshot.
     pub fn serve_metered(&self, req: &Request, metrics: Option<&Metrics>) -> Reply {
+        // Health scrapes are epoch-exempt (protocol rule 5): a probe
+        // must succeed while the caller's epoch view is stale — that is
+        // exactly when an operator needs it.
+        if matches!(req.query, Query::Telemetry) {
+            return Reply::new(self.epoch, Response::Telemetry(self.health()));
+        }
         if req.epoch != self.epoch {
             return Reply::new(self.epoch, epoch_mismatch(self.epoch, req.epoch));
         }
@@ -550,6 +585,37 @@ mod tests {
         // …and the by-value pruned scan still equals the exact one.
         match s.query(&Query::TopKVec(vqs, 5)).unwrap() {
             Response::RankedShard { lists, .. } => assert_eq!(lists[0], exact),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn telemetry_reports_snapshot_state_and_skips_the_epoch_fence() {
+        let plain = toy_snapshot(0, false);
+        match plain.query(&Query::Telemetry).unwrap() {
+            Response::Telemetry(h) => {
+                assert_eq!(h, ShardHealth { n: 12, epoch: 0, cells: 0 });
+            }
+            other => panic!("{other:?}"),
+        }
+        let indexed = toy_snapshot(5, true);
+        let cells = indexed.index.as_ref().unwrap().cells();
+        assert!(cells > 0);
+        match indexed.query(&Query::Telemetry).unwrap() {
+            Response::Telemetry(h) => {
+                assert_eq!(h, ShardHealth { n: 12, epoch: 5, cells });
+            }
+            other => panic!("{other:?}"),
+        }
+        // Epoch-exempt: a scrape tagged with a stale epoch still
+        // answers (protocol rule 5) while a data query is fenced off.
+        let stale = Request::new(2, Query::Telemetry);
+        match indexed.serve(&stale).response {
+            Response::Telemetry(h) => assert_eq!(h.epoch, 5),
+            other => panic!("{other:?}"),
+        }
+        match indexed.serve(&Request::new(2, Query::Entry(0, 0))).response {
+            Response::Error(msg) => assert!(msg.contains("epoch mismatch"), "{msg}"),
             other => panic!("{other:?}"),
         }
     }

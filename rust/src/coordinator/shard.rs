@@ -50,13 +50,14 @@ use std::time::Instant;
 
 use crate::approx::{Extension, Factored, LandmarkReservoir};
 use crate::index::{IvfConfig, IvfIndex, SignedEmbedding};
+use crate::obs;
 use crate::sim::{CountingOracle, FaultTolerantOracle, PrefixOracle, RetryConfig, SimOracle};
 use crate::util::pool;
 use crate::util::rng::Rng;
 
 use super::batcher::BatchingOracle;
 use super::metrics::Metrics;
-use super::router::{Query, Reply, Request, Response, RouteError, VecQuery};
+use super::router::{Query, Reply, Request, Response, RouteError, ShardHealth, VecQuery};
 use super::scheduler::{DriftMonitor, RebuildPolicy};
 use super::server::{relock, BuildStats, InsertReport, Method};
 use super::service::{
@@ -248,6 +249,8 @@ impl ShardWorker {
                 },
                 _ => Response::Error(format!("shard {} does not serve doc {g}", self.shard)),
             },
+            // Control-plane scrape: this shard's slice of the fleet.
+            Query::Telemetry => Response::Telemetry(snap.health()),
             // Id-based queries assume a whole-corpus view and stay off
             // the shard wire (protocol rule 3); unknown future variants
             // get the same structured rejection (rule 4).
@@ -264,6 +267,11 @@ impl Service for ShardWorker {
                 snap.epoch,
                 Response::Error(format!("shard {} unavailable", self.shard)),
             );
+        }
+        // Health scrapes skip the epoch fence (wire protocol rule 5): a
+        // probe must answer even while the router's view is stale.
+        if matches!(req.query, Query::Telemetry) {
+            return Reply::new(snap.epoch, self.serve_query(&snap, &req.query));
         }
         if req.epoch != snap.epoch {
             return Reply::new(snap.epoch, epoch_mismatch(snap.epoch, req.epoch));
@@ -524,6 +532,8 @@ impl ShardedService {
     /// request per shard), failing on the first per-shard error in shard
     /// order — deterministic for every worker count.
     fn scatter(&self, q: &Query) -> Result<Vec<Response>, ServiceError> {
+        let mut span = obs::span("shard.scatter");
+        span.attr("shards", self.workers.len() as u64);
         pool::fan_out(self.workers.len(), |s| self.call(s, q.clone()))
             .into_iter()
             .collect()
@@ -573,6 +583,8 @@ impl ShardedService {
     ) -> Result<(Vec<Vec<(usize, f64)>>, u64, u64), ServiceError> {
         let nq = vqs.len();
         let replies = self.scatter(&Query::TopKVec(vqs, k))?;
+        let mut span = obs::span("shard.merge");
+        span.attr("queries", nq as u64);
         let mut merged: Vec<Vec<(usize, f64)>> = (0..nq).map(|_| Vec::new()).collect();
         let (mut scanned, mut pruned) = (0u64, 0u64);
         for (s, resp) in replies.into_iter().enumerate() {
@@ -632,6 +644,7 @@ impl ShardedService {
     /// bit-identically to a single-shard service over the same build
     /// (`tests/sharding.rs` pins this for S ∈ {1, 2, 3}).
     pub fn query(&self, q: &Query) -> Result<Response, ServiceError> {
+        let _span = obs::span("query");
         self.metrics.record_query();
         let n = self.n();
         let check = |i: usize| {
@@ -696,12 +709,116 @@ impl ShardedService {
                     other => Err(unexpected(owner, &other)),
                 }
             }
+            Query::Telemetry => {
+                // Fleet-level health: sum the per-shard scrapes. A downed
+                // shard fails the aggregate (callers that want per-shard
+                // granularity use `shard_health` / `scrape` instead).
+                let mut agg = ShardHealth { n: 0, epoch: self.epoch(), cells: 0 };
+                for h in self.shard_health() {
+                    let h = h?;
+                    agg.n += h.n;
+                    agg.cells += h.cells;
+                }
+                Ok(Response::Telemetry(agg))
+            }
         }
     }
 
     /// Total query entry point: errors render as [`Response::Error`].
     pub fn respond(&self, q: &Query) -> Response {
         self.query(q).unwrap_or_else(Response::from)
+    }
+
+    /// One [`Query::Telemetry`] probe per shard, over the transports.
+    /// Epoch-exempt on the far side, and deliberately *off* the
+    /// [`Self::call`] retry/breaker path: a scrape observes the fleet,
+    /// it never perturbs the failure counters it is reporting.
+    pub fn shard_health(&self) -> Vec<Result<ShardHealth, ServiceError>> {
+        (0..self.workers.len())
+            .map(|s| {
+                let epoch = self.observed[s].load(Ordering::Relaxed);
+                match self.links[s].call(Request::new(epoch, Query::Telemetry)) {
+                    Ok(reply) => match reply.response {
+                        Response::Telemetry(h) => Ok(h),
+                        Response::Error(reason) => Err(ServiceError::Shard { shard: s, reason }),
+                        other => Err(unexpected(s, &other)),
+                    },
+                    Err(e) => Err(e),
+                }
+            })
+            .collect()
+    }
+
+    /// Prometheus text scrape for the whole fleet: the router's
+    /// [`Metrics`] counters and latency histogram, the router gauges
+    /// (commit epoch, documents), and per-shard gauges gathered with one
+    /// [`Query::Telemetry`] scatter — up/epoch/docs/cells per shard,
+    /// plus the router-side consecutive-failure count feeding the
+    /// breaker. A downed shard scrapes as `simmat_shard_up 0` with its
+    /// last-observed epoch; the scrape itself never fails.
+    pub fn scrape(&self) -> String {
+        let snap = obs::MetricsSnapshot::capture(&self.metrics);
+        let mut out = obs::prometheus(&snap);
+        out.push_str(&format!(
+            "# TYPE simmat_epoch gauge\nsimmat_epoch {}\n\
+             # TYPE simmat_docs gauge\nsimmat_docs {}\n",
+            self.epoch(),
+            self.n()
+        ));
+        out.push_str("# TYPE simmat_shard_up gauge\n");
+        let health = self.shard_health();
+        for (s, h) in health.iter().enumerate() {
+            out.push_str(&format!("simmat_shard_up{{shard=\"{s}\"}} {}\n", u64::from(h.is_ok())));
+        }
+        for (s, h) in health.iter().enumerate() {
+            let (epoch, docs, cells) = match h {
+                Ok(h) => (h.epoch, h.n as u64, h.cells as u64),
+                Err(_) => (self.observed[s].load(Ordering::Relaxed), 0, 0),
+            };
+            let fails = self.failures[s].load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "simmat_shard_epoch{{shard=\"{s}\"}} {epoch}\n\
+                 simmat_shard_docs{{shard=\"{s}\"}} {docs}\n\
+                 simmat_shard_cells{{shard=\"{s}\"}} {cells}\n\
+                 simmat_shard_consecutive_failures{{shard=\"{s}\"}} {fails}\n"
+            ));
+        }
+        out
+    }
+
+    /// JSON twin of [`Self::scrape`]: router gauges, the metrics
+    /// snapshot (round-trippable through [`obs::from_json`]), and one
+    /// object per shard.
+    pub fn scrape_json(&self) -> String {
+        let snap = obs::MetricsSnapshot::capture(&self.metrics);
+        let body = obs::to_json(&snap);
+        let shards: Vec<String> = self
+            .shard_health()
+            .iter()
+            .enumerate()
+            .map(|(s, h)| match h {
+                Ok(h) => format!(
+                    "{{\"shard\": {s}, \"up\": true, \"epoch\": {}, \"docs\": {}, \
+                     \"cells\": {}, \"consecutive_failures\": {}}}",
+                    h.epoch,
+                    h.n,
+                    h.cells,
+                    self.failures[s].load(Ordering::Relaxed)
+                ),
+                Err(e) => format!(
+                    "{{\"shard\": {s}, \"up\": false, \"error\": \"{}\", \
+                     \"consecutive_failures\": {}}}",
+                    e.to_string().replace('\\', "\\\\").replace('"', "\\\""),
+                    self.failures[s].load(Ordering::Relaxed)
+                ),
+            })
+            .collect();
+        format!(
+            "{{\"epoch\": {}, \"docs\": {}, \"shards\": [{}], \"metrics\": {body}}}",
+            self.epoch(),
+            self.n(),
+            shards.join(", ")
+        )
     }
 
     /// Fold one appended document into the fleet; see
@@ -735,6 +852,9 @@ impl ShardedService {
                 degraded: None,
             });
         }
+        // Stage-level attribution; the accounting-exact Δ figure rides
+        // on the batcher's `oracle.flush` spans underneath.
+        let mut ispan = obs::span("insert");
         let mut st = relock(self.stream.lock());
         let st = &mut *st;
         for (k, &id) in ids.iter().enumerate() {
@@ -860,6 +980,9 @@ impl ShardedService {
                     let grown = PrefixOracle::new(oracle, st.n);
                     let plan = st.reservoir.refreshed_plan(&mut st.rng);
                     let rebuild_counter = CountingOracle::new(&grown);
+                    // Stage span only: the rebuild's Δ spend enters the
+                    // accounting through the batcher's flush spans.
+                    let mut rspan = obs::span("rebuild");
                     let built = match &self.retry {
                         Some(rc) => {
                             let ft = FaultTolerantOracle::new(&rebuild_counter, rc.clone())
@@ -877,6 +1000,8 @@ impl ShardedService {
                             self.method.try_build_with_plan(&batched, &plan, &mut st.rng)
                         }
                     };
+                    rspan.add_calls(rebuild_counter.calls());
+                    drop(rspan);
                     match built {
                         Ok((fresh, next_ext)) => {
                             if let Some(s) = self.workers.iter().position(|w| !w.is_available()) {
@@ -933,6 +1058,9 @@ impl ShardedService {
                 }
             }
         }
+        ispan.add_calls(calls);
+        ispan.attr("inserted", ids.len() as u64);
+        ispan.attr("rebuilt", u64::from(rebuilt));
         Ok(InsertReport {
             inserted: ids.len(),
             oracle_calls: calls,
@@ -1107,6 +1235,52 @@ mod tests {
             Response::Vector(v) => assert_eq!(v.len(), 3),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn telemetry_scrapes_per_shard_health_without_feeding_the_breaker() {
+        let (_o, svc) = fleet(20, 3, TransportKind::Direct, true, 9);
+        let health = svc.shard_health();
+        assert_eq!(health.len(), 3);
+        let mut docs = 0;
+        for h in &health {
+            let h = h.as_ref().unwrap();
+            assert_eq!(h.epoch, 0);
+            assert!(h.cells > 0, "indexed shard must report its cells");
+            docs += h.n;
+        }
+        assert_eq!(docs, 20, "shard docs must partition the corpus");
+        // Fleet aggregate through the data plane.
+        match svc.query(&Query::Telemetry).unwrap() {
+            Response::Telemetry(h) => {
+                assert_eq!(h.n, 20);
+                assert_eq!(h.epoch, 0);
+                assert!(h.cells > 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Epoch-exempt: a scrape tagged with a wildly stale epoch still
+        // answers (rule 5) where a data query would be fenced.
+        let w = svc.worker(0);
+        let r = w.serve(&Request::new(999, Query::Telemetry));
+        assert!(matches!(r.response, Response::Telemetry(_)));
+        // A downed shard scrapes as down without failing the scrape —
+        // and scraping never perturbs the failure counters it reports.
+        svc.worker(1).set_available(false);
+        let health = svc.shard_health();
+        assert!(health[0].is_ok() && health[2].is_ok());
+        assert!(health[1].is_err());
+        let text = svc.scrape();
+        assert!(text.contains("simmat_shard_up{shard=\"0\"} 1"), "{text}");
+        assert!(text.contains("simmat_shard_up{shard=\"1\"} 0"), "{text}");
+        assert!(text.contains("simmat_shard_cells{shard=\"2\"}"), "{text}");
+        assert!(text.contains("simmat_oracle_calls"), "{text}");
+        let js = svc.scrape_json();
+        assert!(js.contains("\"up\": false"), "{js}");
+        assert!(js.contains("\"shard\": 2"), "{js}");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(svc.metrics.shard_failures.load(Relaxed), 0);
+        assert_eq!(svc.metrics.breaker_trips.load(Relaxed), 0);
     }
 
     #[test]

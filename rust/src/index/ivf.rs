@@ -293,12 +293,17 @@ impl IvfIndex {
             return Err("cannot index an empty store".into());
         }
         assert_eq!(emb.n(), n, "embedding rows must match the store");
+        // Stage span, zero Δ-calls by construction: the index never
+        // touches the oracle.
+        let mut span = crate::obs::span("ivf.build");
+        span.attr("docs", n as u64);
         let want = if cfg.cells == 0 {
             (n as f64).sqrt().ceil() as usize
         } else {
             cfg.cells
         };
         let k = want.clamp(1, n);
+        span.attr("cells", k as u64);
         let mut rng = Rng::new(cfg.seed);
         let (centroids, assign) = kmeans(emb.db(), k, cfg.kmeans_iters, &mut rng);
         let mut cells: Vec<Cell> = (0..k)

@@ -18,6 +18,7 @@ pub mod coordinator;
 pub mod data;
 pub mod index;
 pub mod linalg;
+pub mod obs;
 pub mod opt;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,170 @@
+//! Metrics exposition: Prometheus-style text plus a JSON twin.
+//!
+//! Both formats render a [`MetricsSnapshot`] — every counter and the full
+//! latency histogram — so a scrape is one consistent capture, not a
+//! racy sequence of reads. The JSON twin is parsed back by
+//! [`from_json`] (via the dependency-free `util::json` parser), and
+//! `to_json → from_json` round-trips the snapshot exactly — pinned by
+//! `tests/observability.rs`.
+//!
+//! Counter names are prefixed `simmat_`; the histogram follows the
+//! Prometheus convention of cumulative `_bucket{le="…"}` lines plus
+//! `_sum`/`_count`. Shard-level gauges (`simmat_shard_up{shard="0"}` …)
+//! are appended by `ShardedService::scrape`, which gathers per-shard
+//! health over the wire with `Query::Telemetry`.
+
+use std::fmt::Write as _;
+
+use crate::obs::snapshot::MetricsSnapshot;
+use crate::util::json::Json;
+
+/// Prometheus-style text exposition of one snapshot.
+pub fn prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let _ = writeln!(out, "# TYPE simmat_{name} counter");
+        let _ = writeln!(out, "simmat_{name} {v}");
+    }
+    let _ = writeln!(out, "# TYPE simmat_latency_us histogram");
+    let mut cum = 0u64;
+    for (bound, c) in snap.latency_bucket_bounds.iter().zip(&snap.latency_buckets) {
+        cum += c;
+        let _ = writeln!(out, "simmat_latency_us_bucket{{le=\"{bound}\"}} {cum}");
+    }
+    cum += snap.latency_buckets.last().copied().unwrap_or(0);
+    let _ = writeln!(out, "simmat_latency_us_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "simmat_latency_us_sum {}", snap.latency_sum_us);
+    let _ = writeln!(out, "simmat_latency_us_count {}", snap.latency_count);
+    out
+}
+
+/// JSON twin of [`prometheus`]. Counters are an ordered array of
+/// `{"name", "value"}` objects so the snapshot's stable order survives
+/// the trip through parsers that hash object keys.
+pub fn to_json(snap: &MetricsSnapshot) -> String {
+    let mut out = String::from("{\n  \"counters\": [\n");
+    for (i, (name, v)) in snap.counters.iter().enumerate() {
+        let comma = if i + 1 == snap.counters.len() { "" } else { "," };
+        let _ = writeln!(out, "    {{\"name\": \"{name}\", \"value\": {v}}}{comma}");
+    }
+    let join = |xs: &[u64]| {
+        xs.iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let _ = write!(
+        out,
+        "  ],\n  \"latency_us\": {{\n    \"bounds\": [{}],\n    \"buckets\": [{}],\n    \
+         \"sum\": {},\n    \"count\": {}\n  }}\n}}\n",
+        join(&snap.latency_bucket_bounds),
+        join(&snap.latency_buckets),
+        snap.latency_sum_us,
+        snap.latency_count,
+    );
+    out
+}
+
+fn req_u64(j: &Json, what: &str) -> Result<u64, String> {
+    let v = j.as_f64().ok_or_else(|| format!("{what}: not a number"))?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(format!("{what}: not a u64: {v}"));
+    }
+    Ok(v as u64)
+}
+
+fn req_u64_vec(j: &Json, what: &str) -> Result<Vec<u64>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{what}: not an array"))?
+        .iter()
+        .map(|x| req_u64(x, what))
+        .collect()
+}
+
+/// Parse a [`to_json`] document back into the snapshot it rendered.
+pub fn from_json(src: &str) -> Result<MetricsSnapshot, String> {
+    let doc = Json::parse(src)?;
+    let counters = doc
+        .get("counters")
+        .and_then(|c| c.as_arr())
+        .ok_or("missing counters array")?
+        .iter()
+        .map(|entry| {
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or("counter entry missing name")?
+                .to_string();
+            let value = req_u64(entry.get("value").ok_or("counter entry missing value")?, "value")?;
+            Ok((name, value))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let lat = doc.get("latency_us").ok_or("missing latency_us")?;
+    Ok(MetricsSnapshot {
+        counters,
+        latency_bucket_bounds: req_u64_vec(lat.get("bounds").ok_or("missing bounds")?, "bounds")?,
+        latency_buckets: req_u64_vec(lat.get("buckets").ok_or("missing buckets")?, "buckets")?,
+        latency_sum_us: req_u64(lat.get("sum").ok_or("missing sum")?, "sum")?,
+        latency_count: req_u64(lat.get("count").ok_or("missing count")?, "count")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    fn busy_metrics() -> Metrics {
+        let m = Metrics::new();
+        m.record_batch(48, 64);
+        m.record_batch(64, 64);
+        m.record_query();
+        m.record_inserts(3, 120);
+        m.record_topk(5, 9, 21);
+        m.record_rerank(40);
+        m.record_shard_calls(6);
+        m.record_latency(Duration::from_micros(42));
+        m.record_latency(Duration::from_micros(900));
+        m
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let snap = MetricsSnapshot::capture(&busy_metrics());
+        let back = from_json(&to_json(&snap)).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn prometheus_exposes_every_counter_and_cumulative_histogram() {
+        let snap = MetricsSnapshot::capture(&busy_metrics());
+        let text = prometheus(&snap);
+        for (name, v) in &snap.counters {
+            assert!(
+                text.contains(&format!("simmat_{name} {v}")),
+                "missing {name} in:\n{text}"
+            );
+        }
+        // +Inf bucket equals the total observation count.
+        assert!(text.contains(&format!(
+            "simmat_latency_us_bucket{{le=\"+Inf\"}} {}",
+            snap.latency_count
+        )));
+        assert!(text.contains(&format!("simmat_latency_us_sum {}", snap.latency_sum_us)));
+        // le bounds are cumulative and monotone.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone histogram line: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_documents() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("not json").is_err());
+        assert!(from_json("{\"counters\": [{\"name\": \"x\"}]}").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! §Observability: dependency-free telemetry for the serving stack.
+//!
+//! Three pieces, layered on the paper's cost model (similarity
+//! evaluations — Δ-calls — are the unit of spend):
+//!
+//! * [`span`] — nestable tracing spans with monotonic-clock timing and
+//!   Δ-call/bytes counters attached at close, recorded into a
+//!   thread-safe ring buffer ([`Recorder`]); process-global install via
+//!   [`configure`], zero-cost when off.
+//! * [`snapshot`] — [`MetricsSnapshot`]: one point-in-time capture of
+//!   every `coordinator::Metrics` counter plus the latency histogram,
+//!   with `delta()` for windowed rates.
+//! * [`export`] — Prometheus-style text exposition and a JSON twin
+//!   (round-trippable through `util::json`), served over the wire by
+//!   `Query::Telemetry` so a sharded fleet reports per-shard health,
+//!   epoch, and breaker state in one scrape.
+
+pub mod export;
+pub mod snapshot;
+pub mod span;
+
+pub use export::{from_json, prometheus, to_json};
+pub use snapshot::MetricsSnapshot;
+pub use span::{
+    configure, oracle_span, oracle_total, recorder, span, Recorder, Span, SpanKind, SpanRecord,
+    TelemetryConfig,
+};

@@ -1,0 +1,146 @@
+//! Point-in-time capture of every serving counter.
+//!
+//! [`Metrics`] is a bag of relaxed atomics the hot paths bump lock-free;
+//! a [`MetricsSnapshot`] reads them all once, giving operators a stable
+//! document to export, diff, and rate. Counters are monotone, so two
+//! captures taken in order are monotone field-by-field and
+//! [`delta`](MetricsSnapshot::delta) windows never go negative — pinned
+//! under concurrent writers by `tests/observability.rs`.
+//!
+//! Capture is per-counter atomic, not cross-counter transactional: a
+//! writer racing the capture can land between two counter reads, so
+//! derived cross-counter identities (e.g. histogram count vs. bucket sum)
+//! may be off by in-flight increments. Each individual counter is exact.
+
+use crate::coordinator::Metrics;
+
+/// One consistent-enough reading of every [`Metrics`] counter plus the
+/// latency histogram.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Every scalar counter, `(name, value)`, in the stable order defined
+    /// by [`Metrics::counters`].
+    pub counters: Vec<(String, u64)>,
+    /// Histogram bucket upper bounds in µs; the final overflow bucket is
+    /// implied (`+Inf`).
+    pub latency_bucket_bounds: Vec<u64>,
+    /// Per-bucket counts — `latency_bucket_bounds.len() + 1` entries.
+    pub latency_buckets: Vec<u64>,
+    pub latency_sum_us: u64,
+    pub latency_count: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn capture(m: &Metrics) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: m
+                .counters()
+                .into_iter()
+                .map(|(name, v)| (name.to_string(), v))
+                .collect(),
+            latency_bucket_bounds: Metrics::latency_bucket_bounds().to_vec(),
+            latency_buckets: m.latency_bucket_counts(),
+            latency_sum_us: m.latency_sum_us(),
+            latency_count: m.latency_count(),
+        }
+    }
+
+    /// Value of one counter by name.
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    }
+
+    /// Windowed difference `self − earlier` for rate computation. Both
+    /// snapshots must come from the same `Metrics` generation; fields are
+    /// subtracted saturating so a mismatched pair degrades to zeros
+    /// instead of wrapping.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(name, v)| {
+                let before = earlier.get(name).unwrap_or(0);
+                (name.clone(), v.saturating_sub(before))
+            })
+            .collect();
+        let latency_buckets = self
+            .latency_buckets
+            .iter()
+            .zip(earlier.latency_buckets.iter().chain(std::iter::repeat(&0)))
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        MetricsSnapshot {
+            counters,
+            latency_bucket_bounds: self.latency_bucket_bounds.clone(),
+            latency_buckets,
+            latency_sum_us: self.latency_sum_us.saturating_sub(earlier.latency_sum_us),
+            latency_count: self.latency_count.saturating_sub(earlier.latency_count),
+        }
+    }
+
+    /// Mean recorded latency over this snapshot (or window), in µs.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.latency_count == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us as f64 / self.latency_count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn capture_reads_every_counter_and_the_histogram() {
+        let m = Metrics::new();
+        m.record_batch(48, 64);
+        m.record_query();
+        m.record_topk(2, 5, 11);
+        m.record_latency(Duration::from_micros(300));
+        let snap = MetricsSnapshot::capture(&m);
+        assert_eq!(snap.get("oracle_calls"), Some(48));
+        assert_eq!(snap.get("queries"), Some(1));
+        assert_eq!(snap.get("topk_queries"), Some(2));
+        assert_eq!(snap.get("cells_pruned"), Some(11));
+        assert_eq!(snap.get("no_such_counter"), None);
+        assert_eq!(snap.latency_count, 1);
+        assert_eq!(snap.latency_sum_us, 300);
+        assert_eq!(
+            snap.latency_buckets.len(),
+            snap.latency_bucket_bounds.len() + 1
+        );
+        // 300µs lands in the (250, 500] bucket.
+        let idx = snap
+            .latency_bucket_bounds
+            .iter()
+            .position(|&b| 300 <= b)
+            .unwrap();
+        assert_eq!(snap.latency_buckets[idx], 1);
+    }
+
+    #[test]
+    fn delta_windows_subtract_per_field() {
+        let m = Metrics::new();
+        m.record_batch(10, 16);
+        m.record_latency(Duration::from_micros(40));
+        let a = MetricsSnapshot::capture(&m);
+        m.record_batch(7, 16);
+        m.record_latency(Duration::from_micros(60));
+        let b = MetricsSnapshot::capture(&m);
+        let d = b.delta(&a);
+        assert_eq!(d.get("oracle_calls"), Some(7));
+        assert_eq!(d.get("batches"), Some(1));
+        assert_eq!(d.latency_count, 1);
+        assert_eq!(d.latency_sum_us, 60);
+        assert!((d.mean_latency_us() - 60.0).abs() < 1e-12);
+        // Self-delta is all zeros.
+        let z = b.delta(&b);
+        assert!(z.counters.iter().all(|&(_, v)| v == 0));
+        assert_eq!(z.latency_count, 0);
+    }
+}

@@ -1,0 +1,437 @@
+//! Structured tracing spans: lightweight, nestable, dependency-free.
+//!
+//! The paper's cost model counts similarity evaluations (Δ-calls), so a
+//! trace must decompose a query or insert into exactly those units. A
+//! [`Span`] times a stage on the monotonic clock and carries counters
+//! attached before close: Δ-calls, bytes, and free-form `u64` attributes
+//! (e.g. IVF cells scanned/pruned). Finished spans land in a thread-safe
+//! [`Recorder`] ring buffer, oldest-first eviction, drops counted.
+//!
+//! ## Attribution discipline
+//!
+//! Δ-calls attach at exactly the sites where pairs cross into
+//! `SimOracle::eval*` — those spans are [`SpanKind::Oracle`]:
+//!
+//! * `oracle.flush` — a batcher chunk submitted to the inner oracle
+//!   (requested pairs, once each);
+//! * `oracle.retry` — a fault-layer re-buy of one retry chunk;
+//! * `drift.probe` — the drift monitor's requested probe pairs (probes
+//!   bypass the batcher; any fault-layer re-buys ride `oracle.retry`);
+//! * `rerank.exact` — the budgeted exact re-scoring gather, which takes
+//!   the caller's raw oracle by construction.
+//!
+//! Every other span is [`SpanKind::Stage`]: it times its stage and may
+//! carry an *informational* Δ-call figure (e.g. a gather plan's predicted
+//! cost) without entering the accounting sum. [`oracle_total`] therefore
+//! equals a `CountingOracle`'s metered total exactly — pinned by
+//! `tests/observability.rs`. Do not stack two accounting wrappers (e.g. a
+//! `BatchingOracle` over another) or pairs would be attributed twice.
+//!
+//! ## Scope and zero-cost disabled mode
+//!
+//! The recorder is process-global, installed with [`configure`]: pool
+//! workers and transport threads record into the same ring, so gathers
+//! sharded across the pool stay fully attributed. Telemetry is **off by
+//! default**; while off, [`span`] is one relaxed atomic load — no clock
+//! read, no lock, no allocation (pinned ≈0 overhead by the microbench's
+//! `BENCH_obs.json` assert).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+/// Recover the guard from a poisoned lock: telemetry state is a ring of
+/// plain records, valid whatever a panicking recorder observed.
+fn relock<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(|e| e.into_inner())
+}
+
+/// Telemetry switch + ring capacity. Off by default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    pub enabled: bool,
+    /// Ring-buffer capacity in span records; oldest evicted first.
+    pub capacity: usize,
+}
+
+impl TelemetryConfig {
+    /// Enabled with the default ring capacity (4096 spans).
+    pub fn on() -> TelemetryConfig {
+        TelemetryConfig {
+            enabled: true,
+            capacity: 4096,
+        }
+    }
+
+    /// Disabled: spans are inert and cost one atomic load.
+    pub fn off() -> TelemetryConfig {
+        TelemetryConfig {
+            enabled: false,
+            capacity: 0,
+        }
+    }
+
+    pub fn capacity(mut self, cap: usize) -> TelemetryConfig {
+        self.capacity = cap.max(1);
+        self
+    }
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> TelemetryConfig {
+        TelemetryConfig::off()
+    }
+}
+
+/// Whether a span's `delta_calls` participates in the exact Δ accounting
+/// sum ([`Oracle`](SpanKind::Oracle)) or is stage-level attribution
+/// ([`Stage`](SpanKind::Stage)). See the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    Stage,
+    Oracle,
+}
+
+/// One finished span, as stored in the [`Recorder`] ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    pub kind: SpanKind,
+    /// Nesting depth on the recording thread (0 = root on that thread).
+    pub depth: u32,
+    /// Monotonic start offset from the recorder's creation, nanoseconds.
+    pub start_ns: u64,
+    pub elapsed_ns: u64,
+    /// Similarity evaluations attributed to this span (see module docs).
+    pub delta_calls: u64,
+    /// Bytes moved by this span (wire payloads, gathered matrices).
+    pub bytes: u64,
+    /// Free-form counters, e.g. `("cells_scanned", 12)`.
+    pub attrs: Vec<(&'static str, u64)>,
+}
+
+struct Ring {
+    buf: VecDeque<SpanRecord>,
+    dropped: u64,
+}
+
+/// Thread-safe fixed-capacity ring of finished spans.
+pub struct Recorder {
+    origin: Instant,
+    capacity: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Recorder {
+    pub fn new(capacity: usize) -> Recorder {
+        let capacity = capacity.max(1);
+        Recorder {
+            origin: Instant::now(),
+            capacity,
+            ring: Mutex::new(Ring {
+                buf: VecDeque::with_capacity(capacity),
+                dropped: 0,
+            }),
+        }
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        let mut g = relock(self.ring.lock());
+        if g.buf.len() == self.capacity {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(rec);
+    }
+
+    /// Drain every recorded span, oldest first.
+    pub fn take(&self) -> Vec<SpanRecord> {
+        relock(self.ring.lock()).buf.drain(..).collect()
+    }
+
+    /// Clone the current contents without draining, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        relock(self.ring.lock()).buf.iter().cloned().collect()
+    }
+
+    /// Spans evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        relock(self.ring.lock()).dropped
+    }
+
+    /// Ring capacity the recorder was configured with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        relock(self.ring.lock()).buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CURRENT: Mutex<Option<Arc<Recorder>>> = Mutex::new(None);
+
+thread_local! {
+    static DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+/// Install (or remove) the process-global recorder. Returns the handle
+/// when enabling so callers can read traces back. Replaces any previous
+/// recorder; spans already opened keep recording into the ring they
+/// started with.
+pub fn configure(cfg: TelemetryConfig) -> Option<Arc<Recorder>> {
+    if cfg.enabled {
+        let rec = Arc::new(Recorder::new(cfg.capacity));
+        *relock(CURRENT.lock()) = Some(rec.clone());
+        ENABLED.store(true, Ordering::Release);
+        Some(rec)
+    } else {
+        ENABLED.store(false, Ordering::Release);
+        *relock(CURRENT.lock()) = None;
+        None
+    }
+}
+
+/// The currently-installed recorder, if telemetry is on.
+pub fn recorder() -> Option<Arc<Recorder>> {
+    if !ENABLED.load(Ordering::Acquire) {
+        return None;
+    }
+    relock(CURRENT.lock()).clone()
+}
+
+/// Open a stage-level span. Inert (and nearly free) when telemetry is off.
+pub fn span(name: &'static str) -> Span {
+    span_kind(name, SpanKind::Stage)
+}
+
+/// Open an oracle-boundary span: its `delta_calls` enter the exact
+/// accounting sum ([`oracle_total`]). Only use where pairs are handed
+/// directly to `SimOracle::eval*`.
+pub fn oracle_span(name: &'static str) -> Span {
+    span_kind(name, SpanKind::Oracle)
+}
+
+fn span_kind(name: &'static str, kind: SpanKind) -> Span {
+    if !ENABLED.load(Ordering::Acquire) {
+        return Span { inner: None };
+    }
+    let Some(rec) = recorder() else {
+        return Span { inner: None };
+    };
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    Span {
+        inner: Some(SpanInner {
+            rec,
+            name,
+            kind,
+            depth,
+            start: Instant::now(),
+            delta_calls: 0,
+            bytes: 0,
+            attrs: Vec::new(),
+        }),
+    }
+}
+
+struct SpanInner {
+    rec: Arc<Recorder>,
+    name: &'static str,
+    kind: SpanKind,
+    depth: u32,
+    start: Instant,
+    delta_calls: u64,
+    bytes: u64,
+    attrs: Vec<(&'static str, u64)>,
+}
+
+/// An open span; recording happens when it drops (RAII) so early returns
+/// and `?` propagation still close the span.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+impl Span {
+    /// False when telemetry is off — counter updates are no-ops then.
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn add_calls(&mut self, n: u64) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.delta_calls += n;
+        }
+    }
+
+    pub fn add_bytes(&mut self, n: u64) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.bytes += n;
+        }
+    }
+
+    pub fn attr(&mut self, key: &'static str, value: u64) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.attrs.push((key, value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+            let start_ns = inner
+                .start
+                .checked_duration_since(inner.rec.origin)
+                .unwrap_or_default()
+                .as_nanos() as u64;
+            let elapsed_ns = inner.start.elapsed().as_nanos() as u64;
+            inner.rec.push(SpanRecord {
+                name: inner.name,
+                kind: inner.kind,
+                depth: inner.depth,
+                start_ns,
+                elapsed_ns,
+                delta_calls: inner.delta_calls,
+                bytes: inner.bytes,
+                attrs: inner.attrs,
+            });
+        }
+    }
+}
+
+/// Exact Δ-call total of a trace: the sum over oracle-boundary spans.
+/// Equals a `CountingOracle`'s metered total when the module-doc
+/// discipline is followed (pinned by `tests/observability.rs`).
+pub fn oracle_total(records: &[SpanRecord]) -> u64 {
+    records
+        .iter()
+        .filter(|r| r.kind == SpanKind::Oracle)
+        .map(|r| r.delta_calls)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The global recorder is shared by every test in this binary; this
+    // lock serializes the ones that install it.
+    fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        relock(GUARD.lock())
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = obs_lock();
+        configure(TelemetryConfig::off());
+        let mut s = span("noop");
+        assert!(!s.is_active());
+        s.add_calls(7);
+        s.attr("x", 1);
+        drop(s);
+        assert!(recorder().is_none());
+    }
+
+    #[test]
+    fn spans_record_counters_depth_and_timing() {
+        // Other lib tests may emit instrumented-code spans while our
+        // recorder is installed, so assert only over our own (uniquely
+        // named) spans rather than the whole trace.
+        let _g = obs_lock();
+        let rec = configure(TelemetryConfig::on()).unwrap();
+        {
+            let mut outer = span("test.span.outer");
+            outer.add_calls(3);
+            {
+                let mut inner = oracle_span("test.span.inner");
+                inner.add_calls(5);
+                inner.add_bytes(64);
+                inner.attr("cells_scanned", 4);
+            }
+            // Drop order: inner closed first, then outer.
+        }
+        configure(TelemetryConfig::off());
+        let trace = rec.take();
+        let mine: Vec<&SpanRecord> =
+            trace.iter().filter(|r| r.name.starts_with("test.span.")).collect();
+        assert_eq!(mine.len(), 2);
+        let (inner, outer) = (mine[0], mine[1]);
+        assert_eq!(inner.name, "test.span.inner");
+        assert_eq!(inner.kind, SpanKind::Oracle);
+        assert_eq!(inner.depth, 1);
+        assert_eq!(inner.delta_calls, 5);
+        assert_eq!(inner.bytes, 64);
+        assert_eq!(inner.attrs, vec![("cells_scanned", 4)]);
+        assert_eq!(outer.name, "test.span.outer");
+        assert_eq!(outer.kind, SpanKind::Stage);
+        assert_eq!(outer.depth, 0);
+        // The child cannot start earlier or run longer than its parent.
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(inner.elapsed_ns <= outer.elapsed_ns);
+        // Only the Oracle-kind span enters the accounting sum.
+        let mine_owned: Vec<SpanRecord> = mine.into_iter().cloned().collect();
+        assert_eq!(oracle_total(&mine_owned), 5);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        // Exercises the ring on a local Recorder (no global install), so
+        // concurrent tests cannot perturb the eviction accounting.
+        let rec = Recorder::new(4);
+        for i in 0..10u64 {
+            rec.push(SpanRecord {
+                name: "tick",
+                kind: SpanKind::Stage,
+                depth: 0,
+                start_ns: i,
+                elapsed_ns: 0,
+                delta_calls: i,
+                bytes: 0,
+                attrs: Vec::new(),
+            });
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        let trace = rec.take();
+        let calls: Vec<u64> = trace.iter().map(|r| r.delta_calls).collect();
+        assert_eq!(calls, vec![6, 7, 8, 9]);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn spans_from_other_threads_share_the_ring() {
+        let _g = obs_lock();
+        let rec = configure(TelemetryConfig::on()).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let mut s = oracle_span("test.span.threaded");
+                    s.add_calls(10);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        configure(TelemetryConfig::off());
+        let mine: Vec<SpanRecord> = rec
+            .take()
+            .into_iter()
+            .filter(|r| r.name == "test.span.threaded")
+            .collect();
+        assert_eq!(mine.len(), 4);
+        assert_eq!(oracle_total(&mine), 40);
+    }
+}

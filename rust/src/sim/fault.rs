@@ -25,6 +25,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::Metrics;
+use crate::obs;
 use crate::sim::oracle::{OracleError, SimOracle};
 
 /// Knobs for [`FaultTolerantOracle`]. The defaults suit tests and cheap
@@ -179,6 +180,16 @@ impl<'a> FaultTolerantOracle<'a> {
     ) -> Result<(), OracleError> {
         let mut attempt = 0u32;
         loop {
+            // Re-attempts re-buy the whole sub-batch, so they carry their
+            // own oracle-boundary span; the first attempt is attributed
+            // by the accounting layer above (the batcher's flush span —
+            // see the `obs::span` module docs for the discipline).
+            let retry_span = (attempt > 0).then(|| {
+                let mut s = obs::oracle_span("oracle.retry");
+                s.add_calls(pairs.len() as u64);
+                s.attr("attempt", u64::from(attempt));
+                s
+            });
             let fault = match self.inner.try_eval_batch_into(pairs, out) {
                 Ok(()) => match quarantine(pairs, out) {
                     None => return Ok(()),
@@ -186,6 +197,7 @@ impl<'a> FaultTolerantOracle<'a> {
                 },
                 Err(e) => e,
             };
+            drop(retry_span);
             if !fault.retryable() || attempt >= self.cfg.max_retries {
                 return Err(fault);
             }
@@ -203,6 +215,8 @@ impl<'a> FaultTolerantOracle<'a> {
             }
             let delay = backoff_delay(&self.cfg, chunk_index, attempt);
             if !delay.is_zero() {
+                let mut wait = obs::span("oracle.backoff");
+                wait.attr("attempt", u64::from(attempt));
                 std::thread::sleep(delay);
             }
         }

@@ -1,0 +1,394 @@
+//! Telemetry conformance: the acceptance invariants of the observability
+//! subsystem.
+//!
+//! * **Trace shape** — one indexed top-k query through a sharded fleet
+//!   yields a trace whose root `query` span bounds every child span and
+//!   is itself bounded by the measured wall time, and whose Δ-call
+//!   attribution (`obs::oracle_total`) equals the `CountingOracle`-metered
+//!   total exactly.
+//! * **Exact accounting** — a streaming insert that triggers a drift
+//!   probe and a policy rebuild attributes every metered oracle call to
+//!   exactly one Oracle-kind span (`oracle.flush` / `drift.probe` /
+//!   `oracle.retry`), with and without the fault-tolerant retry layer.
+//! * **Snapshots** — `MetricsSnapshot::capture` stays monotone under
+//!   concurrent writers and `to_json → from_json` round-trips exactly.
+//!
+//! Tests that install the process-global span recorder (or run
+//! instrumented serving code that would write into one) serialize on a
+//! file-local lock; the recorder is always uninstalled before the lock
+//! is released.
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use simmat::coordinator::{
+    Method, Metrics, Query, RebuildPolicy, Response, ServiceConfig, ShardedService, StreamConfig,
+    TransportKind,
+};
+use simmat::index::IvfConfig;
+use simmat::obs::{self, MetricsSnapshot, SpanKind, TelemetryConfig};
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::{CountingOracle, FaultMode, FlakyOracle, PrefixOracle, RetryConfig};
+use simmat::util::rng::Rng;
+
+/// Serializes every test that installs the global recorder or drives
+/// instrumented serving paths while one could be installed.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// One indexed top-k query through a 3-shard fleet: the trace covers the
+/// query wall time, stage spans nest under the root, and the Δ-call
+/// attribution equals the `CountingOracle`-metered total (zero here —
+/// indexed top-k serves from the factored store, and the accounting must
+/// say so exactly rather than merely omit the spend).
+#[test]
+fn sharded_topk_trace_covers_wall_time_and_matches_metered_calls() {
+    let _g = obs_lock();
+    let n = 40;
+    let mut rng = Rng::new(5);
+    let o = NearPsdOracle::new(n, 6, 0.3, &mut rng);
+    let counter = CountingOracle::new(&o);
+    let cfg = ServiceConfig::new(Method::SmsNystrom, 10)
+        .batch(32)
+        .index(IvfConfig::default());
+    let fleet =
+        ShardedService::build(&counter, &cfg, 3, TransportKind::Direct, &mut Rng::new(7)).unwrap();
+    let build_calls = counter.calls();
+
+    let rec = obs::configure(TelemetryConfig::on()).unwrap();
+    let wall = Instant::now();
+    let got = fleet.query(&Query::TopK(3, 5)).unwrap();
+    let wall_ns = wall.elapsed().as_nanos() as u64;
+    obs::configure(TelemetryConfig::off());
+    let trace = rec.take();
+
+    match got {
+        Response::Ranked(r) => assert_eq!(r.len(), 5),
+        other => panic!("unexpected response {other:?}"),
+    }
+
+    // Exactly one root: the fleet's own `query` span, closed last.
+    let roots: Vec<_> = trace.iter().filter(|r| r.name == "query").collect();
+    assert_eq!(roots.len(), 1, "trace: {trace:?}");
+    let root = roots[0];
+    assert_eq!(root.depth, 0);
+    assert_eq!(root.kind, SpanKind::Stage);
+    assert_eq!(trace.last().unwrap().name, "query", "root must close last");
+
+    // The stages of the scatter-gather plan are all present, and each
+    // shard's index scan reports its cell counters.
+    for stage in ["shard.scatter", "shard.merge", "ivf.scan"] {
+        assert!(trace.iter().any(|r| r.name == stage), "missing {stage}");
+    }
+    let scans: Vec<_> = trace.iter().filter(|r| r.name == "ivf.scan").collect();
+    assert_eq!(scans.len(), 3, "one scan per shard: {scans:?}");
+    for scan in &scans {
+        let scanned = scan.attrs.iter().find(|(k, _)| *k == "cells_scanned");
+        assert!(scanned.is_some(), "scan span lost its counters: {scan:?}");
+    }
+
+    // Timing closure: the root is bounded by the measured wall time and
+    // every other span's window nests inside the root's.
+    assert!(root.elapsed_ns <= wall_ns, "root {root:?} vs wall {wall_ns}");
+    // start_ns and elapsed_ns truncate to whole nanoseconds
+    // independently, so reconstructed endpoints can disagree by a few
+    // ns; 1µs of slack keeps the nesting check meaningful without
+    // flaking on rounding.
+    let root_end = root.start_ns + root.elapsed_ns + 1_000;
+    for r in trace.iter().filter(|r| r.name != "query") {
+        assert!(r.depth >= 1, "non-root span at depth 0: {r:?}");
+        assert!(r.start_ns >= root.start_ns, "{r:?} starts before root");
+        assert!(r.start_ns + r.elapsed_ns <= root_end, "{r:?} outlives root");
+    }
+    // The sequential depth-1 stages sum to no more than the root.
+    let stage_sum: u64 = trace
+        .iter()
+        .filter(|r| r.depth == 1)
+        .map(|r| r.elapsed_ns)
+        .sum();
+    assert!(stage_sum <= root.elapsed_ns);
+
+    // Δ-attribution is exact: the trace accounts for precisely what the
+    // metered oracle saw during the query — nothing.
+    assert_eq!(obs::oracle_total(&trace), counter.calls() - build_calls);
+    assert_eq!(counter.calls(), build_calls);
+}
+
+/// A streaming insert that fires the drift probe and a policy rebuild:
+/// every oracle call the external counter meters is attributed to
+/// exactly one Oracle-kind span, so the trace's accounting sum equals
+/// the metered total with no slack in either direction.
+#[test]
+fn insert_attribution_spans_sum_to_the_metered_oracle_total() {
+    let _g = obs_lock();
+    let mut rng = Rng::new(42);
+    let full = NearPsdOracle::new(60, 8, 0.4, &mut rng);
+    let prefix = PrefixOracle::new(&full, 48);
+    let cfg = StreamConfig {
+        probe_pairs: 24,
+        epoch: 4,
+        policy: RebuildPolicy {
+            drift_threshold: 0.0,
+            min_inserts: 4,
+        },
+    };
+    let svc = ServiceConfig::new(Method::SmsNystrom, 10)
+        .batch(16)
+        .stream(cfg)
+        .build(&prefix, &mut rng)
+        .unwrap();
+
+    let counter = CountingOracle::new(&full);
+    let rec = obs::configure(TelemetryConfig::on()).unwrap();
+    let ids: Vec<usize> = (48..60).collect();
+    let report = svc.try_insert_batch(&counter, &ids).unwrap();
+    obs::configure(TelemetryConfig::off());
+    let trace = rec.take();
+
+    // The epoch (4) divides the batch (12), so the probe ran; the zero
+    // drift threshold then forces the rebuild — the trace exercises all
+    // three oracle boundaries of the insert path.
+    assert!(report.drift.is_some(), "probe must have run: {report:?}");
+    assert!(report.rebuilt, "rebuild must have fired: {report:?}");
+    for stage in ["insert", "rebuild", "drift.probe", "oracle.flush"] {
+        assert!(trace.iter().any(|r| r.name == stage), "missing {stage}");
+    }
+    // Only sanctioned oracle boundaries carry the Oracle kind.
+    for r in trace.iter().filter(|r| r.kind == SpanKind::Oracle) {
+        assert!(
+            matches!(r.name, "oracle.flush" | "drift.probe" | "oracle.retry" | "rerank.exact"),
+            "unsanctioned oracle-kind span: {r:?}"
+        );
+    }
+    // The exact-accounting pin: spans sum to the metered total.
+    assert_eq!(obs::oracle_total(&trace), counter.calls());
+    assert!(counter.calls() > 0);
+
+    // The stage-level `insert` span carries the landmark-gather spend as
+    // an informational counter without entering the accounting sum.
+    let ispan = trace.iter().find(|r| r.name == "insert").unwrap();
+    assert_eq!(ispan.kind, SpanKind::Stage);
+    assert_eq!(ispan.delta_calls, report.oracle_calls);
+}
+
+/// Same exactness through the fault-tolerant layer: transient faults
+/// force re-buys, the re-buys ride `oracle.retry` spans, and requested
+/// (`oracle.flush`) plus re-bought (`oracle.retry`) still equals the
+/// metered total — retries are Δ-calls, never free and never double
+/// counted.
+#[test]
+fn retried_insert_attribution_stays_exact_under_faults() {
+    let _g = obs_lock();
+    let mut rng = Rng::new(43);
+    let full = NearPsdOracle::new(60, 8, 0.4, &mut rng);
+    let prefix = PrefixOracle::new(&full, 50);
+    let retry = RetryConfig::default();
+    let retry = RetryConfig {
+        max_retries: retry.retry_chunk as u32 * 2,
+        ..retry
+    };
+    let svc = ServiceConfig::new(Method::SmsNystrom, 10)
+        .batch(16)
+        .stream(StreamConfig {
+            probe_pairs: 16,
+            epoch: usize::MAX, // no probe: isolate the gather's accounting
+            policy: RebuildPolicy::default(),
+        })
+        .retry(retry)
+        .build(&prefix, &mut rng)
+        .unwrap();
+
+    // ~20% transient faults, each pair healing after two failures.
+    let flaky = FlakyOracle::new(&full, FaultMode::Transient { rate: 0.2 }, 11, 2);
+    let counter = CountingOracle::new(&flaky);
+    let rec = obs::configure(TelemetryConfig::on()).unwrap();
+    let ids: Vec<usize> = (50..60).collect();
+    svc.try_insert_batch(&counter, &ids).unwrap();
+    obs::configure(TelemetryConfig::off());
+    let trace = rec.take();
+
+    let retried: u64 = trace
+        .iter()
+        .filter(|r| r.name == "oracle.retry")
+        .map(|r| r.delta_calls)
+        .sum();
+    assert!(retried > 0, "fault injection produced no retries: {trace:?}");
+    assert_eq!(obs::oracle_total(&trace), counter.calls());
+    // Requested-only accounting (the flush spans) meters strictly less
+    // than the metered total — the difference is exactly the re-buys.
+    let requested: u64 = trace
+        .iter()
+        .filter(|r| r.name == "oracle.flush")
+        .map(|r| r.delta_calls)
+        .sum();
+    assert_eq!(requested + retried, counter.calls());
+}
+
+/// The exact re-rank stage is an oracle boundary: its span's Δ count
+/// equals both the external meter and the `rerank_calls` counter delta.
+#[test]
+fn rerank_span_matches_the_metered_rerank_delta() {
+    let _g = obs_lock();
+    let mut rng = Rng::new(9);
+    let o = NearPsdOracle::new(50, 6, 0.3, &mut rng);
+    let svc = ServiceConfig::new(Method::SmsNystrom, 10)
+        .batch(32)
+        .index(IvfConfig::default())
+        .build(&o, &mut rng)
+        .unwrap();
+    svc.set_rerank(8);
+
+    let counter = CountingOracle::new(&o);
+    let before = svc.metrics.rerank_calls.load(Relaxed);
+    let rec = obs::configure(TelemetryConfig::on()).unwrap();
+    let lists = svc.topk_rerank(&counter, &[3, 17], 4).unwrap();
+    obs::configure(TelemetryConfig::off());
+    let trace = rec.take();
+
+    assert_eq!(lists.len(), 2);
+    let span = trace
+        .iter()
+        .find(|r| r.name == "rerank.exact")
+        .unwrap_or_else(|| panic!("no rerank span in {trace:?}"));
+    assert_eq!(span.kind, SpanKind::Oracle);
+    assert!(span.delta_calls > 0);
+    assert_eq!(span.delta_calls, counter.calls());
+    assert_eq!(
+        span.delta_calls,
+        svc.metrics.rerank_calls.load(Relaxed) - before
+    );
+    assert_eq!(obs::oracle_total(&trace), counter.calls());
+}
+
+/// Snapshots under fire: four writer threads hammer every counter while
+/// the reader captures in a loop. Captures must be monotone
+/// field-by-field and `delta()` windows exact (never negative, summing
+/// back to the later capture).
+#[test]
+fn snapshots_stay_monotone_under_concurrent_writers() {
+    // Span-free: Metrics writers never touch the global recorder, so
+    // this test needs no lock and runs concurrently with the others.
+    let m = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (0..4)
+        .map(|t| {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut spins = 0u64;
+                while !stop.load(Relaxed) && spins < 200_000 {
+                    m.record_batch(3, 16);
+                    m.record_query();
+                    m.record_topk(1, 4, 2);
+                    m.record_inserts(1, 5);
+                    m.record_rerank(2);
+                    m.record_shard_calls(1);
+                    m.record_latency(Duration::from_micros((t as u64 + 1) * 37 % 700));
+                    spins += 1;
+                }
+            })
+        })
+        .collect();
+
+    let mut prev = MetricsSnapshot::capture(&m);
+    for _ in 0..300 {
+        let cur = MetricsSnapshot::capture(&m);
+        let d = cur.delta(&prev);
+        for (((name, v), (pname, pv)), (dname, dv)) in
+            cur.counters.iter().zip(&prev.counters).zip(&d.counters)
+        {
+            assert_eq!(name, pname);
+            assert_eq!(name, dname);
+            assert!(v >= pv, "{name} went backwards: {pv} -> {v}");
+            assert_eq!(*dv, v - pv, "{name}: lossy delta");
+        }
+        assert!(cur.latency_count >= prev.latency_count);
+        assert!(cur.latency_sum_us >= prev.latency_sum_us);
+        assert_eq!(d.latency_count, cur.latency_count - prev.latency_count);
+        for (db, (cb, pb)) in d
+            .latency_buckets
+            .iter()
+            .zip(cur.latency_buckets.iter().zip(&prev.latency_buckets))
+        {
+            assert_eq!(*db, cb - pb, "lossy histogram delta");
+        }
+        prev = cur;
+    }
+    stop.store(true, Relaxed);
+    for h in writers {
+        h.join().unwrap();
+    }
+}
+
+/// A served scrape round-trips: the Prometheus text names every counter
+/// and the JSON twin parses back to the exact snapshot; `Query::Telemetry`
+/// reports the store's shape through the ordinary query path.
+#[test]
+fn service_scrapes_round_trip_every_counter() {
+    let _g = obs_lock();
+    let mut rng = Rng::new(21);
+    let o = NearPsdOracle::new(30, 6, 0.3, &mut rng);
+    let svc = ServiceConfig::new(Method::SmsNystrom, 8)
+        .batch(32)
+        .index(IvfConfig::default())
+        .build(&o, &mut rng)
+        .unwrap();
+    match svc.query(&Query::TopK(3, 5)).unwrap() {
+        Response::Ranked(r) => assert_eq!(r.len(), 5),
+        other => panic!("unexpected response {other:?}"),
+    }
+    svc.query(&Query::Row(4)).unwrap();
+
+    // Telemetry flows through the ordinary query path.
+    match svc.query(&Query::Telemetry).unwrap() {
+        Response::Telemetry(h) => {
+            assert_eq!(h.n, 30);
+            assert!(h.cells > 0);
+            assert_eq!(h.epoch, 0);
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+
+    // JSON twin round-trips the captured snapshot exactly.
+    let snap = MetricsSnapshot::capture(&svc.metrics);
+    let back = obs::from_json(&obs::to_json(&snap)).unwrap();
+    assert_eq!(back, snap);
+
+    // The service scrape names every counter plus the serving gauges.
+    let text = svc.scrape();
+    for (name, _) in &snap.counters {
+        assert!(text.contains(&format!("simmat_{name}")), "missing {name}");
+    }
+    assert!(text.contains("simmat_docs 30"));
+    assert!(text.contains("simmat_epoch 0"));
+    assert!(text.contains("simmat_index_cells"));
+    assert!(text.contains("simmat_latency_us_bucket{le=\"+Inf\"}"));
+
+    let js = svc.scrape_json();
+    assert!(js.contains("\"docs\": 30"));
+    assert!(js.contains("\"metrics\""));
+
+    // The fleet-level scrape aggregates per-shard health over the wire.
+    let cfg = ServiceConfig::new(Method::SmsNystrom, 8)
+        .batch(32)
+        .index(IvfConfig::default());
+    let fleet =
+        ShardedService::build(&o, &cfg, 2, TransportKind::Channel, &mut Rng::new(3)).unwrap();
+    match fleet.query(&Query::Telemetry).unwrap() {
+        Response::Telemetry(h) => {
+            assert_eq!(h.n, 30);
+            assert!(h.cells > 0);
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+    let text = fleet.scrape();
+    assert!(text.contains("simmat_shard_up{shard=\"0\"} 1"));
+    assert!(text.contains("simmat_shard_up{shard=\"1\"} 1"));
+    assert!(text.contains("simmat_oracle_calls"));
+}

@@ -60,6 +60,7 @@ TRACKED = [
     ("BENCH_streaming.json", "drift_overhead_ratio", "lower"),
     ("BENCH_fault.json", "overhead_1pct", "lower"),
     ("BENCH_shard.json", "merge_overhead_ratio", "lower"),
+    ("BENCH_obs.json", "telemetry_overhead_ratio", "lower"),
 ]
 
 FREEZE_FIRST = "baseline is provisional — freeze first"

@@ -35,6 +35,7 @@ GOOD = {
     "BENCH_streaming.json": {"drift_overhead_ratio": 0.3},
     "BENCH_fault.json": {"overhead_1pct": 1.3},
     "BENCH_shard.json": {"merge_overhead_ratio": 2.5},
+    "BENCH_obs.json": {"telemetry_overhead_ratio": 1.01},
 }
 
 
