@@ -13,7 +13,7 @@ use simmat::coordinator::{
     BatchService, BatchingOracle, Method, Metrics, Query, RebuildPolicy, Response, ServiceConfig,
     ShardedService, StreamConfig, TransportKind,
 };
-use simmat::index::{scan_batch, topk_batch, IvfConfig, IvfIndex};
+use simmat::index::{scan_batch, topk_batch, IvfConfig, IvfIndex, QuantScan};
 use simmat::linalg::kernel;
 use simmat::linalg::{eigh, Mat};
 use simmat::obs::{self, TelemetryConfig};
@@ -603,6 +603,78 @@ fn main() {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_kernels.json"));
     std::fs::write(&kernels_path, kernels_json).unwrap();
     rep.line(format!("- wrote {}", kernels_path.display()));
+
+    // ---- Quantized (int8 ADC) scan trajectory ----
+    // The third scan tier on the same clustered 10k corpus and queries
+    // as the top-k/kernels sections: f64 vs f32 vs int8 q/s, the
+    // bytes-per-embedding table, and the candidate-skip rate inside
+    // scanned cells — persisted as BENCH_quant.json. Assertions pin the
+    // acceptance bars: rankings bit-identical to the exact scan, ≥ 1.3x
+    // over the f32 fast scan, int8 footprint ≤ 0.3x the f64 blocks.
+    rep.line("");
+    rep.line("## Quantized scan");
+    let quant_cfg = IvfConfig {
+        quantized: true,
+        ..IvfConfig::default()
+    };
+    let tk_idx_quant = IvfIndex::build(tk_store.clone(), quant_cfg).unwrap();
+    let (quant_results, quant_stats) = topk_batch(&tk_idx_quant, &tk_queries, tk_k);
+    assert_eq!(
+        quant_results, ivf_results,
+        "int8 ADC scan must return bit-identical rankings"
+    );
+    let quant_bench = bench(Duration::from_millis(600), 1, || {
+        std::hint::black_box(topk_batch(&tk_idx_quant, &tk_queries, tk_k));
+    });
+    let tk_quant_qps = tk_queries.len() as f64 / (quant_bench.mean_ns / 1e9);
+    let int8_over_f32 = tk_quant_qps / tk_fast_qps;
+    let int8_over_f64 = tk_quant_qps / tk_ivf_qps;
+    let dim = tk_idx_quant.embedding().dim();
+    let bytes_f64 = 8 * dim;
+    let bytes_f32 = 4 * dim + 8; // f32 codes + per-member f64 norm
+    let bytes_i8 = QuantScan::bytes_per_row(dim);
+    let bytes_ratio = bytes_i8 as f64 / bytes_f64 as f64;
+    let quant_skip_rate = quant_stats.candidates_skipped as f64
+        / (quant_stats.candidates_skipped + quant_stats.scored).max(1) as f64;
+    rep.line(format!(
+        "- IVF top-{tk_k} int8 ADC: {tk_quant_qps:.0} q/s vs f32 {tk_fast_qps:.0} \
+         ({int8_over_f32:.2}x) vs f64 {tk_ivf_qps:.0} ({int8_over_f64:.2}x), \
+         rankings bit-identical"
+    ));
+    rep.line(format!(
+        "- bytes/embedding (d={dim}): f64 {bytes_f64}, f32 {bytes_f32}, int8 {bytes_i8} \
+         ({bytes_ratio:.3}x of f64); {:.1}% candidates skipped in scanned cells",
+        100.0 * quant_skip_rate,
+    ));
+    assert!(
+        int8_over_f32 >= 1.3,
+        "int8 ADC scan must clear 1.3x the f32 fast scan: got {int8_over_f32:.2}x"
+    );
+    assert!(
+        bytes_ratio <= 0.3,
+        "int8 footprint must stay <= 0.3x the f64 blocks: got {bytes_ratio:.3}x"
+    );
+    let quant_json = format!(
+        "{{\n  \"bench\": \"quant\",\n  \"corpus\": {{\"n\": {tk_n}, \"rank\": {tk_r}, \
+         \"dim\": {dim}}},\n  \"queries\": {nq},\n  \"k\": {tk_k},\n  \
+         \"f64_queries_per_sec\": {tk_ivf_qps:.1},\n  \
+         \"f32_queries_per_sec\": {tk_fast_qps:.1},\n  \
+         \"int8_queries_per_sec\": {tk_quant_qps:.1},\n  \
+         \"int8_over_f32_speedup\": {int8_over_f32:.3},\n  \
+         \"int8_over_f64_speedup\": {int8_over_f64:.3},\n  \
+         \"bytes_per_embedding\": {{\"f64\": {bytes_f64}, \"f32\": {bytes_f32}, \
+         \"int8\": {bytes_i8}}},\n  \"bytes_ratio_int8_vs_f64\": {bytes_ratio:.4},\n  \
+         \"candidates_skipped\": {skipped},\n  \"candidate_skip_rate\": \
+         {quant_skip_rate:.4},\n  \"bit_identical\": true\n}}\n",
+        nq = tk_queries.len(),
+        skipped = quant_stats.candidates_skipped,
+    );
+    let quant_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_quant.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_quant.json"));
+    std::fs::write(&quant_path, quant_json).unwrap();
+    rep.line(format!("- wrote {}", quant_path.display()));
 
     // ---- Fault tolerance: retry overhead measured in Δ-calls ----
     // The cost model counts similarity evaluations, so retry overhead is

@@ -294,8 +294,10 @@ impl Snapshot {
                     let mut span = obs::span("ivf.scan");
                     let (ranked, st) = idx.top_k_stats(i, k.min(n - 1));
                     span.attr("queries", 1);
+                    span.attr("tier", idx.scan_tier());
                     span.attr("cells_scanned", st.cells_scanned);
                     span.attr("cells_pruned", st.cells_pruned);
+                    span.attr("candidates_skipped", st.candidates_skipped);
                     if let Some(m) = metrics {
                         m.record_topk(1, st.cells_scanned, st.cells_pruned);
                     }
@@ -305,8 +307,10 @@ impl Snapshot {
                     let mut span = obs::span("ivf.scan");
                     let (lists, st) = topk_batch(idx, ids, (*k).min(n - 1));
                     span.attr("queries", ids.len() as u64);
+                    span.attr("tier", idx.scan_tier());
                     span.attr("cells_scanned", st.cells_scanned);
                     span.attr("cells_pruned", st.cells_pruned);
+                    span.attr("candidates_skipped", st.candidates_skipped);
                     if let Some(m) = metrics {
                         m.record_topk(ids.len() as u64, st.cells_scanned, st.cells_pruned);
                     }
@@ -350,8 +354,10 @@ impl Snapshot {
                         lists.push(list);
                     }
                     span.attr("queries", vqs.len() as u64);
+                    span.attr("tier", idx.scan_tier());
                     span.attr("cells_scanned", agg.cells_scanned);
                     span.attr("cells_pruned", agg.cells_pruned);
+                    span.attr("candidates_skipped", agg.candidates_skipped);
                     if let Some(m) = metrics {
                         m.record_topk(vqs.len() as u64, agg.cells_scanned, agg.cells_pruned);
                     }

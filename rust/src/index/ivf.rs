@@ -32,6 +32,7 @@ use super::batch as index;
 use crate::tasks::cluster::kmeans;
 use crate::util::rng::Rng;
 
+use super::quant::{self, QuantScan};
 use super::signed::SignedEmbedding;
 
 /// Index knobs. `Default` is the serving configuration the coordinator
@@ -59,6 +60,17 @@ pub struct IvfConfig {
     /// `tests/kernel_equivalence.rs`). Only affects the pruned path;
     /// `prune: false` stays the exact full scan.
     pub fast_scan: bool,
+    /// Opt-in int8 ADC scan (the third scan tier; takes precedence over
+    /// `fast_scan` when both are set): member embeddings quantized per
+    /// cell to symmetric int8 codes (`index::quant`, ~8x smaller than
+    /// f64), candidate ranking via exact-i32 integer dots with every
+    /// Cauchy–Schwarz bound widened by the measured reconstruction
+    /// radii, surviving candidates re-scored with the exact f64 factor
+    /// dot — returned top-k stays bit-identical to the exact scan
+    /// (pinned by `tests/quantized_scan.rs`). Scale overflow falls back
+    /// to exact scoring like the f32 path's `is_finite` fallback. Only
+    /// affects the pruned path.
+    pub quantized: bool,
 }
 
 impl Default for IvfConfig {
@@ -70,6 +82,7 @@ impl Default for IvfConfig {
             rerank: 0,
             seed: 0x1DE,
             fast_scan: false,
+            quantized: false,
         }
     }
 }
@@ -81,6 +94,10 @@ pub struct SearchStats {
     pub cells_pruned: u64,
     /// Exact factored scores computed (the work pruning saves).
     pub scored: u64,
+    /// Candidates skipped by a cheap-tier bound (f32 or int8) inside a
+    /// scanned cell — the work the fast/quantized tiers save on top of
+    /// cell pruning. Always 0 on the exact f64 tier.
+    pub candidates_skipped: u64,
 }
 
 impl SearchStats {
@@ -88,6 +105,7 @@ impl SearchStats {
         self.cells_scanned += other.cells_scanned;
         self.cells_pruned += other.cells_pruned;
         self.scored += other.scored;
+        self.candidates_skipped += other.candidates_skipped;
     }
 }
 
@@ -129,7 +147,10 @@ impl FastScan {
             let mut ns = Vec::with_capacity(cell.members.len());
             for &j in &cell.members {
                 let row = emb.db_row(j as usize);
-                block.extend(to_f32(row));
+                // Cast straight into the packed block — no per-row
+                // staging Vec (pinned allocation-free-equivalent by the
+                // worker-matrix test in tests/quantized_scan.rs).
+                block.extend(row.iter().map(|&x| x as f32));
                 ns.push(dot(row, row).sqrt());
             }
             blocks.push(block);
@@ -148,7 +169,7 @@ impl FastScan {
     /// streaming extension path; must mirror `Cell::members` order).
     fn push(&mut self, cell: usize, row: &[f64]) {
         debug_assert_eq!(row.len(), self.dim);
-        self.blocks[cell].extend(to_f32(row));
+        self.blocks[cell].extend(row.iter().map(|&x| x as f32));
         self.norms[cell].push(dot(row, row).sqrt());
     }
 }
@@ -178,6 +199,22 @@ fn to_f32(v: &[f64]) -> Vec<f32> {
     v.iter().map(|&x| x as f32).collect()
 }
 
+/// (Re)quantize the int8 mirror over the current cells — the build and
+/// post-rebuild path of the `IvfConfig::quantized` tier (rebuilds go
+/// through `build_with_embedding`, so re-quantization rides the same
+/// snapshot swap the store does).
+fn build_quant(cells: &[Cell], emb: &SignedEmbedding) -> QuantScan {
+    let mut qs = QuantScan::with_cells(emb.dim(), cells.len());
+    for (c, cell) in cells.iter().enumerate() {
+        qs.set_cell(
+            c,
+            cell.members.iter().map(|&j| emb.db_row(j as usize)),
+            &cell.centroid,
+        );
+    }
+    qs
+}
+
 /// The immutable retrieval index over one store snapshot. The
 /// coordinator holds it in an `Arc` next to the store and swaps both on
 /// rebuild; readers always answer from the snapshot the index was built
@@ -187,6 +224,7 @@ pub struct IvfIndex {
     emb: SignedEmbedding,
     cells: Vec<Cell>,
     fast: Option<FastScan>,
+    quant: Option<QuantScan>,
     cfg: IvfConfig,
 }
 
@@ -324,11 +362,17 @@ impl IvfIndex {
         } else {
             None
         };
+        let quant = if cfg.quantized {
+            Some(build_quant(&cells, &emb))
+        } else {
+            None
+        };
         Ok(IvfIndex {
             store,
             emb,
             cells,
             fast,
+            quant,
             cfg,
         })
     }
@@ -343,6 +387,19 @@ impl IvfIndex {
 
     pub fn config(&self) -> IvfConfig {
         self.cfg
+    }
+
+    /// The candidate-ranking tier the pruned scan runs: 0 = exact f64,
+    /// 1 = f32 fast scan, 2 = int8 ADC scan (the `ivf.scan` span's
+    /// `tier` attribute).
+    pub fn scan_tier(&self) -> u64 {
+        if self.quant.is_some() {
+            2
+        } else if self.fast.is_some() {
+            1
+        } else {
+            0
+        }
     }
 
     /// The store snapshot this index answers from.
@@ -402,9 +459,16 @@ impl IvfIndex {
             return (Vec::new(), stats);
         }
         let unorm = dot(u, u).sqrt();
-        // The f32 fast scan keeps an f32 query view and an extra margin
-        // coefficient; both are None on the default f64 path.
-        let uq = self.fast.as_ref().map(|_| to_f32(u));
+        // Tier state for the cheap candidate rankings: the int8 tier
+        // quantizes the query view once per scan (self-scaled codes +
+        // measured radius), the f32 tier keeps an f32 query view and a
+        // margin coefficient. All None on the default f64 path; the
+        // int8 tier wins when both are configured.
+        let qq = self.quant.as_ref().map(|_| quant::quantize_row(u));
+        let uq = match &qq {
+            None => self.fast.as_ref().map(|_| to_f32(u)),
+            Some(_) => None,
+        };
         let coeff = self.fast.as_ref().map(|fs| f32_margin_coeff(fs.dim));
         // Per-cell caps, scanned best-first. The relative slack (scaled
         // to the magnitudes in play, not the possibly-cancelling cap
@@ -427,8 +491,23 @@ impl IvfIndex {
                 // f32 arithmetic: an overflow to −inf would turn the cap
                 // into −inf and prune a live cell. Non-finite f32
                 // centers fall back to the exact f64 dot.
-                let center = match (&self.fast, &uq) {
-                    (Some(fs), Some(uq)) => {
+                let center = match (&self.quant, &qq, &self.fast, &uq) {
+                    // int8 cap center: the exact-integer centroid dot
+                    // rescaled, widened by the measured-radius bound.
+                    // A non-finite approx (scale overflow: inf·0 = NaN)
+                    // falls back to the exact f64 dot, mirroring the
+                    // f32 overflow fallback below.
+                    (Some(qs), Some(qq), _, _) => {
+                        let cent = &qs.centroids[c];
+                        let acc = kernel::dot_i8(&qq.codes, &cent.codes) as f64;
+                        let ci = qq.scale as f64 * cent.scale as f64 * acc;
+                        if ci.is_finite() {
+                            ci + quant::i8_dot_margin(unorm, qq.radius, cnorm, cent.radius, ci)
+                        } else {
+                            dot(u, &cell.centroid)
+                        }
+                    }
+                    (_, _, Some(fs), Some(uq)) => {
                         let c32 = dot_f32(uq, &fs.centroids[c]) as f64;
                         if c32.is_finite() {
                             c32 + coeff.unwrap() * unorm * cnorm
@@ -457,8 +536,46 @@ impl IvfIndex {
                 break;
             }
             stats.cells_scanned += 1;
-            match (&self.fast, &uq) {
-                (Some(fs), Some(uq)) => {
+            match (&self.quant, &qq, &self.fast, &uq) {
+                (Some(qs), Some(qq), _, _) => {
+                    // int8 ADC candidate ranking: one exact-i32 integer
+                    // dot per member against the packed code block,
+                    // rescaled once; a candidate pays the exact f64 dot
+                    // only when its radius-widened upper bound (the
+                    // measured-quantization margin + the same
+                    // canonicalization slack and gap the f32 tier
+                    // carries) could still reach the running threshold.
+                    // Skips are strict-below (ties always re-scored)
+                    // and require a *finite* approx — scale overflow
+                    // produces NaN/±inf, which is re-scored exactly,
+                    // the same escape hatch as the f32 tier.
+                    let su = qq.scale as f64;
+                    let sv = qs.scales[c] as f64;
+                    let extra = 1e-6 * self.emb.gap + F32_MARGIN_ABS_FLOOR + self.emb.gap;
+                    let block = &qs.blocks[c];
+                    let ns = &qs.norms[c];
+                    let radii = &qs.radii[c];
+                    for (t, &j) in self.cells[c].members.iter().enumerate() {
+                        let j = j as usize;
+                        if Some(j) == exclude {
+                            continue;
+                        }
+                        let acc =
+                            kernel::dot_i8(&qq.codes, &block[t * qs.dim..(t + 1) * qs.dim]) as f64;
+                        let approx = su * sv * acc;
+                        let upper = approx
+                            + quant::i8_dot_margin(unorm, qq.radius, ns[t], radii[t], approx)
+                            + 1e-6 * unorm * ns[t]
+                            + extra;
+                        if approx.is_finite() && upper.total_cmp(&best.threshold()).is_lt() {
+                            stats.candidates_skipped += 1;
+                            continue;
+                        }
+                        stats.scored += 1;
+                        best.push(dot(li, self.store.right_t.row(j)), j);
+                    }
+                }
+                (_, _, Some(fs), Some(uq)) => {
                     // f32 candidate ranking: score every member in f32
                     // from the packed cell block, and pay the exact f64
                     // dot only for candidates whose f32 upper bound
@@ -483,6 +600,7 @@ impl IvfIndex {
                         let s32 = dot_f32(uq, &block[t * fs.dim..(t + 1) * fs.dim]) as f64;
                         let upper = s32 + cm * ns[t] + extra;
                         if s32.is_finite() && upper.total_cmp(&best.threshold()).is_lt() {
+                            stats.candidates_skipped += 1;
                             continue;
                         }
                         stats.scored += 1;
@@ -551,6 +669,7 @@ impl IvfIndex {
         emb.extend_gap(gap_left, gap_right);
         let mut cells = self.cells.clone();
         let mut fast = self.fast.clone();
+        let mut quant = self.quant.clone();
         let new_rows = emb.embed_rows(left, right);
         let base = self.store.n();
         for m in 0..new_rows.rows {
@@ -570,6 +689,12 @@ impl IvfIndex {
             if let Some(fs) = fast.as_mut() {
                 fs.push(bc, v);
             }
+            // And into the int8 blocks: the cell scale stays frozen
+            // until the drift rebuild re-quantizes, so an outsized row
+            // clamps — its measured radius keeps pruning lossless.
+            if let Some(qs) = quant.as_mut() {
+                qs.push(bc, v);
+            }
         }
         emb.push_rows(&new_rows);
         IvfIndex {
@@ -577,6 +702,7 @@ impl IvfIndex {
             emb,
             cells,
             fast,
+            quant,
             cfg: self.cfg,
         }
     }
@@ -765,6 +891,103 @@ mod tests {
         for i in [0, 17, 41, 47] {
             assert_eq!(idx2.top_k(i, 6), grown.top_k(i, 6), "query {i}");
         }
+    }
+
+    #[test]
+    fn quantized_scan_is_bit_identical_to_exact_scan() {
+        check("ivf-quant-scan-exact", 8, |rng| {
+            let n = 30 + rng.below(60);
+            // Same store mix as the f32 property: symmetric, clustered,
+            // and genuinely asymmetric (gap > 0 exercises the margin).
+            let store = match rng.below(3) {
+                0 => Arc::new(Factored::from_z(Mat::gaussian(n, 5, rng))),
+                1 => clustered_store(n, 5, rng),
+                _ => Arc::new(Factored::new(
+                    Mat::gaussian(n, 4, rng),
+                    Mat::gaussian(n, 4, rng),
+                )),
+            };
+            let cfg = IvfConfig {
+                quantized: true,
+                ..IvfConfig::default()
+            };
+            let idx = IvfIndex::build(store.clone(), cfg).unwrap();
+            assert_eq!(idx.scan_tier(), 2);
+            for i in (0..n).step_by(5) {
+                assert_eq!(idx.top_k(i, 10), store.top_k(i, 10), "query {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn quantized_scan_survives_scale_overflow() {
+        // Factor entries ~1e25 put the embedding magnitudes far past
+        // what int8 grids resolve usefully; the measured radii widen
+        // every bound until nothing is skipped wrongly, and any
+        // non-finite rescale falls back to exact scoring — results
+        // stay bit-identical to the exact scan.
+        let mut rng = Rng::new(29);
+        let store = Arc::new(Factored::from_z(Mat::gaussian(40, 4, &mut rng).scale(1e25)));
+        let cfg = IvfConfig {
+            quantized: true,
+            ..IvfConfig::default()
+        };
+        let idx = IvfIndex::build(store.clone(), cfg).unwrap();
+        for i in (0..40).step_by(3) {
+            assert_eq!(idx.top_k(i, 8), store.top_k(i, 8), "query {i}");
+        }
+    }
+
+    #[test]
+    fn quantized_extension_stays_bit_identical() {
+        let mut rng = Rng::new(19);
+        let z = Mat::gaussian(40, 4, &mut rng);
+        let store = Arc::new(Factored::from_z(z.clone()));
+        let cfg = IvfConfig {
+            quantized: true,
+            ..IvfConfig::default()
+        };
+        let idx = IvfIndex::build(store, cfg).unwrap();
+        // Outsized inserts (4x the build scale) clamp against the
+        // frozen cell scales — the measured radii must keep the pruned
+        // results exact.
+        let extra = Mat::gaussian(8, 4, &mut rng).scale(4.0);
+        let mut grown = z.clone();
+        for m in 0..8 {
+            grown.push_row(extra.row(m));
+        }
+        let grown = Arc::new(Factored::from_z(grown));
+        let idx2 = idx.extended(grown.clone(), &extra, &extra);
+        for i in [0, 17, 41, 47] {
+            assert_eq!(idx2.top_k(i, 6), grown.top_k(i, 6), "query {i}");
+        }
+    }
+
+    #[test]
+    fn quantized_wins_tier_selection_and_skips_candidates_on_clusters() {
+        let mut rng = Rng::new(31);
+        let store = clustered_store(400, 6, &mut rng);
+        let cfg = IvfConfig {
+            quantized: true,
+            fast_scan: true,
+            ..IvfConfig::default()
+        };
+        let idx = IvfIndex::build(store.clone(), cfg).unwrap();
+        assert_eq!(idx.scan_tier(), 2, "int8 takes precedence over f32");
+        let mut total = SearchStats::default();
+        for i in (0..400).step_by(13) {
+            let (got, stats) = idx.top_k_stats(i, 5);
+            assert_eq!(got, store.top_k(i, 5), "query {i}");
+            total.merge(&stats);
+        }
+        assert!(
+            total.candidates_skipped > 0,
+            "the int8 bound must skip exact scoring inside scanned cells: {total:?}"
+        );
+        assert!(
+            total.scored > 0,
+            "survivors must still be re-scored exactly: {total:?}"
+        );
     }
 
     #[test]

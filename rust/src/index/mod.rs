@@ -12,6 +12,10 @@
 //!   caps, best-bound-first pruned scan against a running kth-score
 //!   threshold. `prune: false` degrades to the exact full scan,
 //!   bit-identical to `Factored::top_k`.
+//! * [`quant`] — per-cell int8 symmetric scalar quantizer behind the
+//!   `IvfConfig::quantized` scan tier: packed code blocks, measured
+//!   per-row reconstruction radii, and the `i8_dot_margin` error bound
+//!   that keeps ADC pruning lossless (survivors re-score in exact f64).
 //! * [`batch`] — multi-query throughput path sharded on the pool
 //!   workers, the naive `matmul_nt` scan baseline, and budgeted exact
 //!   re-ranking through the `SimOracle`.
@@ -23,8 +27,12 @@
 
 pub mod batch;
 pub mod ivf;
+pub mod quant;
 pub mod signed;
 
 pub use batch::{rerank_exact, scan_batch, select_top_k, topk_batch};
 pub use ivf::{f32_margin_coeff, IvfConfig, IvfIndex, SearchStats, F32_MARGIN_ABS_FLOOR};
+pub use quant::{
+    decode, encode_into, i8_dot_margin, quantize_row, row_scale, QuantRow, QuantScan, I8_LEVELS,
+};
 pub use signed::SignedEmbedding;

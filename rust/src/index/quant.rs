@@ -1,0 +1,378 @@
+//! Per-cell symmetric int8 scalar quantization for the signed embedding
+//! — the storage layer of the IVF index's third scan tier
+//! (`IvfConfig::quantized`, the ADC scan in `index::ivf`).
+//!
+//! Each IVF cell quantizes its member rows against one shared scale
+//! `s = max|x| / 127` (max-abs over every member at build time, stored
+//! as f32): `q_t = clamp(round(x_t / s), ±127)`, decoded as `x̂_t =
+//! s·q_t`. Codes are packed contiguously per cell in the same
+//! row-major block layout the f32 `FastScan` mirror uses, so the ADC
+//! scan streams one `d`-byte row per candidate instead of `8d` (f64)
+//! or `4d` (f32) bytes.
+//!
+//! # The int8 dot error bound
+//!
+//! The scan never trusts a quantized score — it only *skips* work when
+//! a provable upper bound falls below the running threshold. With
+//! `û = decode(encode(u))`, `v̂ = decode(encode(v))`, and the measured
+//! reconstruction radii `r_u = ‖u − û‖`, `r_v = ‖v − v̂‖`:
+//!
+//! ```text
+//! ⟨u,v⟩ − ⟨û,v̂⟩ = ⟨u − û, v⟩ + ⟨û, v − v̂⟩
+//! |⟨u,v⟩ − ⟨û,v̂⟩| ≤ r_u·‖v‖ + (‖u‖ + r_u)·r_v
+//! ```
+//!
+//! and `⟨û,v̂⟩ = (s_u·s_v)·Σ q_u[t]·q_v[t]` **exactly** in real
+//! arithmetic: the i32 accumulation of [`dot_i8`] is exact (products
+//! ≤ 127², no rounding ever), so the only floating-point error in the
+//! evaluated `approx = fl(s_u·s_v·acc)` is the two f64 multiplies —
+//! covered by the `4·ε_f64·|approx|` term of [`i8_dot_margin`]. The
+//! quantization term carries a 1e-9 relative safety factor that
+//! dominates the f64 rounding of the radii, the norms, and the margin
+//! expression itself by four orders of magnitude. Unlike the f32
+//! fast-scan margin, this bound is *measured* (the radii are computed,
+//! not modelled), so the a-priori per-coordinate worst case `s·√d/2`
+//! is only a cap, never the bound the scan uses.
+//!
+//! Non-finite escapes mirror the f32 path's `is_finite` fallback: a
+//! scale that overflows f32 (member magnitudes ≳ 4e40) or flushes to
+//! zero encodes as all-zero codes with `radius = ‖x‖` — decode is
+//! well-defined, the bound stays true, and an overflowing `approx`
+//! (inf·0 = NaN) simply fails the scan's `is_finite` test and is
+//! re-scored exactly.
+//!
+//! Fuzzed across moderate, overflow, and flush-to-zero regimes by
+//! `tests/i8_margin.rs` and mirrored numerically by
+//! `tools/validate_i8_margin.py` (same encoder, same three regimes).
+//!
+//! [`dot_i8`]: crate::linalg::kernel::dot_i8
+
+use crate::linalg::dot;
+
+/// Quantization levels per sign: codes live in [−127, 127] (−128 is
+/// never produced, keeping the grid symmetric so `−x` encodes as `−q`).
+pub const I8_LEVELS: f64 = 127.0;
+
+/// One self-contained quantized vector: the per-query / per-centroid
+/// form (cell member rows share a cell-wide scale instead and live in
+/// [`QuantScan`] blocks).
+#[derive(Clone, Debug)]
+pub struct QuantRow {
+    /// Symmetric int8 codes, one per coordinate.
+    pub codes: Vec<i8>,
+    /// The scale the codes were encoded against (f32 — the stored form).
+    pub scale: f32,
+    /// Measured reconstruction radius `‖x − decode(codes, scale)‖`.
+    pub radius: f64,
+}
+
+/// The stored (f32) scale for a vector set with max-abs `maxabs`. A
+/// max-abs past f32 range overflows to `inf`; [`encode_into`] treats
+/// any non-finite or zero scale as the all-zero encoding.
+pub fn row_scale(maxabs: f64) -> f32 {
+    (maxabs / I8_LEVELS) as f32
+}
+
+/// Append the int8 encoding of `x` against `scale` to `out` and return
+/// the measured reconstruction radius `‖x − x̂‖` (f64). Codes clamp to
+/// ±127, so a row whose magnitude exceeds the (frozen, cell-wide)
+/// scale — the streaming-insert case — still encodes validly: the
+/// clamping error is part of the measured radius, and the scan's
+/// radius-widened bound stays true. A zero or non-finite scale encodes
+/// as all zeros with `radius = ‖x‖`.
+pub fn encode_into(x: &[f64], scale: f32, out: &mut Vec<i8>) -> f64 {
+    let s = scale as f64;
+    if !(s.is_finite() && s > 0.0) {
+        out.resize(out.len() + x.len(), 0);
+        return dot(x, x).sqrt();
+    }
+    let mut err2 = 0.0f64;
+    for &v in x {
+        let q = (v / s).round().clamp(-I8_LEVELS, I8_LEVELS);
+        out.push(q as i8);
+        let e = v - s * q;
+        err2 += e * e;
+    }
+    err2.sqrt()
+}
+
+/// Quantize one vector against its own max-abs scale (queries and cell
+/// centroids; member rows share the cell scale via [`QuantScan`]).
+pub fn quantize_row(x: &[f64]) -> QuantRow {
+    let maxabs = x.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    let scale = row_scale(maxabs);
+    let mut codes = Vec::with_capacity(x.len());
+    let radius = encode_into(x, scale, &mut codes);
+    QuantRow { codes, scale, radius }
+}
+
+/// Reconstruct `x̂_t = s·q_t` (tests, diagnostics — the scan never
+/// decodes; it dots codes directly and rescales once).
+pub fn decode(codes: &[i8], scale: f32) -> Vec<f64> {
+    let s = scale as f64;
+    codes.iter().map(|&q| s * q as f64).collect()
+}
+
+/// The int8 ADC error bound (module docs): with `approx =
+/// fl(s_u·s_v·dot_i8(q_u, q_v))` finite,
+///
+/// ```text
+/// |⟨u,v⟩ − approx| ≤ i8_dot_margin(‖u‖, r_u, ‖v‖, r_v, approx)
+/// ```
+///
+/// Quantization term `r_u·‖v‖ + (‖u‖+r_u)·r_v` with a 1e-9 relative
+/// safety factor (dominates every f64 rounding in the radii, norms,
+/// and this expression), plus `4·ε_f64·|approx|` for the two exact-ulp
+/// multiplies in `approx` itself (the integer accumulation is exact).
+/// Carries no claim for non-finite `approx` — the scan re-scores those
+/// exactly, like the f32 path's overflow fallback.
+pub fn i8_dot_margin(unorm: f64, uradius: f64, vnorm: f64, vradius: f64, approx: f64) -> f64 {
+    (uradius * vnorm + (unorm + uradius) * vradius) * (1.0 + 1e-9)
+        + 4.0 * f64::EPSILON * approx.abs()
+}
+
+/// The int8 mirror of the embedding geometry, one block per IVF cell in
+/// the same packed layout as the f32 `FastScan` mirror: member codes
+/// row-major and contiguous, plus the per-cell scale, per-member
+/// measured radii and exact f64 norms (the margin inputs), and the
+/// self-scaled quantized centroid for the cell-cap center.
+#[derive(Clone, Debug)]
+pub struct QuantScan {
+    pub(crate) dim: usize,
+    /// Per cell: member codes, packed row-major (`d` bytes per row).
+    pub(crate) blocks: Vec<Vec<i8>>,
+    /// Per cell: the shared data scale (max-abs over members / 127).
+    pub(crate) scales: Vec<f32>,
+    /// Per cell: per-member measured reconstruction radius `‖v − v̂‖`.
+    pub(crate) radii: Vec<Vec<f64>>,
+    /// Per cell: per-member exact f64 norms `‖v‖` (margin scale).
+    pub(crate) norms: Vec<Vec<f64>>,
+    /// Per cell: quantized centroid for the int8 cap inner product.
+    pub(crate) centroids: Vec<QuantRow>,
+}
+
+impl QuantScan {
+    /// Empty shells for `cells` cells of dimension `dim`; fill each with
+    /// [`Self::set_cell`].
+    pub(crate) fn with_cells(dim: usize, cells: usize) -> QuantScan {
+        QuantScan {
+            dim,
+            blocks: vec![Vec::new(); cells],
+            scales: vec![0.0; cells],
+            radii: vec![Vec::new(); cells],
+            norms: vec![Vec::new(); cells],
+            centroids: (0..cells)
+                .map(|_| QuantRow { codes: Vec::new(), scale: 0.0, radius: 0.0 })
+                .collect(),
+        }
+    }
+
+    /// (Re)quantize one cell: first pass takes max-abs over the member
+    /// rows (the cell scale), second pass encodes each row straight
+    /// into the packed block (no per-row staging allocation) and
+    /// records its measured radius and exact norm. An empty cell is
+    /// well-defined: scale 0, empty block — streaming pushes then
+    /// encode against the zero scale (all-zero codes, `radius = ‖x‖`),
+    /// staying provably scannable until the next rebuild re-scales.
+    pub(crate) fn set_cell<'a>(
+        &mut self,
+        c: usize,
+        rows: impl Iterator<Item = &'a [f64]> + Clone,
+        centroid: &[f64],
+    ) {
+        let mut maxabs = 0.0f64;
+        let mut count = 0usize;
+        for row in rows.clone() {
+            debug_assert_eq!(row.len(), self.dim, "cell row dimension mismatch");
+            for &v in row {
+                maxabs = maxabs.max(v.abs());
+            }
+            count += 1;
+        }
+        let scale = row_scale(maxabs);
+        self.scales[c] = scale;
+        let block = &mut self.blocks[c];
+        block.clear();
+        block.reserve(count * self.dim);
+        let rs = &mut self.radii[c];
+        let ns = &mut self.norms[c];
+        rs.clear();
+        ns.clear();
+        for row in rows {
+            rs.push(encode_into(row, scale, block));
+            ns.push(dot(row, row).sqrt());
+        }
+        self.centroids[c] = quantize_row(centroid);
+    }
+
+    /// Append one freshly-embedded database row to `cell`'s block (the
+    /// streaming extension path; must mirror `Cell::members` order).
+    /// The cell scale is frozen until the next rebuild, so an outsized
+    /// row clamps — its larger measured radius keeps the bound true.
+    pub(crate) fn push(&mut self, cell: usize, row: &[f64]) {
+        debug_assert_eq!(row.len(), self.dim);
+        let r = encode_into(row, self.scales[cell], &mut self.blocks[cell]);
+        self.radii[cell].push(r);
+        self.norms[cell].push(dot(row, row).sqrt());
+    }
+
+    /// Bytes of scan-time state per embedding row in this mirror: `d`
+    /// code bytes plus the 16 bytes of per-member radius + norm (the
+    /// per-cell scale and centroid amortize to nothing). The memory
+    /// headline `BENCH_quant.json` reports against f64's `8d`.
+    pub fn bytes_per_row(dim: usize) -> usize {
+        dim + 2 * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn scaled_vec(d: usize, lo: f64, hi: f64, rng: &mut Rng) -> Vec<f64> {
+        (0..d)
+            .map(|_| {
+                let mag = 10f64.powf(lo + (hi - lo) * rng.f64());
+                if rng.f64() < 0.5 {
+                    -mag
+                } else {
+                    mag
+                }
+            })
+            .collect()
+    }
+
+    fn norm(v: &[f64]) -> f64 {
+        dot(v, v).sqrt()
+    }
+
+    #[test]
+    fn round_trip_error_is_bounded_by_the_stored_radius() {
+        check("quant-round-trip", 64, |rng| {
+            let d = 1 + rng.below(96);
+            let x = scaled_vec(d, -4.0, 4.0, rng);
+            let q = quantize_row(&x);
+            let xhat = decode(&q.codes, q.scale);
+            let err = x
+                .iter()
+                .zip(&xhat)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            // The stored radius IS the measured error; equality modulo
+            // the fp noise of recomputing it here.
+            assert!(
+                err <= q.radius * (1.0 + 1e-12) + 1e-300,
+                "decode error {err:e} exceeds stored radius {:e} (d={d})",
+                q.radius
+            );
+            // And the radius respects the a-priori per-coordinate cap
+            // s·√d/2 whenever nothing clamps (self-scaled rows never do).
+            let cap = q.scale as f64 * (d as f64).sqrt() / 2.0;
+            assert!(
+                q.radius <= cap * (1.0 + 1e-9),
+                "radius {:e} exceeds the s·√d/2 cap {cap:e} (d={d})",
+                q.radius
+            );
+        });
+    }
+
+    #[test]
+    fn radius_cap_is_monotone_in_cell_max_abs() {
+        // Growing the cell's max-abs coarsens the grid: the guaranteed
+        // radius cap s·√d/2 grows monotonically, and a fixed row's
+        // measured radius always respects the cap of whatever (larger)
+        // cell scale it is encoded against.
+        check("quant-radius-monotone", 32, |rng| {
+            let d = 1 + rng.below(48);
+            let x = scaled_vec(d, -2.0, 2.0, rng);
+            let own = x.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            let mut prev_cap = 0.0;
+            for grow in [1.0, 2.0, 8.0, 64.0] {
+                let scale = row_scale(own * grow);
+                let cap = scale as f64 * (d as f64).sqrt() / 2.0;
+                assert!(cap >= prev_cap, "cap must be monotone in cell max-abs");
+                prev_cap = cap;
+                let mut codes = Vec::new();
+                let r = encode_into(&x, scale, &mut codes);
+                assert!(
+                    r <= cap * (1.0 + 1e-9),
+                    "radius {r:e} vs cap {cap:e} at grow={grow}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn clamped_rows_keep_the_measured_radius_true() {
+        // A streaming insert 10x beyond the frozen cell scale clamps at
+        // ±127; the measured radius must still bound the decode error
+        // exactly (this is what keeps post-insert pruning lossless).
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let d = 1 + rng.below(32);
+            let base = scaled_vec(d, -1.0, 1.0, &mut rng);
+            let frozen = row_scale(base.iter().fold(0.0f64, |m, &v| m.max(v.abs())));
+            let outsized: Vec<f64> = base.iter().map(|&v| 10.0 * v).collect();
+            let mut codes = Vec::new();
+            let r = encode_into(&outsized, frozen, &mut codes);
+            assert!(codes.iter().any(|&q| q == 127 || q == -127), "must clamp");
+            let xhat = decode(&codes, frozen);
+            let err = outsized
+                .iter()
+                .zip(&xhat)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            assert!(err <= r * (1.0 + 1e-12), "clamped radius must stay true");
+        }
+    }
+
+    #[test]
+    fn empty_single_row_and_degenerate_scale_cells_are_well_defined() {
+        let mut qs = QuantScan::with_cells(3, 4);
+        // Empty cell: zero scale, empty block.
+        qs.set_cell(0, std::iter::empty(), &[0.0, 0.0, 0.0]);
+        assert_eq!(qs.scales[0], 0.0);
+        assert!(qs.blocks[0].is_empty() && qs.radii[0].is_empty());
+        // A push into the empty cell encodes against the zero scale:
+        // all-zero codes, radius = ‖x‖ — still provably scannable.
+        qs.push(0, &[3.0, -4.0, 0.0]);
+        assert_eq!(qs.blocks[0], vec![0, 0, 0]);
+        assert!((qs.radii[0][0] - 5.0).abs() < 1e-12);
+        // Single-row cell: self-scaled, the max coordinate hits ±127.
+        qs.set_cell(1, std::iter::once([1.0, -2.0, 0.5].as_slice()), &[0.5, -1.0, 0.25]);
+        assert_eq!(qs.blocks[1].len(), 3);
+        assert_eq!(qs.blocks[1][1], -127);
+        assert_eq!(qs.radii[1].len(), 1);
+        // All-zero single row: scale 0 without being empty.
+        qs.set_cell(2, std::iter::once([0.0, 0.0, 0.0].as_slice()), &[0.0; 3]);
+        assert_eq!(qs.scales[2], 0.0);
+        assert_eq!(qs.blocks[2], vec![0, 0, 0]);
+        assert_eq!(qs.radii[2][0], 0.0);
+        // Magnitudes past f32 range: scale overflows to inf, encode
+        // falls back to all-zero codes with radius = ‖x‖.
+        let huge = [1e300f64, -1e300, 1e300];
+        qs.set_cell(3, std::iter::once(huge.as_slice()), &[0.0; 3]);
+        assert!(!qs.scales[3].is_finite());
+        assert_eq!(qs.blocks[3], vec![0, 0, 0]);
+        assert!((qs.radii[3][0] - norm(&huge)).abs() < 1e285);
+    }
+
+    #[test]
+    fn set_cell_reuse_requantizes_cleanly() {
+        // Rebuild path: a second set_cell on the same slot must fully
+        // replace the old encoding (no stale codes/radii).
+        let mut qs = QuantScan::with_cells(2, 1);
+        let a = [[1.0, 2.0], [3.0, -1.0]];
+        qs.set_cell(0, a.iter().map(|r| r.as_slice()), &[2.0, 0.5]);
+        assert_eq!(qs.blocks[0].len(), 4);
+        let b = [[0.5, 0.25]];
+        qs.set_cell(0, b.iter().map(|r| r.as_slice()), &[0.5, 0.25]);
+        assert_eq!(qs.blocks[0].len(), 2);
+        assert_eq!(qs.radii[0].len(), 1);
+        assert_eq!(qs.norms[0].len(), 1);
+    }
+}

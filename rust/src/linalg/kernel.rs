@@ -390,7 +390,43 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Unrolled int8 dot with i32 accumulation (4 phase accumulators,
+/// 4-wide): the scoring primitive of the IVF int8 ADC scan
+/// (`index::ivf` behind `IvfConfig::quantized`, codes from
+/// `index::quant`). Integer arithmetic is associative, so any
+/// vectorization width gives the *exact* sum — there is no rounding to
+/// margin away; the quantization error lives entirely in the codes and
+/// is bounded by `index::quant::i8_dot_margin`. Accumulation is exact
+/// as long as `len·127² < 2³¹` (len ≲ 133 000 — far past any embedding
+/// dimension here; debug-asserted).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(
+        a.len() <= i32::MAX as usize / (127 * 127),
+        "dot_i8 i32 accumulator would overflow at len {}",
+        a.len()
+    );
+    let mut p = [0i32; 4];
+    for (xs, ys) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        for l in 0..4 {
+            p[l] += xs[l] as i32 * ys[l] as i32;
+        }
+    }
+    let mut s = (p[0] + p[1]) + (p[2] + p[3]);
+    for i in 4 * (a.len() / 4)..a.len() {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
 // ---- naive references (the bit-identity anchors) ----
+
+/// Scalar reference for [`dot_i8`] — must match exactly (integer
+/// arithmetic: equality, not a tolerance).
+pub fn dot_i8_naive(a: &[i8], b: &[i8]) -> i32 {
+    a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
+}
 
 /// Textbook i-j-k triple loop, single accumulator per element, k
 /// ascending. The packed NN kernel must match this bit-for-bit.
@@ -480,6 +516,25 @@ mod tests {
                 assert_eq!(out[j], dot(&r, b.row(j)), "({n},{k}) col {j}");
             }
         }
+    }
+
+    #[test]
+    fn dot_i8_matches_naive_exactly() {
+        let mut rng = Rng::new(7);
+        for len in [0, 1, 2, 3, 4, 5, 7, 8, 9, 31, 32, 33, 127, 256] {
+            let mk = |rng: &mut Rng| -> Vec<i8> {
+                (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+            };
+            let (a, b) = (mk(&mut rng), mk(&mut rng));
+            assert_eq!(dot_i8(&a, &b), dot_i8_naive(&a, &b), "len {len}");
+        }
+        // Worst-case magnitudes: every product is ±127², the
+        // accumulator must carry them exactly.
+        let hi = vec![127i8; 1000];
+        let lo = vec![-127i8; 1000];
+        assert_eq!(dot_i8(&hi, &hi), 1000 * 127 * 127);
+        assert_eq!(dot_i8(&hi, &lo), -1000 * 127 * 127);
+        assert_eq!(dot_i8_naive(&hi, &lo), -1000 * 127 * 127);
     }
 
     #[test]

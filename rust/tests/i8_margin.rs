@@ -1,0 +1,164 @@
+//! Property suite for the int8 ADC error bound: with `û = s_u·q_u` and
+//! `v̂ = s_v·q_v` the quantized reconstructions and `r = ‖x − x̂‖` the
+//! *measured* per-row radii, the pruning bound
+//! `|⟨u,v⟩ − s_u·s_v·dot_i8(q_u,q_v)| ≤ i8_dot_margin(‖u‖, r_u, ‖v‖,
+//! r_v, approx)` must hold for every *finite* rescaled dot, across
+//! randomized dimensions and scales — including the two regimes where
+//! the grid itself gives up and the scan's escape hatches (`is_finite`
+//! fallback on f32 scale overflow, the ‖x‖ radius on flushed-to-zero
+//! scales) are all that stands between "prune" and "drop a true
+//! neighbour".
+//!
+//! Numerically mirrored by `tools/validate_i8_margin.py` (numpy twin of
+//! the quantizer and `dot_i8`, same three regimes, denser sweeps).
+
+use simmat::index::{i8_dot_margin, quantize_row, row_scale};
+use simmat::linalg::dot;
+use simmat::linalg::kernel::dot_i8;
+use simmat::util::rng::Rng;
+
+const DIMS: [usize; 19] = [
+    1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 256,
+];
+
+fn norm(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+/// One random vector with per-element magnitude 10^U[lo,hi], mixed signs.
+fn scaled_vec(d: usize, lo: f64, hi: f64, rng: &mut Rng) -> Vec<f64> {
+    (0..d)
+        .map(|_| {
+            let mag = 10f64.powf(lo + (hi - lo) * rng.f64());
+            if rng.f64() < 0.5 {
+                -mag
+            } else {
+                mag
+            }
+        })
+        .collect()
+}
+
+/// Check the bound on one independently-quantized pair (the asymmetric
+/// scan's worst case: query and candidate carry different scales);
+/// returns whether the rescaled dot was finite (non-finite dots carry
+/// no bound — the scan re-scores them exactly).
+fn check_pair(u: &[f64], v: &[f64]) -> bool {
+    let qu = quantize_row(u);
+    let qv = quantize_row(v);
+    let acc = dot_i8(&qu.codes, &qv.codes) as f64;
+    let approx = qu.scale as f64 * qv.scale as f64 * acc;
+    if !approx.is_finite() {
+        return false;
+    }
+    let exact = dot(u, v);
+    let bound = i8_dot_margin(norm(u), qu.radius, norm(v), qv.radius, approx);
+    let err = (exact - approx).abs();
+    assert!(
+        err <= bound,
+        "margin violated at d={}: err {err:e} > bound {bound:e}",
+        u.len()
+    );
+    true
+}
+
+#[test]
+fn margin_holds_on_moderate_scales() {
+    let mut rng = Rng::new(41);
+    for trial in 0..4000 {
+        let d = DIMS[trial % DIMS.len()];
+        let u = scaled_vec(d, -6.0, 6.0, &mut rng);
+        let v = scaled_vec(d, -6.0, 6.0, &mut rng);
+        assert!(check_pair(&u, &v), "no scale overflow expected at 1e-6..1e6");
+    }
+}
+
+#[test]
+fn measured_radii_are_load_bearing() {
+    // Drop the radius terms and keep only the floating-point slack: the
+    // remaining bound must demonstrably fail — int8 quantization error
+    // is real, and if the fp term alone ever covered it, the radii (and
+    // the whole measured-radius machinery) could be silently dropped.
+    let mut rng = Rng::new(42);
+    let mut radius_needed = 0usize;
+    for trial in 0..2000 {
+        let d = DIMS[trial % DIMS.len()];
+        let u = scaled_vec(d, -2.0, 2.0, &mut rng);
+        let v = scaled_vec(d, -2.0, 2.0, &mut rng);
+        let (qu, qv) = (quantize_row(&u), quantize_row(&v));
+        let approx = qu.scale as f64 * qv.scale as f64 * dot_i8(&qu.codes, &qv.codes) as f64;
+        let fp_only = i8_dot_margin(norm(&u), 0.0, norm(&v), 0.0, approx);
+        if (dot(&u, &v) - approx).abs() > fp_only {
+            radius_needed += 1;
+        }
+    }
+    assert!(
+        radius_needed > 0,
+        "the fp-slack-only bound should fail without the radius terms"
+    );
+}
+
+#[test]
+fn margin_holds_whenever_finite_and_scale_overflow_falls_out() {
+    // 1e38..1e45 magnitudes: max-abs/127 runs past f32::MAX, the stored
+    // scale goes non-finite, and the rescaled dot is NaN/±inf — exactly
+    // the shape the scan's `is_finite` fallback catches. The bound must
+    // hold for every finite dot, and overflow must actually occur, or
+    // the fallback would be dead code and this regime untested.
+    let mut rng = Rng::new(43);
+    let mut overflowed = 0usize;
+    for trial in 0..3000 {
+        let d = DIMS[trial % DIMS.len()];
+        let u = scaled_vec(d, 38.0, 45.0, &mut rng);
+        let v = scaled_vec(d, 38.0, 45.0, &mut rng);
+        if !check_pair(&u, &v) {
+            overflowed += 1;
+        }
+    }
+    assert!(overflowed > 0, "1e38..1e45 inputs must overflow the f32 scale");
+}
+
+#[test]
+fn flushed_to_zero_scales_keep_the_norm_radius_bound() {
+    // 1e-44..1e-15 magnitudes: max-abs/127 underflows f32 to a
+    // subnormal or to exact zero. A zero (or non-finite) scale encodes
+    // all-zero codes with radius = ‖x‖, so approx = 0 stays finite and
+    // the bound degrades gracefully to ~3·‖u‖·‖v‖ ≥ |⟨u,v⟩| — never
+    // false, never a wrong skip. Assert the degenerate-scale path is
+    // actually exercised, not just survived.
+    let mut rng = Rng::new(44);
+    let mut flushed = 0usize;
+    for trial in 0..3000 {
+        let d = DIMS[trial % DIMS.len()];
+        let u = scaled_vec(d, -44.0, -15.0, &mut rng);
+        let v = scaled_vec(d, -44.0, -15.0, &mut rng);
+        assert!(check_pair(&u, &v), "no overflow possible under 1e-15");
+        let maxabs = u.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        if row_scale(maxabs) == 0.0 {
+            flushed += 1;
+        }
+    }
+    assert!(
+        flushed > 0,
+        "1e-44-scale rows must flush the f32 scale to zero"
+    );
+}
+
+#[test]
+fn margin_is_monotone_and_collapses_to_fp_slack_at_zero_radius() {
+    // Sanity on the bound expression itself: wider measured radii can
+    // only widen it, and with both radii zero (exactly representable
+    // rows) only the floating-point evaluation slack remains — tiny
+    // relative to the dot it guards.
+    let mut prev = 0.0;
+    for r in [0.0, 1e-6, 1e-3, 0.1, 1.0, 10.0] {
+        let b = i8_dot_margin(3.0, r, 5.0, r, 12.5);
+        assert!(b >= prev, "margin must be monotone in the radii");
+        prev = b;
+    }
+    let at_zero = i8_dot_margin(3.0, 0.0, 5.0, 0.0, 12.5);
+    assert!(
+        at_zero > 0.0 && at_zero < 1e-12,
+        "zero-radius margin should be pure fp slack, got {at_zero:e}"
+    );
+}

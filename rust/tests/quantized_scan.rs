@@ -1,0 +1,256 @@
+//! Int8 ADC scan conformance: the quantized IVF tier must be
+//! *numerically invisible*. Every skip is justified by the radius-widened
+//! int8 dot bound and every survivor is re-scored in exact f64, so the
+//! returned top-k is **bit-identical** to the exact scan — across all
+//! seven `Method`s, k, worker counts {1, 4} (and CI's `SIMMAT_THREADS`
+//! matrix), shard counts {1, 3} (`SIMMAT_SHARDS`), streaming inserts,
+//! and the drift-triggered rebuild re-quantization. The saturation
+//! regime (1e25-scale embeddings) must fall back to exact scoring, and
+//! the clustered workload must actually skip candidate work (the tier
+//! exists to prune, not just to match).
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use simmat::approx::Factored;
+use simmat::coordinator::{
+    Method, Query, RebuildPolicy, Response, ServiceConfig, ShardedService, StreamConfig,
+    TransportKind,
+};
+use simmat::index::{topk_batch, IvfConfig, IvfIndex};
+use simmat::linalg::Mat;
+use simmat::sim::synthetic::NearPsdOracle;
+use simmat::sim::PrefixOracle;
+use simmat::util::pool;
+use simmat::util::rng::Rng;
+
+const SEED: u64 = 41;
+
+fn quantized() -> IvfConfig {
+    IvfConfig {
+        quantized: true,
+        ..IvfConfig::default()
+    }
+}
+
+/// Shard counts under test: the acceptance pair {1, 3} by default, or
+/// the comma-separated list in `SIMMAT_SHARDS` (the CI matrix leg).
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("SIMMAT_SHARDS") {
+        Ok(v) => v
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| t.trim().parse().expect("SIMMAT_SHARDS must list shard counts"))
+            .collect(),
+        Err(_) => vec![1, 3],
+    }
+}
+
+/// Four well-separated gaussian blobs — the workload where the int8
+/// bound has enough slack over the inter-blob score gaps to prune.
+fn clustered_store(n: usize, d: usize, rng: &mut Rng) -> Arc<Factored> {
+    let centers = Mat::gaussian(4, d, rng).scale(3.0);
+    let z = Mat::from_fn(n, d, |i, t| centers.get(i % 4, t) + 0.2 * rng.normal());
+    Arc::new(Factored::from_z(z))
+}
+
+/// The headline invariant: quantized top-k equals the exact scan
+/// bit-for-bit for every one of the seven methods, several k, and both
+/// CI worker counts — single queries and the pool-sharded batch path.
+#[test]
+fn quantized_topk_bit_identical_for_all_methods_k_and_workers() {
+    let mut rng = Rng::new(SEED);
+    let o = NearPsdOracle::new(120, 8, 0.4, &mut rng);
+    for method in Method::ALL {
+        let f = Arc::new(method.try_build(&o, 24, &mut rng).unwrap());
+        let idx = IvfIndex::build(f.clone(), quantized()).unwrap();
+        assert_eq!(idx.scan_tier(), 2, "{}: int8 tier must engage", method.name());
+        let ids: Vec<usize> = (0..120).step_by(7).collect();
+        for workers in [1usize, 4] {
+            for k in [1usize, 5, 17] {
+                let (lists, _) = pool::with_workers(workers, || topk_batch(&idx, &ids, k));
+                for (t, &i) in ids.iter().enumerate() {
+                    assert_eq!(
+                        lists[t],
+                        f.top_k(i, k),
+                        "{} query {i} k {k} workers {workers}",
+                        method.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Saturation regime: factor entries ~1e25 leave the int8 grid useless
+/// (codes clamp, radii explode, products overflow any narrow type).
+/// The measured radii widen every bound until no skip fires wrongly and
+/// non-finite approximations re-route through exact f64 — results stay
+/// bit-identical.
+#[test]
+fn saturated_embeddings_fall_back_to_exact_scoring() {
+    let mut rng = Rng::new(9);
+    let store = Arc::new(Factored::from_z(Mat::gaussian(60, 5, &mut rng).scale(1e25)));
+    let idx = IvfIndex::build(store.clone(), quantized()).unwrap();
+    for i in (0..60).step_by(3) {
+        for k in [1, 8] {
+            assert_eq!(idx.top_k(i, k), store.top_k(i, k), "query {i} k {k}");
+        }
+    }
+}
+
+/// Prune-rate sanity on the clustered workload: the tier must do less
+/// exact work than the full scan (cells pruned by caps, candidates
+/// skipped by the int8 bound inside scanned cells) while still agreeing
+/// with the exact scan on every query.
+#[test]
+fn clustered_workload_skips_candidates_and_stays_exact() {
+    let mut rng = Rng::new(13);
+    let store = clustered_store(600, 6, &mut rng);
+    let idx = IvfIndex::build(store.clone(), quantized()).unwrap();
+    let ids: Vec<usize> = (0..600).step_by(11).collect();
+    let (lists, stats) = topk_batch(&idx, &ids, 10);
+    for (t, &i) in ids.iter().enumerate() {
+        assert_eq!(lists[t], store.top_k(i, 10), "query {i}");
+    }
+    assert!(
+        stats.candidates_skipped > 0,
+        "the int8 bound must skip candidates inside scanned cells: {stats:?}"
+    );
+    assert!(
+        stats.scored < (ids.len() * 599) as u64,
+        "pruning must cut exact scoring work: {stats:?}"
+    );
+}
+
+/// Streaming inserts and the drift-triggered rebuild: the extension path
+/// appends int8 codes against frozen cell scales (outsized rows clamp,
+/// measured radii keep pruning lossless), and the rebuild re-quantizes
+/// from scratch behind the snapshot swap. Both states must answer
+/// bit-identically to the store.
+#[test]
+fn quantized_index_stays_exact_through_inserts_and_rebuild() {
+    let mut rng = Rng::new(21);
+    let full = NearPsdOracle::new(90, 6, 0.3, &mut rng);
+    let n0 = 60;
+    let prefix = PrefixOracle::new(&full, n0);
+    // Probe-free drift policy: the first epoch after any insert rebuilds,
+    // so one stream exercises extension *and* re-quantization.
+    let cfg = StreamConfig {
+        probe_pairs: 24,
+        epoch: 8,
+        policy: RebuildPolicy {
+            drift_threshold: -1.0,
+            min_inserts: 12,
+        },
+    };
+    let svc = ServiceConfig::new(Method::SmsNystrom, 12)
+        .batch(32)
+        .stream(cfg)
+        .build(&prefix, &mut rng)
+        .unwrap();
+    svc.try_enable_index(quantized()).unwrap();
+    let mut id = n0;
+    while id < 90 {
+        let hi = (id + 5).min(90);
+        let ids: Vec<usize> = (id..hi).collect();
+        svc.try_insert_batch(&full, &ids).unwrap();
+        id = hi;
+        // Mid-stream (pre- and post-rebuild alike): index answers must
+        // match the store exactly, including for just-appended rows.
+        let reference = svc.factored();
+        for i in [0, id - 1] {
+            match svc.query(&Query::TopK(i, 6)).unwrap() {
+                Response::Ranked(r) => assert_eq!(r, reference.top_k(i, 6), "query {i} at {id}"),
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+    }
+    assert!(
+        svc.metrics.rebuilds.load(Relaxed) >= 1,
+        "the drift rebuild (and its re-quantization) must fire"
+    );
+    let idx = svc.index().unwrap();
+    assert_eq!(idx.n(), 90, "index must cover the grown corpus");
+    assert_eq!(idx.scan_tier(), 2, "rebuild must preserve the int8 tier");
+    let reference = svc.factored();
+    for i in [0, n0 - 1, n0, 89] {
+        assert_eq!(idx.top_k(i, 10), reference.top_k(i, 10), "query {i}");
+    }
+}
+
+/// Sharded scatter-gather with the quantized tier on every shard: the
+/// fleet must answer top-k queries bit-identically to a single-shard
+/// service over the same build, across shard counts and transports.
+#[test]
+fn sharded_quantized_scan_matches_single_shard_bit_for_bit() {
+    let n = 48;
+    let mut rng = Rng::new(5);
+    let o = NearPsdOracle::new(n, 6, 0.3, &mut rng);
+    let config = || {
+        ServiceConfig::new(Method::SmsNystrom, 10)
+            .batch(32)
+            .index(quantized())
+    };
+    let svc = config().build(&o, &mut Rng::new(SEED)).unwrap();
+    let vq = match svc.query(&Query::Vectors(vec![5])).unwrap() {
+        Response::Vectors(mut v) => v.pop().unwrap(),
+        other => panic!("unexpected response {other:?}"),
+    };
+    let queries = vec![
+        Query::TopK(3, 5),
+        Query::TopK(n - 1, 4 * n), // oversized k clamps identically
+        Query::TopKBatch(vec![0, 9, 17, n - 2], 4),
+        Query::TopKVec(vec![vq], 6),
+    ];
+    for shards in shard_counts() {
+        for kind in [TransportKind::Direct, TransportKind::Channel] {
+            let fleet =
+                ShardedService::build(&o, &config(), shards, kind, &mut Rng::new(SEED)).unwrap();
+            for q in &queries {
+                let want = svc.query(q).unwrap();
+                let got = fleet.query(q).unwrap();
+                match (want, got) {
+                    (
+                        Response::RankedShard { lists: a, .. },
+                        Response::RankedShard { lists: b, .. },
+                    ) => assert_eq!(a, b, "query {q:?} (shards={shards}, {kind:?})"),
+                    (want, got) => {
+                        assert_eq!(want, got, "query {q:?} (shards={shards}, {kind:?})")
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Satellite pin: mirror construction (the f32 *and* int8 blocks are
+/// packed by the same per-cell extend loop) is worker-count invariant —
+/// an index built under any pool width answers identically.
+#[test]
+fn mirror_construction_is_worker_count_invariant() {
+    let mut rng = Rng::new(33);
+    let store = clustered_store(200, 5, &mut rng);
+    for cfg in [
+        IvfConfig {
+            fast_scan: true,
+            ..IvfConfig::default()
+        },
+        quantized(),
+    ] {
+        let serial = pool::with_workers(1, || IvfIndex::build(store.clone(), cfg).unwrap());
+        let parallel = pool::with_workers(4, || IvfIndex::build(store.clone(), cfg).unwrap());
+        let ids: Vec<usize> = (0..200).step_by(9).collect();
+        let (a, sa) = topk_batch(&serial, &ids, 8);
+        let (b, sb) = topk_batch(&parallel, &ids, 8);
+        assert_eq!(a, b, "results must not depend on build-time workers");
+        assert_eq!(
+            (sa.scored, sa.candidates_skipped),
+            (sb.scored, sb.candidates_skipped),
+            "identical mirrors must do identical scan work"
+        );
+        for (t, &i) in ids.iter().enumerate() {
+            assert_eq!(a[t], store.top_k(i, 8), "query {i}");
+        }
+    }
+}

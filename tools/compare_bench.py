@@ -57,6 +57,8 @@ TRACKED = [
     ("BENCH_topk.json", "speedup", "higher"),
     ("BENCH_topk.json", "recall_at_k", "higher"),
     ("BENCH_topk.json", "prune_rate", "higher"),
+    ("BENCH_quant.json", "int8_over_f32_speedup", "higher"),
+    ("BENCH_quant.json", "bytes_ratio_int8_vs_f64", "lower"),
     ("BENCH_streaming.json", "drift_overhead_ratio", "lower"),
     ("BENCH_fault.json", "overhead_1pct", "lower"),
     ("BENCH_shard.json", "merge_overhead_ratio", "lower"),

@@ -32,6 +32,10 @@ GOOD = {
     },
     "BENCH_simeval.json": {"wmd_eval": {"speedup": 3.0}},
     "BENCH_topk.json": {"speedup": 8.0, "recall_at_k": 0.97, "prune_rate": 0.6},
+    "BENCH_quant.json": {
+        "int8_over_f32_speedup": 1.6,
+        "bytes_ratio_int8_vs_f64": 0.19,
+    },
     "BENCH_streaming.json": {"drift_overhead_ratio": 0.3},
     "BENCH_fault.json": {"overhead_1pct": 1.3},
     "BENCH_shard.json": {"merge_overhead_ratio": 2.5},
